@@ -1,0 +1,52 @@
+"""Paper §10 (Figs 16-18): gate-level cost of LUT-based multi-operand adders
+vs Carry-Look-Ahead trees, and the eqn-22 performance advantage."""
+from __future__ import annotations
+
+from repro.core import lut
+
+from benchmarks.common import Row, print_rows, section
+
+
+def run() -> dict:
+    section("Fig 16: gate delay / area vs operand count (M = 4 bits, the "
+            "paper's anchor width)")
+    rows = []
+    for n in (2, 4, 8, 16, 32, 64):
+        c = lut.cla_tree_cost(n, 4)
+        l = lut.lut_tree_cost(n, 4)
+        rows.append({"N": n, "cla_delay": c.delay_gates,
+                     "lut_delay": l.delay_gates,
+                     "cla_area": c.area_gates, "lut_area": l.area_gates,
+                     "lut_faster": l.delay_gates < c.delay_gates})
+    print_rows(rows)
+    assert rows[0]["lut_faster"] is False          # N=2: CLA wins (9 vs 16)
+    assert all(r["lut_faster"] for r in rows if r["N"] >= 16)
+
+    section("Fig 17: delay vs bit width (N = 4 and 16)")
+    rows = []
+    for n in (4, 16):
+        for m in (4, 8, 16, 32):
+            c = lut.cla_tree_cost(n, m)
+            l = lut.lut_tree_cost(n, m)
+            rows.append({"N": n, "M": m, "cla_delay": c.delay_gates,
+                         "lut_delay": l.delay_gates})
+    print_rows(rows)
+
+    section("Fig 18: performance advantage d(CLA)/d(LUT) (eqn 22)")
+    rows = []
+    for n in (2, 4, 8, 16, 32, 64, 256):
+        for m in (4, 8, 16):
+            rows.append({"N": n, "M": m,
+                         "advantage": lut.performance_advantage(n, m)})
+    print_rows(rows)
+    adv = {(r["N"], r["M"]): r["advantage"] for r in rows}
+    # paper: CLA wins at small adders (N=2, narrow words); LUT advantage
+    # grows with N and with word width
+    assert adv[(256, 16)] > adv[(16, 16)] > 1.0 > adv[(2, 4)]
+    print("\nLUT adder overtakes CLA past N=4 and the advantage grows with "
+          "N — the paper's §10 conclusion")
+    return {"rows": len(rows)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""§7 at cluster scale: radix-4 tree reduction vs flat all-reduce.
+
+Analytic stage/byte model for the tree collectives (the paper's latency
+claim: ceil(log4 N) stages instead of N-1 chained adds), the exactness
+window of the int8-compressed reduction, and — when dry-run artifacts are
+present — the actual collective mix of a compiled 256-chip train step.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.accum import max_operands_exact, plan_gradient_reduction
+from repro.dist.collectives import factor_radix4, stage_count
+
+from benchmarks.common import Row, print_rows, section
+
+
+def run() -> dict:
+    section("radix-4 stage plan (the §7 tree lifted to a mesh axis)")
+    rows = []
+    for n in (4, 16, 64, 256, 512, 1024):
+        stages = factor_radix4(n)
+        rows.append({"axis_size": n, "stages": "x".join(map(str, stages)),
+                     "depth": stage_count(n), "flat_depth_2op": n - 1})
+    print_rows(rows)
+
+    section("int8-compressed exact-reduction window (Theorem)")
+    rows = []
+    for acc in (16, 32):
+        rows.append({"acc_bits": acc, "payload": "int8",
+                     "max_exact_replicas": max_operands_exact(acc, 7,
+                                                              signed=True)})
+    print_rows(rows)
+    plan = plan_gradient_reduction(512, payload_bits=8, acc_bits=32)
+    print(f"512-replica plan: spill_bits={plan.spill_bits} (<=32 -> the "
+          f"whole 2-pod reduction is exact in int32)")
+
+    section("compiled collective mix (from dry-run artifacts, if present)")
+    pats = sorted(glob.glob("results/dryrun/*train_4k__single.json"))
+    rows = []
+    for p in pats[:6]:
+        rec = json.load(open(p))
+        for kind, v in rec.get("collectives", {}).items():
+            rows.append({"arch": rec["arch"], "kind": kind,
+                         "count": v["count"],
+                         "operand_GB_per_dev": v["bytes"] / 1e9,
+                         "wire_GB_per_dev": v.get("wire_bytes", 0) / 1e9})
+    if rows:
+        print_rows(rows)
+    else:
+        print("(no dry-run artifacts found — run repro.launch.dryrun first)")
+    return {"rows": len(rows)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Paper Fig 9 + Lemma 3: serial-vs-parallel throughput tilt.
+
+Reproduces the figure's two scenarios (R_A = 12 and 20 at R_T = 17:1) and
+sweeps the tilt boundary; then applies the same criterion to the cluster
+analogue (gradient-accumulation microbatching vs wide data-parallelism).
+"""
+from __future__ import annotations
+
+from repro.core import planner
+
+from benchmarks.common import Row, print_rows, section
+
+
+def run() -> dict:
+    section("Fig 9: throughput after T clocks (speed ratio 17:1)")
+    rows = []
+    for r_area in (12, 20):
+        ser, par = planner.throughput_curves(r_area, 17.0, 170)
+        for t in (17, 85, 170):
+            rows.append({"R_A": r_area, "clocks": t,
+                         "serial_set_ops": ser[t - 1],
+                         "parallel_ops": par[t - 1],
+                         "serial_wins": ser[t - 1] > par[t - 1]})
+    print_rows(rows)
+    # paper's claim: R_A=20 > R_T=17 -> serial set wins; R_A=12 < 17 -> loses
+    assert rows[-1]["serial_wins"] and not rows[2]["serial_wins"]
+
+    section("Lemma 3 boundary sweep (R_T = 17)")
+    rows = []
+    for r_area in (8, 12, 16, 17, 18, 20, 32):
+        s = planner.UnitSpec(area=1.0, clocks_per_op=17.0)
+        p = planner.UnitSpec(area=float(r_area), clocks_per_op=1.0)
+        rows.append({"R_A": r_area, "R_T": 17,
+                     "serial_beats_parallel":
+                         planner.serial_beats_parallel(s, p)})
+    print_rows(rows)
+
+    section("Cluster analogue: microbatch (serial) vs wide-DP (parallel)")
+    rows = []
+    for chips in (64, 256, 512):
+        for ser_clocks in (3.0, 6.0):
+            # a "serial" replica uses 4x fewer chips but takes ser_clocks
+            # per microbatch step; Lemma 3 decides the layout
+            plan = planner.plan_training_execution(
+                global_batch=4096, chips=chips,
+                chips_per_replica_parallel=16, chips_per_replica_serial=4,
+                step_time_parallel=1.0, step_time_serial=ser_clocks)
+            rows.append({"chips": chips, "R_A": 4.0, "R_T": ser_clocks,
+                         "dp_replicas": plan.dp_replicas,
+                         "grad_accum": plan.grad_accum_steps,
+                         "mode": plan.mode})
+    print_rows(rows)
+    return {"rows": len(rows)}
+
+
+if __name__ == "__main__":
+    run()

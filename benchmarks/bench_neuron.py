@@ -1,0 +1,89 @@
+"""Paper §8 (Figs 11-12): neurons built on the multi-operand adder.
+
+* ARN node (eqn 21): y = 4/(N k^2) * sum_i x_i (k - x_i), N = 16 resonator
+  outputs summed by the reconfigured 16-operand adder (integer path).
+* 16-input MLP perceptron: int8 x int8 products accumulated exactly
+  (Theorem-planned width), then activation — compared against the float
+  oracle, and timed over a batch of neurons.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import moa
+from repro.core.accum import bits_for_sum
+from repro.core.carry import carry_budget
+
+from benchmarks.common import Row, print_rows, section, time_fn
+
+
+def arn_node_int(x_q: jnp.ndarray, k_levels: int = 256) -> jnp.ndarray:
+    """ARN node on uint8-quantized inputs: resonator r_i = x_i (k - x_i) is
+    an integer < k^2/4... summed with the reconfigured adder. x_q: (..., 16)."""
+    res = x_q * (k_levels - x_q)                      # (..., 16) resonators
+    # resonator outputs are 16-bit values; 16-operand sum needs 16+4 bits
+    total = moa.reconfigured_add(res.astype(jnp.int32), 16)
+    return 4.0 * total.astype(jnp.float32) / (16 * k_levels ** 2)
+
+
+def arn_node_float(x: jnp.ndarray) -> jnp.ndarray:
+    return 4.0 * jnp.sum(x * (1.0 - x), axis=-1) / 16.0
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+
+    section("ARN node (eqn 21, N=16): integer MOA path vs float oracle")
+    x = rng.uniform(0, 1, size=(4096, 16)).astype(np.float32)
+    x_q = jnp.asarray(np.round(x * 255), jnp.int32)
+    y_int = arn_node_int(x_q)
+    y_ref = arn_node_float(jnp.asarray(x))
+    err = float(jnp.max(jnp.abs(y_int - y_ref)))
+    print(f"max |int-path - float| = {err:.4f} (8-bit quantization bound "
+          f"~{2 * 2 / 255:.4f})")
+    assert err < 0.02
+    budget = carry_budget(16, 16, 2)
+    print(f"width plan: 16 ops x 16-bit resonators -> "
+          f"{budget.result_digits} bits (bound {budget.result_digits_bound})")
+
+    section("16-input perceptron: exact int8 MAC vs float32")
+    w = rng.integers(-127, 128, size=(16,)).astype(np.int8)
+    xq = rng.integers(-127, 128, size=(8192, 16)).astype(np.int8)
+    need = bits_for_sum(16, 14, signed=True)        # 16 products of 14 bits
+    print(f"bits needed for 16 int8*int8 products: {need} (int32 exact)")
+
+    def neuron_int(xq):
+        prod = xq.astype(jnp.int32) * jnp.asarray(w, jnp.int32)
+        acc = jnp.sum(prod, axis=-1)                # exact by the plan
+        return jax.nn.tanh(acc.astype(jnp.float32) / (127.0 * 127.0 * 4))
+
+    def neuron_float(xf):
+        wf = jnp.asarray(np.asarray(w, np.float32) / 127.0)
+        return jax.nn.tanh((xf @ wf) / 4.0)
+
+    y_i = jax.jit(neuron_int)(jnp.asarray(xq))
+    xf = jnp.asarray(xq, jnp.float32) / 127.0
+    y_f = jax.jit(neuron_float)(xf)
+    np.testing.assert_allclose(np.asarray(y_i), np.asarray(y_f),
+                               atol=5e-2)
+    print("int MAC neuron matches float within quantization error")
+
+    section("throughput: neurons/second (batch 8192, CPU wall)")
+    rows = []
+    t_int = time_fn(jax.jit(neuron_int), jnp.asarray(xq))
+    t_flt = time_fn(jax.jit(neuron_float), xf)
+    t_arn = time_fn(jax.jit(arn_node_int), x_q)
+    rows.append({"neuron": "mlp_int_mac", "s_per_call": t_int,
+                 "neurons_per_s": 8192 / t_int})
+    rows.append({"neuron": "mlp_float", "s_per_call": t_flt,
+                 "neurons_per_s": 8192 / t_flt})
+    rows.append({"neuron": "arn_moa16", "s_per_call": t_arn,
+                 "neurons_per_s": 4096 / t_arn})
+    print_rows(rows)
+    return {"ok": True}
+
+
+if __name__ == "__main__":
+    run()

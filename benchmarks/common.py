@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: timing + row printing."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, List
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "Row", "print_rows", "section"]
+
+Row = Dict[str, Any]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall seconds per call of a jitted fn (CPU wall clock)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def section(title: str) -> None:
+    print(f"\n==== {title} " + "=" * max(1, 66 - len(title)))
+
+
+def print_rows(rows: Iterable[Row]) -> None:
+    rows = list(rows)
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(_fmt(r.get(k)) for k in keys))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) < 1e-3 or abs(v) >= 1e5:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)

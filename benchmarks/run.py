@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_adders, bench_carry_tables, bench_cla_vs_lut,
+                        bench_collectives, bench_lemma3, bench_moa_kernels,
+                        bench_neuron, bench_transition)
+
+BENCHES = {
+    "carry_tables": (bench_carry_tables, "Tables 1a/1b/1c + 2"),
+    "transition": (bench_transition, "Table 3 / eqn 20"),
+    "adders": (bench_adders, "Figs 12-15 adder sims"),
+    "lemma3": (bench_lemma3, "Fig 9 / Lemma 3"),
+    "cla_vs_lut": (bench_cla_vs_lut, "Figs 16-18 gate costs"),
+    "moa_kernels": (bench_moa_kernels, "kernel layer"),
+    "neuron": (bench_neuron, "§8 neurons"),
+    "collectives": (bench_collectives, "§7 tree collectives"),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(BENCHES))
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else list(BENCHES)
+    failures = []
+    for name in names:
+        mod, desc = BENCHES[name]
+        print(f"\n{'#' * 72}\n# bench: {name} — {desc}\n{'#' * 72}")
+        t0 = time.monotonic()
+        try:
+            mod.run()
+            print(f"\n[bench {name}] OK in {time.monotonic() - t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            print(f"\n[bench {name}] FAILED:")
+            traceback.print_exc()
+    print(f"\n{'=' * 72}")
+    if failures:
+        print(f"{len(failures)} benchmark(s) failed: {failures}")
+        return 1
+    print(f"all {len(names)} benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

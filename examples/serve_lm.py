@@ -1,0 +1,52 @@
+"""Batched serving example: continuous request batches through a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch falcon-mamba-7b]
+
+Runs three request batches through the serve path of a reduced config,
+reporting per-batch prefill/decode timing — the SSM archs demonstrate the
+O(1)-state long-context story (state size independent of context length).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, list_archs
+from repro.launch.serve import generate
+from repro.models.common import init_params, param_count
+from repro.models.registry import get_api
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b",
+                    choices=[a for a in list_archs()
+                             if not get_config(a).encoder_only])
+    ap.add_argument("--batches", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced(dtype=jnp.float32)
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    print(f"serving reduced {cfg.arch_id} "
+          f"({param_count(api.param_specs(cfg)) / 1e6:.2f}M params)")
+
+    rng = np.random.default_rng(0)
+    for i in range(args.batches):
+        prompts = rng.integers(0, cfg.vocab,
+                               (args.batch, args.prompt_len)).astype(np.int32)
+        ids, stats = generate(cfg, params, prompts, args.gen)
+        print(f"batch {i}: {args.batch} requests  "
+              f"prefill {stats['prefill_s'] * 1e3:.0f} ms  "
+              f"decode {stats['decode_s'] * 1e3:.0f} ms  "
+              f"({stats['decode_tok_s']:.0f} tok/s)")
+        assert ids.shape == (args.batch, args.prompt_len + args.gen)
+    print("serve_lm OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,6 @@
+"""repro — Multi-Operand Accumulation (MOA) framework.
+
+JAX reproduction + TPU adaptation of "Design of Reconfigurable Multi-Operand
+Adder for Massively Parallel Processing" (Mayannavar & Wali, 2020).
+"""
+__version__ = "0.1.0"

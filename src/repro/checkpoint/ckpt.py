@@ -1,0 +1,168 @@
+"""Sharded checkpointing: per-leaf .npy files + msgpack manifest, async save,
+restore with resharding (elastic mesh resize).
+
+Layout:
+    <dir>/step_<N>/manifest.msgpack       tree structure + leaf metadata
+    <dir>/step_<N>/leaf_<i>.npy           full-leaf arrays (host-gathered)
+    <dir>/step_<N>/.complete              commit marker (atomic rename)
+
+On a real multi-host cluster each host writes only its addressable shards;
+here (single-host container) leaves are written whole, but the restore path
+still re-applies arbitrary target shardings, so elastic resize (restore onto
+a different mesh) is exercised for real. Saves are atomic: a temp dir is
+renamed only after fsync, so a crash mid-save never corrupts the latest
+complete checkpoint.
+"""
+from __future__ import annotations
+
+import concurrent.futures as futures
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+_MANIFEST = "manifest.msgpack"
+_COMMIT = ".complete"
+
+
+def _flatten_with_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    flat, _ = _flatten_with_paths(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    meta = {"step": step, "leaves": []}
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        # bfloat16 has no numpy dtype: store as uint16 view + flag
+        if str(leaf.dtype) == "bfloat16":
+            np.save(os.path.join(tmp, fname),
+                    np.asarray(leaf.astype(jnp.float32)))
+            stored = "float32->bfloat16"
+        else:
+            np.save(os.path.join(tmp, fname), arr)
+            stored = str(arr.dtype)
+        meta["leaves"].append({"path": path, "file": fname,
+                               "dtype": str(leaf.dtype), "stored": stored,
+                               "shape": list(leaf.shape)})
+    with open(os.path.join(tmp, _MANIFEST), "wb") as f:
+        f.write(msgpack.packb(meta))
+    with open(os.path.join(tmp, _COMMIT), "w") as f:
+        f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *committed* checkpoint step, or None."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, _COMMIT)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, target_tree: Any,
+                       shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``target_tree``; if ``shardings`` is
+    given (a matching tree of NamedSharding), leaves are placed sharded —
+    this is the elastic-resize path: the target mesh may differ from the
+    mesh the checkpoint was written under."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, _MANIFEST), "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    flat_t, treedef = _flatten_with_paths(target_tree)
+    by_path = {l["path"]: l for l in meta["leaves"]}
+    shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(flat_t))
+    out = []
+    for (path, leaf), shd in zip(flat_t, shard_flat):
+        rec = by_path.get(path)
+        if rec is None:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        arr = np.load(os.path.join(d, rec["file"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {path}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        val = jnp.asarray(arr, dtype=rec["dtype"])
+        if shd is not None:
+            val = jax.device_put(val, shd)
+        out.append(val)
+    return jax.tree.unflatten(jax.tree.structure(
+        target_tree), out)
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread; ``wait()`` joins pending
+    saves (call before exiting or before deleting old steps)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._pool = futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: List[futures.Future] = []
+        self._lock = threading.Lock()
+
+    def save(self, step: int, tree: Any) -> futures.Future:
+        # snapshot to host memory NOW so training can mutate device buffers
+        host_tree = jax.tree.map(lambda x: np.asarray(
+            jax.device_get(x.astype(jnp.float32) if str(x.dtype) == "bfloat16"
+                           else x)), tree)
+        dtypes = jax.tree.map(lambda x: str(x.dtype), tree)
+
+        def job():
+            restored = jax.tree.map(
+                lambda a, dt: jnp.asarray(a, dtype=dt), host_tree, dtypes)
+            path = save_checkpoint(self.ckpt_dir, step, restored)
+            self._gc()
+            return path
+
+        fut = self._pool.submit(job)
+        with self._lock:
+            self._pending.append(fut)
+        return fut
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.ckpt_dir)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.ckpt_dir, n, _COMMIT)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for fut in pending:
+            fut.result()
+
+    def close(self):
+        self.wait()
+        self._pool.shutdown()

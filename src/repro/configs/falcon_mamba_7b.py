@@ -1,0 +1,5 @@
+"""Config for falcon-mamba-7b (see registry for provenance)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("falcon-mamba-7b")
+SMOKE_CONFIG = CONFIG.reduced()

@@ -1,0 +1,5 @@
+"""Config for glm4-9b (see registry for provenance)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("glm4-9b")
+SMOKE_CONFIG = CONFIG.reduced()

@@ -1,0 +1,5 @@
+"""Config for hubert-xlarge (see registry for provenance)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("hubert-xlarge")
+SMOKE_CONFIG = CONFIG.reduced()

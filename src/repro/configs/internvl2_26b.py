@@ -1,0 +1,5 @@
+"""Config for internvl2-26b (see registry for provenance)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("internvl2-26b")
+SMOKE_CONFIG = CONFIG.reduced()

@@ -1,0 +1,5 @@
+"""Config for llama3.2-3b (see registry for provenance)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("llama3.2-3b")
+SMOKE_CONFIG = CONFIG.reduced()

@@ -1,0 +1,5 @@
+"""Config for minicpm3-4b (see registry for provenance)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("minicpm3-4b")
+SMOKE_CONFIG = CONFIG.reduced()

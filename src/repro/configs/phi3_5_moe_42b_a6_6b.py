@@ -1,0 +1,5 @@
+"""Config for phi3.5-moe-42b-a6.6b (see registry for provenance)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("phi3.5-moe-42b-a6.6b")
+SMOKE_CONFIG = CONFIG.reduced()

@@ -1,0 +1,5 @@
+"""Config for qwen2.5-14b (see registry for provenance)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("qwen2.5-14b")
+SMOKE_CONFIG = CONFIG.reduced()

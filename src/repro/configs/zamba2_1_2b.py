@@ -1,0 +1,5 @@
+"""Config for zamba2-1.2b (see registry for provenance)."""
+from repro.configs.registry import get_config
+
+CONFIG = get_config("zamba2-1.2b")
+SMOKE_CONFIG = CONFIG.reduced()

@@ -1,0 +1,246 @@
+"""Bit-exact multi-operand adders (paper §3-§5, §7, §9).
+
+Two layers:
+
+* A pure-Python reference layer working in **any base k** with arbitrary
+  precision (used by hypothesis property tests and the paper's worked
+  examples, which use k = 10 and k = 16).
+
+* A vectorized **JAX layer for k = 2** operating on integer arrays: thousands
+  of independent N-operand additions per call — the paper's "massively
+  parallel environment". These are the oracles the Pallas kernels are
+  checked against, and are themselves checked against ``jnp.sum``.
+
+Faithfulness notes:
+  - Serial Algorithm-2 (Fig 5b/6) keeps a single carry *value* buffer whose
+    width is bounded by the Theorem (carry <= N-1); it completes an M-column
+    addition in **M + 1 clocks** (we return the structural clock count).
+  - Serial Algorithm-1 (Fig 5a) stores the partial column sums as p separate
+    carry *rows*; numerically it follows the same recurrence, and
+    :func:`serial_add` exposes the pending-row view for inspection.
+  - The parallel 4xM adder (Fig 7) evaluates one 4->3 LUT per column in
+    parallel and merges the shifted column sums combinatorially.
+  - For N = 4 the column ones-count goes through the *actual Fig-3 LUT*
+    (a 16-entry gather), not an arithmetic popcount.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import carry as carry_theory
+from repro.core.lut import LUT4_TABLE, lut4_netlist, popcount_tree
+
+__all__ = [
+    "SerialTrace",
+    "serial_add_py",
+    "serial_add",
+    "parallel_add_4xm",
+    "parallel_add_4xm_sc",
+    "reconfigured_add",
+    "max_supported_bits",
+]
+
+
+# ---------------------------------------------------------------------------
+# Python reference layer (any base k, arbitrary precision)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SerialTrace:
+    """Per-clock trace of a serial multi-operand addition."""
+
+    column_sums: List[int]      # LUT output per column (ones count / digit sum)
+    carries: List[int]          # carry-buffer value after each column
+    result_digits: List[int]    # emitted digits, LSB first
+    clocks: int                 # structural clock count (M + 1)
+    result: int
+
+
+def serial_add_py(operands: Sequence[int], k: int = 2,
+                  m_digits: int | None = None) -> SerialTrace:
+    """Algorithm-2 serial addition in base ``k`` (paper §3.2, Fig 5b).
+
+    One column per clock; the LUT output (digit-wise column sum) is added to
+    the carry buffer, the LSB digit is emitted, the rest shifts right into
+    the carry buffer. A final clock drains the carry buffer.
+    """
+    if any(x < 0 for x in operands):
+        raise ValueError("operands must be non-negative")
+    n = len(operands)
+    if m_digits is None:
+        m_digits = max(1, max(carry_theory.num_digits(x, k) for x in operands))
+    if any(x >= k ** m_digits for x in operands):
+        raise ValueError("operand wider than m_digits")
+
+    digit_rows = [carry_theory.digits(x, k) + [0] * m_digits for x in operands]
+    carry_buf = 0
+    col_sums, carries, out = [], [], []
+    for i in range(m_digits):
+        col = sum(row[i] for row in digit_rows)       # the "LUT" output
+        total = col + carry_buf
+        out.append(total % k)
+        carry_buf = total // k
+        col_sums.append(col)
+        carries.append(carry_buf)
+        # Theorem invariant: the carry value never exceeds N-1.
+        assert carry_buf <= carry_theory.carry_upper_bound(n)
+    # final clock: copy remaining carry buffer into the result (step (d))
+    drain = carry_buf
+    while drain:
+        out.append(drain % k)
+        drain //= k
+    result = carry_theory.from_digits(out, k) if out else 0
+    return SerialTrace(column_sums=col_sums, carries=carries,
+                       result_digits=out, clocks=m_digits + 1, result=result)
+
+
+# ---------------------------------------------------------------------------
+# JAX layer (k = 2)
+# ---------------------------------------------------------------------------
+
+def max_supported_bits(n_operands: int) -> int:
+    """Largest operand width the int32 JAX layer supports without overflow."""
+    budget_bits = 31
+    return budget_bits - carry_theory.carry_digits_bound(n_operands, 2) - 1
+
+
+def _column_bits(ops: jnp.ndarray, m_bits: int) -> jnp.ndarray:
+    """(..., N) integer operands -> (..., M, N) column bit planes."""
+    shifts = jnp.arange(m_bits, dtype=jnp.int32)
+    return (ops[..., None, :] >> shifts[:, None]) & 1
+
+
+def _ones_count(col_bits: jnp.ndarray) -> jnp.ndarray:
+    """Column ones-count over the last axis. N == 4 uses the Fig-3 LUT."""
+    n = col_bits.shape[-1]
+    if n == 4:
+        weights = jnp.asarray([1, 2, 4, 8], dtype=jnp.int32)
+        packed = jnp.sum(col_bits.astype(jnp.int32) * weights, axis=-1)
+        return jnp.take(jnp.asarray(LUT4_TABLE), packed, axis=0)
+    return popcount_tree(col_bits)
+
+
+def serial_add(ops: jnp.ndarray, m_bits: int,
+               return_trace: bool = False):
+    """Vectorized Algorithm-2 serial adder (k = 2).
+
+    Args:
+      ops: (..., N) int32 non-negative operands, each < 2**m_bits.
+      m_bits: word width M.
+      return_trace: also return (column_sums, carries) arrays of shape
+        (..., M) matching :class:`SerialTrace`.
+
+    Returns:
+      (result, clocks[, trace]) — result has shape (...,), clocks == M + 1.
+    """
+    n = ops.shape[-1]
+    if m_bits > max_supported_bits(n):
+        raise ValueError(
+            f"m_bits={m_bits} with N={n} overflows the int32 JAX layer; "
+            f"max is {max_supported_bits(n)} (use the Python layer instead)")
+    ops = ops.astype(jnp.int32)
+    cols = _column_bits(ops, m_bits)                 # (..., M, N)
+    cols = jnp.moveaxis(cols, -2, 0)                 # (M, ..., N)
+
+    def step(carry_buf, col):
+        lut_out = _ones_count(col)                   # (...,)
+        total = lut_out + carry_buf
+        z_bit = total & 1
+        return total >> 1, (z_bit, lut_out, total >> 1)
+
+    carry0 = jnp.zeros(ops.shape[:-1], jnp.int32)
+    carry_final, (z_bits, col_sums, carries) = jax.lax.scan(step, carry0, cols)
+    weights = (jnp.int32(1) << jnp.arange(m_bits, dtype=jnp.int32))
+    weights = weights.reshape((m_bits,) + (1,) * (ops.ndim - 1))
+    result = jnp.sum(z_bits * weights, axis=0) + (carry_final << m_bits)
+    clocks = m_bits + 1
+    if return_trace:
+        return result, clocks, (jnp.moveaxis(col_sums, 0, -1),
+                                jnp.moveaxis(carries, 0, -1))
+    return result, clocks
+
+
+def parallel_add_4xm(ops: jnp.ndarray, m_bits: int) -> jnp.ndarray:
+    """Fig-7 combinatorial 4xM adder: per-column LUTs in parallel, then a
+    shifted merge of the 3-bit column sums. Operates on (..., 4) operands."""
+    if ops.shape[-1] != 4:
+        raise ValueError("parallel_add_4xm takes exactly 4 operands")
+    if m_bits > max_supported_bits(4):
+        raise ValueError("word too wide for int32 layer")
+    cols = _column_bits(ops.astype(jnp.int32), m_bits)   # (..., M, 4)
+    counts = lut4_netlist(cols)                          # (..., M) in [0,4]
+    weights = (jnp.int32(1) << jnp.arange(m_bits, dtype=jnp.int32))
+    return jnp.sum(counts * weights, axis=-1)
+
+
+def parallel_add_4xm_sc(ops: jnp.ndarray, m_bits: int
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """4xM addition split into (S, C): S = low M bits, C = carry value at
+    weight 2^M. Theorem guarantees C <= 3 (2 bits) — asserted in tests."""
+    total = parallel_add_4xm(ops, m_bits)
+    mask = (jnp.int32(1) << m_bits) - jnp.int32(1)
+    return total & mask, total >> m_bits
+
+
+def reconfigured_add(ops: jnp.ndarray, m_bits: int,
+                     return_structure: bool = False):
+    """§7 reconfiguration: an N-operand adder from 4-operand modules.
+
+    The sum path stays M bits wide at every level (as in Fig 10: U1..U4 feed
+    U5); every level's 2-bit carries are collected at weight 2^M and reduced
+    by small carry adders (U6/U7). Works for any N >= 1 (zero padding).
+
+    Returns ``result`` with shape (...,); with ``return_structure=True`` also
+    returns a dict with per-level carry maxima and the module count, so tests
+    can check the paper's structural claims (e.g. C5 = C6 = 0 for 16x16).
+    """
+    n = ops.shape[-1]
+    if m_bits > max_supported_bits(n):
+        raise ValueError("word too wide for int32 layer")
+    values = ops.astype(jnp.int32)
+    carries: List[jnp.ndarray] = []
+    levels = 0
+    modules = 0
+    while values.shape[-1] > 1:
+        levels += 1
+        pad = (-values.shape[-1]) % 4
+        if pad:
+            z = jnp.zeros(values.shape[:-1] + (pad,), values.dtype)
+            values = jnp.concatenate([values, z], axis=-1)
+        groups = values.reshape(values.shape[:-1] + (-1, 4))  # (..., G, 4)
+        modules += groups.shape[-2]
+        s, c = parallel_add_4xm_sc(groups, m_bits)            # (..., G)
+        values = s
+        carries.append(c)
+    # Carry reduction (U6/U7): all carries live at weight 2^M; their total is
+    # bounded by N-1 (Theorem), so small adders suffice.
+    if carries:
+        cat = jnp.concatenate(carries, axis=-1)
+        carry_bits = carry_theory.carry_digits_bound(n, 2)
+        carry_total = cat
+        while carry_total.shape[-1] > 1:
+            pad = (-carry_total.shape[-1]) % 4
+            if pad:
+                z = jnp.zeros(carry_total.shape[:-1] + (pad,), cat.dtype)
+                carry_total = jnp.concatenate([carry_total, z], axis=-1)
+            g = carry_total.reshape(carry_total.shape[:-1] + (-1, 4))
+            modules += g.shape[-2]
+            carry_total = parallel_add_4xm(g, max(carry_bits, 2))
+        carry_total = carry_total[..., 0]
+    else:
+        carry_total = jnp.zeros(values.shape[:-1], jnp.int32)
+    result = values[..., 0] + (carry_total << m_bits)
+    if return_structure:
+        structure = {
+            "levels": levels,
+            "modules": modules,
+            "carry_total": carry_total,
+            "carry_value_bound": carry_theory.carry_upper_bound(n),
+        }
+        return result, structure
+    return result

@@ -1,0 +1,118 @@
+"""Fault tolerance: heartbeats, straggler detection, elastic resize plans.
+
+The coordinator-side logic is hardware-independent and fully unit-testable
+in-process (a fake clock drives it). On a real cluster the heartbeat source
+is the per-host agent; here the train loop feeds it step timings.
+
+Policies implemented:
+* **Heartbeat liveness** — a host missing ``timeout`` seconds of beats is
+  declared dead -> triggers restore-from-checkpoint with a shrunk mesh
+  (elastic plan below).
+* **Straggler mitigation** — per-step durations are tracked in a rolling
+  window; hosts slower than ``straggler_factor`` x median are flagged; the
+  scheduler response (documented in train.loop) is to re-shard data away
+  from the straggler (batch re-slicing is deterministic, so this is safe)
+  or, persistently, to treat it as failed.
+* **Elastic resize** — given a new device count, pick the largest valid
+  (data, model) mesh <= devices that divides the global batch, so restore +
+  resume is a pure resharding of the checkpoint (exercised in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+import time
+from collections import defaultdict, deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["HeartbeatMonitor", "StragglerDetector", "plan_elastic_mesh",
+           "FailureEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    kind: str              # "dead" | "straggler"
+    host: int
+    at_step: int
+    detail: str = ""
+
+
+class HeartbeatMonitor:
+    """Declares hosts dead after ``timeout`` seconds without a beat."""
+
+    def __init__(self, num_hosts: int, timeout: float,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.last_beat: Dict[int, float] = {h: clock() for h in
+                                            range(num_hosts)}
+        self.dead: set = set()
+
+    def beat(self, host: int) -> None:
+        if host not in self.dead:
+            self.last_beat[host] = self.clock()
+
+    def check(self, at_step: int = -1) -> List[FailureEvent]:
+        now = self.clock()
+        events = []
+        for host, t in self.last_beat.items():
+            if host not in self.dead and now - t > self.timeout:
+                self.dead.add(host)
+                events.append(FailureEvent("dead", host, at_step,
+                                           f"no beat for {now - t:.1f}s"))
+        return events
+
+    @property
+    def alive(self) -> List[int]:
+        return [h for h in self.last_beat if h not in self.dead]
+
+
+class StragglerDetector:
+    """Rolling-window per-host step-time tracking."""
+
+    def __init__(self, window: int = 16, straggler_factor: float = 1.5,
+                 min_samples: int = 4):
+        self.window = window
+        self.factor = straggler_factor
+        self.min_samples = min_samples
+        self.times: Dict[int, Deque[float]] = defaultdict(
+            lambda: deque(maxlen=window))
+
+    def record(self, host: int, step_time: float) -> None:
+        self.times[host].append(step_time)
+
+    def check(self, at_step: int = -1) -> List[FailureEvent]:
+        medians = {h: statistics.median(ts) for h, ts in self.times.items()
+                   if len(ts) >= self.min_samples}
+        if len(medians) < 2:
+            return []
+        global_median = statistics.median(medians.values())
+        return [FailureEvent("straggler", h, at_step,
+                             f"{m / global_median:.2f}x median")
+                for h, m in medians.items()
+                if m > self.factor * global_median]
+
+
+def plan_elastic_mesh(devices: int, model_parallel: int, global_batch: int,
+                      pods: int = 1) -> Optional[Tuple[int, ...]]:
+    """Largest (pod, data, model) mesh fitting ``devices`` after a failure.
+
+    model_parallel is preserved (weights shard layout unchanged -> cheapest
+    restore); the data axis shrinks to the largest divisor of global_batch
+    that fits. Returns None if even data=1 doesn't fit.
+    """
+    if devices < model_parallel * pods:
+        pods = max(1, devices // model_parallel)
+    per_pod = devices // pods
+    max_data = per_pod // model_parallel
+    if max_data < 1:
+        return None
+    data = max_data
+    while data >= 1:
+        if global_batch % (data * pods) == 0:
+            break
+        data -= 1
+    if data < 1:
+        return None
+    return (pods, data, model_parallel) if pods > 1 else (data, model_parallel)

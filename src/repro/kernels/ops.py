@@ -1,0 +1,72 @@
+"""Public jit'd entry points for the kernel layer.
+
+Each op dispatches to the Pallas kernel on TPU and to the jnp oracle
+elsewhere (CPU/GPU), so models can call these unconditionally. The Pallas
+path is exercised on CPU via ``interpret=True`` in tests and benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitplane_add import bitplane_add_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.moa_reduce import moa_reduce_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+__all__ = ["moa_reduce", "bitplane_add", "quant_matmul", "flash_attention",
+           "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def moa_reduce(x: jnp.ndarray, acc_dtype=jnp.float32, out_dtype=None,
+               force_pallas: bool = False, interpret: bool = False
+               ) -> jnp.ndarray:
+    """Fused multi-operand sum over axis 0 of (N, ...) operands.
+
+    Accepts any rank >= 2; trailing dims are flattened into a 2-D tile space
+    for the kernel and restored afterwards.
+    """
+    if not (on_tpu() or force_pallas):
+        return ref.moa_reduce_ref(x, acc_dtype, out_dtype)
+    shape = x.shape
+    n = shape[0]
+    if x.ndim == 2:
+        x2 = x.reshape(n, shape[1], 1)
+    else:
+        x2 = x.reshape(n, shape[1], -1)
+    out = moa_reduce_pallas(x2, acc_dtype=acc_dtype, out_dtype=out_dtype,
+                            interpret=interpret)
+    return out.reshape(shape[1:])
+
+
+def bitplane_add(x: jnp.ndarray, m_bits: int, force_pallas: bool = False,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Exact N-operand integer addition per lane (paper Alg-2 on the VPU)."""
+    if not (on_tpu() or force_pallas):
+        return ref.bitplane_add_ref(x, m_bits)
+    return bitplane_add_pallas(x, m_bits=m_bits, interpret=interpret)
+
+
+def quant_matmul(x: jnp.ndarray, w: jnp.ndarray, acc_bits: int = 32,
+                 force_pallas: bool = False, interpret: bool = False
+                 ) -> jnp.ndarray:
+    """Exact int8 matmul with Theorem-planned K-blocking."""
+    if not (on_tpu() or force_pallas):
+        return ref.quant_matmul_ref(x, w)
+    return quant_matmul_pallas(x, w, acc_bits=acc_bits, interpret=interpret)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float = None,
+                    force_pallas: bool = False, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """Streaming-softmax causal GQA attention (never materializes S^2)."""
+    if not (on_tpu() or force_pallas):
+        return ref.flash_attention_ref(q, k, v, causal, scale)
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  interpret=interpret)

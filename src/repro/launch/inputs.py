@@ -1,0 +1,92 @@
+"""Input specs per (architecture x shape cell).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for AOT lowering; ``make_batch`` builds the
+same pytree as real deterministic arrays for smoke tests and examples.
+Modality frontends are STUBS: the specs provide precomputed patch/frame
+embeddings, per the task sheet.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import shape_structs
+from repro.models.registry import get_api
+
+__all__ = ["batch_spec_shapes", "input_specs", "make_batch",
+           "decode_state_structs", "batch_logical_axes"]
+
+
+def batch_spec_shapes(cfg: ModelConfig, shape: ShapeConfig
+                      ) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """{name: (shape, dtype)} for the step input batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio_stub":
+            out = {"frames": ((b, s, cfg.frontend_dim), jnp.bfloat16)}
+            if shape.kind == "train":
+                out["labels"] = ((b, s), jnp.int32)
+            return out
+        if cfg.frontend == "vision_stub":
+            nft = cfg.n_frontend_tokens
+            out = {
+                "vision_embeds": ((b, nft, cfg.frontend_dim), jnp.bfloat16),
+                "tokens": ((b, s - nft), jnp.int32),
+            }
+            if shape.kind == "train":
+                out["labels"] = ((b, s - nft), jnp.int32)
+            return out
+        out = {"tokens": ((b, s), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = ((b, s), jnp.int32)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": ((b, 1), jnp.int32), "index": ((), jnp.int32)}
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Dict[str, Tuple[Any, ...]]:
+    """Logical sharding axes for each batch entry."""
+    names = batch_spec_shapes(cfg, shape)
+    out = {}
+    for k, (shp, _) in names.items():
+        if k == "index":
+            out[k] = ()
+        elif k in ("frames", "vision_embeds"):
+            out[k] = ("batch",) + (None,) * (len(shp) - 1)
+        else:
+            out[k] = ("batch",) + (None,) * (len(shp) - 1)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree for the step inputs (batch only)."""
+    return {k: jax.ShapeDtypeStruct(shp, dt)
+            for k, (shp, dt) in batch_spec_shapes(cfg, shape).items()}
+
+
+def decode_state_structs(cfg: ModelConfig, shape: ShapeConfig):
+    """(state ShapeDtypeStructs, state ParamSpecs) for decode cells."""
+    api = get_api(cfg)
+    specs = api.decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+    return shape_structs(specs), specs
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0
+               ) -> Dict[str, jnp.ndarray]:
+    """Deterministic real-array batch matching ``input_specs``."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (shp, dt) in batch_spec_shapes(cfg, shape).items():
+        if k == "index":
+            out[k] = jnp.asarray(shape.seq_len // 2, jnp.int32)
+        elif dt == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab, shp), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(shp), dt)
+    return out

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS for 512 host
+devices before any jax import; tests and benches keep the default 1.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_summary"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: ("data", "model") / ("pod", "data", "model"). "data" carries
+    DP + FSDP; "model" carries TP / EP / SP / kv-seq sharding; "pod" is the
+    DCN boundary (gradient reduction only).
+    """
+    shape: Tuple[int, ...] = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices=None, *, multi_pod: bool = False):
+    """Small-mesh analogue for multi-device CPU tests (8 devices)."""
+    from jax.sharding import Mesh
+    devices = np.asarray(devices if devices is not None else jax.devices())
+    if multi_pod:
+        return Mesh(devices.reshape(2, 2, 2), ("pod", "data", "model"))
+    return Mesh(devices.reshape(2, 4), ("data", "model"))
+
+
+def mesh_summary(mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())

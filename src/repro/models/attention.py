@@ -1,0 +1,322 @@
+"""GQA attention: chunked-softmax training path + split-KV decode path.
+
+Training uses query-chunked attention (flash-style outer loop at the JAX
+level) so the (B, S, S) score tensor never materializes — the per-chunk
+softmax-weighted combine *is* a multi-operand accumulation, and the decode
+path's sharded-KV softmax is reduced across the model axis by the SPMD
+partitioner (split-K decode: partial (max, sum, PV) accumulators combined —
+the paper's reconfigured-adder pattern applied to attention).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (ParamSpec, apply_rope, constrain,
+                                 rope_angles, shardmap_mesh)
+from repro.models.common import scan as mscan
+
+__all__ = ["gqa_param_specs", "gqa_train", "gqa_decode"]
+
+NEG_INF = -1e30
+
+
+def gqa_param_specs(cfg: ModelConfig, prefix_layers: bool = True) -> dict:
+    """Per-layer attention params (leading layer axis added by the caller)."""
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    d = cfg.d_model
+    specs = {
+        "wq": ParamSpec((d, hq * hd), ("embed", "q_heads")),
+        "wk": ParamSpec((d, hkv * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d, hkv * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((hq * hd, d), ("q_heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((hq * hd,), ("q_heads",), init="zeros")
+        specs["bk"] = ParamSpec((hkv * hd,), ("kv_heads",), init="zeros")
+        specs["bv"] = ParamSpec((hkv * hd,), ("kv_heads",), init="zeros")
+    return specs
+
+
+def _project_qkv(x: jnp.ndarray, p: dict, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (q.reshape(b, s, hq, hd), k.reshape(b, s, hkv, hd),
+            v.reshape(b, s, hkv, hd))
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """Broadcast KV heads to the query-head count (keeps the sharded q-head
+    axis layout instead of a split reshape the partitioner can't follow)."""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def tp_head_pad(cfg: ModelConfig) -> int:
+    """Heads to ADD so the q-head axis divides the model-axis size.
+
+    40 heads on a 16-way model axis would otherwise fall back to fully
+    REPLICATED attention — every shard computing all heads and psum-ing
+    fp32 activations each layer (found by the §Perf roofline loop: the
+    largest single contributor to llama4/qwen train-step wire bytes).
+    Padding 40 -> 48 costs 20% extra attention FLOPs but shards them 16
+    ways; padded q heads see zero queries and are sliced off before the
+    output projection, so the math is exact."""
+    from repro.models.common import _current_mesh
+    mesh = _current_mesh()
+    tp = 1
+    if mesh is not None and "model" in mesh.shape:
+        tp = mesh.shape["model"]
+    else:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and not am.empty and "model" in am.shape:
+            tp = dict(am.shape).get("model", 1)
+    if tp <= 1 or cfg.n_heads % tp == 0:
+        return 0
+    # pad WITHIN each kv group (rep -> rep_pad) so the q-head -> kv-head
+    # assignment of the real heads is preserved
+    hkv = cfg.n_kv_heads
+    rep = cfg.n_heads // hkv
+    rep_pad = rep
+    while (hkv * rep_pad) % tp and rep_pad < rep + tp:
+        rep_pad += 1
+    if (hkv * rep_pad) % tp:
+        return 0
+    return hkv * rep_pad - cfg.n_heads
+
+
+def _pad_heads(x: jnp.ndarray, pad: int, hkv: int) -> jnp.ndarray:
+    """Pad the q-head axis group-wise: (.., hkv*rep, hd) -> (.., hkv*rep_pad,
+    hd) with zeros appended INSIDE each kv group."""
+    if pad == 0:
+        return x
+    b, s, hq, hd = x.shape
+    rep = hq // hkv
+    rep_pad = (hq + pad) // hkv
+    xg = x.reshape(b, s, hkv, rep, hd)
+    xg = jnp.pad(xg, ((0, 0), (0, 0), (0, 0), (0, rep_pad - rep), (0, 0)))
+    return xg.reshape(b, s, hkv * rep_pad, hd)
+
+
+def _unpad_heads(x: jnp.ndarray, pad: int, hkv: int) -> jnp.ndarray:
+    """Inverse of _pad_heads on the output: drop the in-group padded heads."""
+    if pad == 0:
+        return x
+    b, s, hq_pad, hd = x.shape
+    rep_pad = hq_pad // hkv
+    rep = (hq_pad - pad) // hkv
+    xg = x.reshape(b, s, hkv, rep_pad, hd)[:, :, :, :rep]
+    return xg.reshape(b, s, hkv * rep, hd)
+
+
+def _chunk_attend(q_chunk: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  q_offset: jnp.ndarray, causal: bool) -> jnp.ndarray:
+    """Attend one query chunk against the full K/V. Shapes:
+    q_chunk (B, C, H, hd); k/v (B, S, H, hd) -> (B, C, H, hd)."""
+    hd = q_chunk.shape[-1]
+    scores = jnp.einsum("bchd,bshd->bhcs", q_chunk, k) / jnp.sqrt(
+        jnp.asarray(hd, jnp.float32)).astype(q_chunk.dtype)
+    scores = scores.astype(jnp.float32)
+    if causal:
+        s = k.shape[1]
+        c = q_chunk.shape[1]
+        q_pos = q_offset + jnp.arange(c)[:, None]
+        k_pos = jnp.arange(s)[None, :]
+        scores = jnp.where((k_pos <= q_pos)[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_chunk.dtype)
+    return jnp.einsum("bhcs,bshd->bchd", probs, v)
+
+
+def gqa_train(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+              positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention, chunked over queries. x: (B, S, D)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(x, p, cfg)
+    if positions is None:
+        positions = jnp.arange(s)
+    sin, cos = rope_angles(positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    # TPU: streaming-softmax Pallas kernel — no S^2 HBM traffic. (Wrap the
+    # whole step in shard_map on multi-chip meshes; the partitioner cannot
+    # split a custom call.) CPU/dry-run lowers the chunked path below.
+    from repro.kernels import ops as kops
+    if (cfg.use_flash_attn and kops.on_tpu()
+            and s % min(cfg.attn_chunk, 128) == 0):
+        out = kops.flash_attention(q, k, v, causal=cfg.causal)
+        out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+        out = constrain(out, ("batch", "seq_sp", None))
+        return out @ p["wo"].astype(x.dtype)
+
+    pad = tp_head_pad(cfg)
+    hq = cfg.n_heads + pad
+    q = _pad_heads(q, pad, cfg.n_kv_heads)
+    n_rep = hq // cfg.n_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    q = constrain(q, ("batch", None, "q_heads", None))
+    k = constrain(k, ("batch", None, "q_heads", None))
+    v = constrain(v, ("batch", None, "q_heads", None))
+
+    chunk = min(cfg.attn_chunk, s)
+    if s % chunk:
+        chunk = s  # fallback: unchunked for odd smoke shapes
+    nc = s // chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, chunk, hq, cfg.hd), 1, 0)
+    offsets = jnp.arange(nc) * chunk
+
+    def body(_, qo):
+        q_i, off = qo
+        return None, _chunk_attend(q_i, k, v, off, cfg.causal)
+
+    _, out = mscan(body, None, (qc, offsets))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, hq, cfg.hd)
+    out = _unpad_heads(out, pad, cfg.n_kv_heads)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+    out = constrain(out, ("batch", "seq_sp", None))
+    return out @ p["wo"].astype(x.dtype)
+
+
+def gqa_decode_splitk(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                      cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                      cur_index: jnp.ndarray, mesh
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Split-K decode: FULL-manual shard_map; the KV cache never moves.
+
+    The auto-partitioned path reshards the whole cache every step
+    ("involuntary full rematerialization" in XLA's words) — ~30x the
+    useful byte traffic on the 256-chip mesh. Here the cache is manual
+    over (batch -> DP axes, kv_seq -> model): the owning shard writes the
+    new KV in place, every shard attends q (replicated over model, tiny)
+    against its local KV slice, and the partial (max, sum-exp, PV)
+    accumulators are combined with psums — the paper's reconfigured
+    multi-operand combine applied to attention (DESIGN.md §5)."""
+    b, one, d = x.shape
+    smax = cache_k.shape[1]
+    tp = mesh.shape["model"]
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    s_loc = smax // tp
+    q, k_new, v_new = _project_qkv(x, p, cfg)
+    sin, cos = rope_angles(cur_index[None], cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_new = apply_rope(k_new, sin, cos)
+    hkv, rep = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+
+    def local(q, k_new, v_new, ck, cv, cur):
+        i = jax.lax.axis_index("model")
+        lo = i * s_loc
+        pos = cur - lo
+        write = (pos >= 0) & (pos < s_loc)
+        pos_c = jnp.clip(pos, 0, s_loc - 1)
+        # shard-local conditional write: only the owner updates its slice
+        old_k = jax.lax.dynamic_slice(ck, (0, pos_c, 0, 0), k_new.shape)
+        old_v = jax.lax.dynamic_slice(cv, (0, pos_c, 0, 0), v_new.shape)
+        ck = jax.lax.dynamic_update_slice(
+            ck, jnp.where(write, k_new.astype(ck.dtype), old_k),
+            (0, pos_c, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, jnp.where(write, v_new.astype(cv.dtype), old_v),
+            (0, pos_c, 0, 0))
+        # grouped-head scores against the local KV slice (no repeat_kv)
+        qg = q.reshape(b // max(1, _dp(mesh, dp_axes)), 1, hkv, rep, cfg.hd)
+        scores = jnp.einsum("bqgrh,bsgh->bgrqs", qg, ck.astype(q.dtype))
+        scores = scores.astype(jnp.float32) / math.sqrt(cfg.hd)
+        valid = ((lo + jnp.arange(s_loc)) <= cur)[None, None, None, None]
+        scores = jnp.where(valid, scores, NEG_INF)
+        m_loc = jnp.max(scores, axis=-1)                      # (b,g,r,1)
+        m = jax.lax.pmax(m_loc, "model")
+        p_ = jnp.exp(scores - m[..., None])
+        l_loc = jnp.sum(p_, axis=-1)
+        o_loc = jnp.einsum("bgrqs,bsgh->bgrqh",
+                           p_.astype(q.dtype), cv.astype(q.dtype))
+        # the multi-operand combine: partial (l, o) accumulators psum'd
+        l = jax.lax.psum(l_loc, "model")
+        o = jax.lax.psum(o_loc.astype(jnp.float32), "model")
+        out = (o / l[..., None]).astype(q.dtype)              # (b,g,r,1,h)
+        out = jnp.moveaxis(out, 3, 1).reshape(-1, 1,
+                                              cfg.n_heads * cfg.hd)
+        return out, ck, cv
+
+    batch_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes
+                                                   else None)
+    cache_spec = P(batch_spec, "model", None, None)
+    out, cache_k, cache_v = jax.shard_map(
+        local, mesh=shardmap_mesh(mesh),
+        axis_names=frozenset(mesh.axis_names),
+        in_specs=(P(batch_spec), P(batch_spec), P(batch_spec),
+                  cache_spec, cache_spec, P()),
+        out_specs=(P(batch_spec), cache_spec, cache_spec),
+    )(q, k_new, v_new, cache_k, cache_v, cur_index)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def _dp(mesh, dp_axes) -> int:
+    n = 1
+    for a in dp_axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def splitk_ok(cfg: ModelConfig, mesh, batch: int, smax: int) -> bool:
+    if mesh is None or getattr(mesh, "empty", True) or \
+            "model" not in mesh.shape or mesh.shape["model"] <= 1:
+        return False
+    dp = _dp(mesh, tuple(a for a in mesh.axis_names if a != "model"))
+    return smax % mesh.shape["model"] == 0 and batch % dp == 0
+
+
+def gqa_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+               cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+               cur_index: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x: (B, 1, D); cache_{k,v}: (B, Smax, Hkv, hd)
+    sharded (batch, kv_seq). Returns (out, new_cache_k, new_cache_v).
+
+    The softmax over the kv_seq-sharded axis lowers to partial max/sum
+    accumulators all-reduced across the model axis — split-K decode as a
+    multi-operand combine.
+    """
+    b, one, d = x.shape
+    smax = cache_k.shape[1]
+    q, k_new, v_new = _project_qkv(x, p, cfg)
+    sin, cos = rope_angles(cur_index[None], cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_new = apply_rope(k_new, sin, cos)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, cur_index, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, cur_index, 0, 0))
+    cache_k = constrain(cache_k, ("batch", "kv_seq", None, None))
+    cache_v = constrain(cache_v, ("batch", "kv_seq", None, None))
+
+    pad = tp_head_pad(cfg)
+    hq = cfg.n_heads + pad
+    q = _pad_heads(q, pad, cfg.n_kv_heads)
+    n_rep = hq // cfg.n_kv_heads
+    k = _repeat_kv(cache_k.astype(x.dtype), n_rep)
+    v = _repeat_kv(cache_v.astype(x.dtype), n_rep)
+    scores = jnp.einsum("bchd,bshd->bhcs", q, k) / jnp.sqrt(
+        jnp.asarray(cfg.hd, jnp.float32)).astype(x.dtype)
+    scores = scores.astype(jnp.float32)
+    valid = (jnp.arange(smax) <= cur_index)[None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhcs,bshd->bchd", probs, v)  # (b, 1, hq, hd)
+    out = _unpad_heads(out, pad, cfg.n_kv_heads)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v

@@ -1,0 +1,292 @@
+"""SSM LM (falcon-mamba) and Mamba2+shared-attention hybrid (zamba2).
+
+zamba2 structure: groups of ``shared_attn_period`` Mamba-2 layers, each group
+followed by ONE invocation of a weight-shared attention+MLP block with a
+per-invocation LoRA delta on the query projection (Zamba2's parameter-reuse
+trick). Remaining layers past the last full group form a tail.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, moe, ssm
+from repro.models.common import (ParamSpec, constrain, cross_entropy_loss,
+                                 rms_norm)
+from repro.models.common import scan as mscan
+from repro.models.lm import stack_specs, vocab_parallel_embed
+
+__all__ = [
+    "ssm_param_specs", "ssm_train_loss", "ssm_decode_state_specs",
+    "ssm_decode_step", "ssm_forward",
+    "hybrid_param_specs", "hybrid_train_loss", "hybrid_decode_state_specs",
+    "hybrid_decode_step", "hybrid_forward", "hybrid_layout",
+]
+
+
+# ---------------------------------------------------------------------------
+# pure SSM LM (mamba1 / mamba2 backbone)
+# ---------------------------------------------------------------------------
+
+def _ssm_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    sp = (ssm.mamba1_param_specs if cfg.ssm_variant == "mamba1"
+          else ssm.mamba2_param_specs)(cfg)
+    return {"norm": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+            "ssm": sp}
+
+
+def ssm_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           scale=0.02),
+        "blocks": stack_specs(_ssm_block_specs(cfg), cfg.n_layers),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def _ssm_apply(x, bp, cfg):
+    h = rms_norm(x, bp["norm"], cfg.norm_eps)
+    if cfg.ssm_variant == "mamba1":
+        h = ssm.mamba1_train(h, bp["ssm"], cfg)
+    else:
+        h = ssm.mamba2_train(h, bp["ssm"], cfg)
+    x = x + h
+    return constrain(x, ("batch", "seq_sp", None))
+
+
+def ssm_forward(params, batch, cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    x = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
+                             cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
+    x = constrain(x, ("batch", "seq_sp", None))
+
+    def layer(x, bp):
+        return _ssm_apply(x, bp, cfg), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = mscan(layer, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return constrain(logits, ("batch", "seq_sp", "vocab"))
+
+
+def ssm_train_loss(params, batch, cfg, mesh=None):
+    logits = ssm_forward(params, batch, cfg, mesh)
+    return cross_entropy_loss(logits, batch["labels"],
+                              batch.get("loss_mask"))
+
+
+def ssm_decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int
+                           ) -> Dict[str, ParamSpec]:
+    """O(1)-in-sequence decode state — the long_500k story: the 'KV cache'
+    of an SSM is a fixed (d_inner, N) summary regardless of context length."""
+    del max_seq
+    l = cfg.n_layers
+    if cfg.ssm_variant == "mamba1":
+        return {
+            "h": ParamSpec((l, batch, cfg.d_inner, cfg.ssm_state),
+                           ("layers", "batch", "ssm_inner", "ssm_state"),
+                           dtype=jnp.float32, init="zeros"),
+            "conv": ParamSpec((l, batch, cfg.ssm_conv - 1, cfg.d_inner),
+                              ("layers", "batch", None, "ssm_inner"),
+                              dtype=cfg.dtype, init="zeros"),
+        }
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "h": ParamSpec((l, batch, cfg.ssm_heads, cfg.ssm_state,
+                        cfg.ssm_head_dim),
+                       ("layers", "batch", "ssm_heads", "ssm_state", None),
+                       dtype=jnp.float32, init="zeros"),
+        "conv": ParamSpec((l, batch, cfg.ssm_conv - 1, conv_dim),
+                          ("layers", "batch", None, "ssm_inner"),
+                          dtype=cfg.dtype, init="zeros"),
+    }
+
+
+def ssm_decode_step(params, state, batch, cfg: ModelConfig,
+                    mesh: Optional[Mesh] = None):
+    x = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
+                             cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
+    step = (ssm.mamba1_decode if cfg.ssm_variant == "mamba1"
+            else ssm.mamba2_decode)
+
+    def layer(x, inp):
+        bp, h, conv = inp
+        hin = rms_norm(x, bp["norm"], cfg.norm_eps)
+        out, new = step(hin, bp["ssm"], cfg, {"h": h, "conv": conv})
+        return x + out, (new["h"], new["conv"])
+
+    x, (hs, convs) = mscan(
+        layer, x, (params["blocks"], state["h"], state["conv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), {"h": hs, "conv": convs}
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+def hybrid_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_groups, tail): full groups of `period` mamba layers + tail."""
+    period = cfg.shared_attn_period
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def hybrid_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    groups, tail = hybrid_layout(cfg)
+    period = cfg.shared_attn_period
+    mamba = _ssm_block_specs(cfg)
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), scale=0.02),
+        "mamba_groups": stack_specs(stack_specs(mamba, period), groups),
+        "shared": {
+            "attn_norm": ParamSpec((d,), ("embed",), init="ones"),
+            "attn": attention.gqa_param_specs(cfg),
+            "ffn_norm": ParamSpec((d,), ("embed",), init="ones"),
+            "ffn": moe.dense_ffn_specs(cfg),
+        },
+        "lora_a": ParamSpec((groups, d, cfg.shared_lora_rank),
+                            ("layers", "embed", None), scale=0.02),
+        "lora_b": ParamSpec((groups, cfg.shared_lora_rank,
+                             cfg.n_heads * cfg.hd),
+                            ("layers", None, "q_heads"), init="zeros"),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, cfg.vocab), ("embed", "vocab")),
+    }
+    if tail:
+        specs["mamba_tail"] = stack_specs(mamba, tail)
+    return specs
+
+
+def _shared_block_train(x, params, lora_a, lora_b, cfg):
+    sp = params["shared"]
+    h = rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+    # LoRA delta on the query projection, unique per invocation
+    ap = dict(sp["attn"])
+    ap["wq"] = sp["attn"]["wq"] + (lora_a @ lora_b).astype(sp["attn"]["wq"].dtype)
+    h = attention.gqa_train(h, ap, cfg)
+    x = x + h
+    h = rms_norm(x, sp["ffn_norm"], cfg.norm_eps)
+    x = x + moe.dense_ffn(h, sp["ffn"], cfg)
+    return constrain(x, ("batch", "seq_sp", None))
+
+
+def hybrid_forward(params, batch, cfg: ModelConfig,
+                   mesh: Optional[Mesh] = None):
+    x = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
+                             cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
+    x = constrain(x, ("batch", "seq_sp", None))
+
+    def inner(x, bp):
+        return _ssm_apply(x, bp, cfg), None
+
+    def group(x, gp):
+        mamba_p, la, lb = gp
+        x, _ = mscan(inner, x, mamba_p)
+        x = _shared_block_train(x, params, la, lb, cfg)
+        return x, None
+
+    if cfg.remat:
+        group = jax.checkpoint(
+            group, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = mscan(group, x, (params["mamba_groups"],
+                                   params["lora_a"], params["lora_b"]))
+    if "mamba_tail" in params:
+        x, _ = mscan(inner, x, params["mamba_tail"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return constrain(logits, ("batch", "seq_sp", "vocab"))
+
+
+def hybrid_train_loss(params, batch, cfg, mesh=None):
+    logits = hybrid_forward(params, batch, cfg, mesh)
+    return cross_entropy_loss(logits, batch["labels"],
+                              batch.get("loss_mask"))
+
+
+def hybrid_decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int
+                              ) -> Dict[str, ParamSpec]:
+    groups, tail = hybrid_layout(cfg)
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    specs = {
+        "h": ParamSpec((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                        cfg.ssm_head_dim),
+                       ("layers", "batch", "ssm_heads", "ssm_state", None),
+                       dtype=jnp.float32, init="zeros"),
+        "conv": ParamSpec((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim),
+                          ("layers", "batch", None, "ssm_inner"),
+                          dtype=cfg.dtype, init="zeros"),
+        # per-invocation KV cache for the shared attention block
+        "k": ParamSpec((groups, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                       ("layers", "batch", "kv_seq", None, None),
+                       dtype=cfg.dtype, init="zeros"),
+        "v": ParamSpec((groups, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                       ("layers", "batch", "kv_seq", None, None),
+                       dtype=cfg.dtype, init="zeros"),
+    }
+    return specs
+
+
+def hybrid_decode_step(params, state, batch, cfg: ModelConfig,
+                       mesh: Optional[Mesh] = None):
+    cur = batch["index"]
+    groups, tail = hybrid_layout(cfg)
+    period = cfg.shared_attn_period
+    x = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
+                             cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
+
+    def inner(x, inp):
+        bp, h, conv = inp
+        hin = rms_norm(x, bp["norm"], cfg.norm_eps)
+        out, new = ssm.mamba2_decode(hin, bp["ssm"], cfg,
+                                     {"h": h, "conv": conv})
+        return x + out, (new["h"], new["conv"])
+
+    h_g = state["h"][:groups * period].reshape(
+        (groups, period) + state["h"].shape[1:])
+    conv_g = state["conv"][:groups * period].reshape(
+        (groups, period) + state["conv"].shape[1:])
+    use_splitk = attention.splitk_ok(cfg, mesh, state["k"].shape[1],
+                                     state["k"].shape[2])
+
+    def group(x, gp):
+        mamba_p, la, lb, hg, convg, ck, cv = gp
+        x, (hs, convs) = mscan(inner, x, (mamba_p, hg, convg))
+        sp = params["shared"]
+        hin = rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+        ap = dict(sp["attn"])
+        ap["wq"] = sp["attn"]["wq"] + (la @ lb).astype(sp["attn"]["wq"].dtype)
+        if use_splitk:
+            out, ck, cv = attention.gqa_decode_splitk(hin, ap, cfg, ck, cv,
+                                                      cur, mesh)
+        else:
+            out, ck, cv = attention.gqa_decode(hin, ap, cfg, ck, cv, cur)
+        x = x + out
+        hin = rms_norm(x, sp["ffn_norm"], cfg.norm_eps)
+        x = x + moe.dense_ffn(hin, sp["ffn"], cfg)
+        return x, (hs, convs, ck, cv)
+
+    x, (hs, convs, cks, cvs) = mscan(
+        group, x, (params["mamba_groups"], params["lora_a"],
+                   params["lora_b"], h_g, conv_g, state["k"], state["v"]))
+    new_h = hs.reshape((groups * period,) + hs.shape[2:])
+    new_conv = convs.reshape((groups * period,) + convs.shape[2:])
+    if tail:
+        x, (ht, convt) = mscan(
+            inner, x, (params["mamba_tail"],
+                       state["h"][groups * period:],
+                       state["conv"][groups * period:]))
+        new_h = jnp.concatenate([new_h, ht], axis=0)
+        new_conv = jnp.concatenate([new_conv, convt], axis=0)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), {"h": new_h, "conv": new_conv,
+                                        "k": cks, "v": cvs}

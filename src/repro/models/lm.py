@@ -1,0 +1,263 @@
+"""Unified LM: dense / GQA / MLA / MoE decoder, encoder-only, VLM backbone.
+
+One parameter declaration serves init, AOT dry-run specs, and sharding.
+Layers are stacked on a leading ``layers`` axis and executed with
+``lax.scan`` (+ optional remat), which keeps HLO size O(1) in depth — the
+property that makes 26B-at-512-devices dry-runs compile in seconds.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, mla, moe
+from repro.models.common import (ParamSpec, constrain, cross_entropy_loss,
+                                 rms_norm, shardmap_mesh)
+from repro.models.common import scan as mscan
+
+__all__ = [
+    "param_specs", "block_specs", "stack_specs",
+    "forward", "train_loss", "decode_state_specs", "decode_step",
+]
+
+
+def stack_specs(per_layer: Any, n: int) -> Any:
+    """Add a leading (n, ...) 'layers' axis to every spec in a tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            dtype=s.dtype, init=s.init, scale=s.scale),
+        per_layer, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """One decoder/encoder block: pre-norm attention + pre-norm FFN."""
+    d = cfg.d_model
+    specs: Dict[str, Any] = {
+        "attn_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "ffn_norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+    if cfg.attn_kind == "mla":
+        specs["attn"] = mla.mla_param_specs(cfg)
+    else:
+        specs["attn"] = attention.gqa_param_specs(cfg)
+    if cfg.n_experts:
+        specs["ffn"] = moe.moe_param_specs(cfg)
+    else:
+        specs["ffn"] = moe.dense_ffn_specs(cfg)
+    return specs
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), scale=0.02),
+        "blocks": stack_specs(block_specs(cfg), cfg.n_layers),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, cfg.vocab), ("embed", "vocab")),
+    }
+    if cfg.frontend:
+        specs["frontend_proj"] = ParamSpec((cfg.frontend_dim, d),
+                                           (None, "embed"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# embedding / logits (Megatron-style vocab parallelism via shard_map)
+# ---------------------------------------------------------------------------
+
+def _tp_size(mesh: Optional[Mesh]) -> int:
+    if mesh is None or mesh.empty or "model" not in mesh.shape:
+        return 1
+    return mesh.shape["model"]
+
+
+def vocab_parallel_embed(tokens: jnp.ndarray, table: jnp.ndarray,
+                         mesh: Optional[Mesh], vocab: int,
+                         enabled: bool = True) -> jnp.ndarray:
+    """Masked local gather + psum over the model axis (VocabParallelEmbedding).
+    Avoids the partitioner all-gathering the (V, D) table.
+
+    Partial-manual shard_map: only the ``model`` axis is manual; batch/fsdp
+    axes stay auto-partitioned, so no per-axis bookkeeping is needed here.
+    """
+    tp = _tp_size(mesh)
+    if not enabled or tp == 1 or vocab % tp:
+        return jnp.take(table, tokens, axis=0)
+    v_local = vocab // tp
+
+    def local(tok, tbl):
+        shard = jax.lax.axis_index("model")
+        lo = shard * v_local
+        in_range = (tok >= lo) & (tok < lo + v_local)
+        idx = jnp.clip(tok - lo, 0, v_local - 1)
+        x = jnp.take(tbl, idx, axis=0)
+        x = x * in_range[..., None].astype(x.dtype)
+        return jax.lax.psum(x, "model")
+
+    return jax.shard_map(local, mesh=shardmap_mesh(mesh),
+                         axis_names=frozenset({"model"}),
+                         in_specs=(P(), P("model", None)),
+                         out_specs=P())(tokens, table)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block_train(x: jnp.ndarray, bp: dict, cfg: ModelConfig,
+                 mesh: Optional[Mesh]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        h = mla.mla_train(h, bp["attn"], cfg)
+    else:
+        h = attention.gqa_train(h, bp["attn"], cfg)
+    x = x + h
+    x = constrain(x, ("batch", "seq_sp", None))
+    h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
+    if cfg.n_experts:
+        h, aux = moe.moe_ffn(h, bp["ffn"], cfg, mesh)
+    else:
+        h, aux = moe.dense_ffn(h, bp["ffn"], cfg), jnp.zeros((), jnp.float32)
+    x = x + h
+    x = constrain(x, ("batch", "seq_sp", None))
+    return x, aux
+
+
+def embed_inputs(params: dict, batch: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig, mesh: Optional[Mesh]) -> jnp.ndarray:
+    """Token embedding + optional modality-frontend stub tokens (prepended)."""
+    parts = []
+    if cfg.frontend == "vision_stub" and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(cfg.dtype)
+        parts.append(ve @ params["frontend_proj"].astype(cfg.dtype))
+    if cfg.frontend == "audio_stub":
+        fr = batch["frames"].astype(cfg.dtype)
+        x = fr @ params["frontend_proj"].astype(cfg.dtype)
+        return constrain(x, ("batch", "seq_sp", None))
+    tok = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
+                               cfg.vocab, cfg.use_tp_shardmap
+                               ).astype(cfg.dtype)
+    parts.append(tok)
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    return constrain(x, ("batch", "seq_sp", None))
+
+
+def forward(params: dict, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            mesh: Optional[Mesh] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B, S, V), aux_loss)."""
+    x = embed_inputs(params, batch, cfg, mesh)
+
+    def layer(carry, bp):
+        x, aux = carry
+        x, aux_l = _block_train(x, bp, cfg, mesh)
+        return (x, aux + aux_l), None
+
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = mscan(layer, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    logits = constrain(logits, ("batch", "seq_sp", "vocab"))
+    return logits, aux
+
+
+def train_loss(params: dict, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+               mesh: Optional[Mesh] = None) -> jnp.ndarray:
+    logits, aux = forward(params, batch, cfg, mesh)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:
+        # VLM: loss on the text positions only (stub tokens are prepended)
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    return cross_entropy_loss(logits, labels, batch.get("loss_mask")) + aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int
+                       ) -> Dict[str, ParamSpec]:
+    """KV-cache layout (as ParamSpecs so dry-run/sharding derive from it)."""
+    l, hd = cfg.n_layers, cfg.hd
+    if cfg.attn_kind == "mla":
+        return {
+            "ckv": ParamSpec((l, batch, max_seq, cfg.kv_lora_rank),
+                             ("layers", "batch", "kv_seq", None),
+                             dtype=cfg.dtype, init="zeros"),
+            "kr": ParamSpec((l, batch, max_seq, cfg.qk_rope_dim),
+                            ("layers", "batch", "kv_seq", None),
+                            dtype=cfg.dtype, init="zeros"),
+        }
+    return {
+        "k": ParamSpec((l, batch, max_seq, cfg.n_kv_heads, hd),
+                       ("layers", "batch", "kv_seq", None, None),
+                       dtype=cfg.dtype, init="zeros"),
+        "v": ParamSpec((l, batch, max_seq, cfg.n_kv_heads, hd),
+                       ("layers", "batch", "kv_seq", None, None),
+                       dtype=cfg.dtype, init="zeros"),
+    }
+
+
+def decode_step(params: dict, state: Dict[str, jnp.ndarray],
+                batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                mesh: Optional[Mesh] = None
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One new token for every sequence. batch: {"tokens": (B, 1),
+    "index": scalar current length}. Returns (logits (B, V), new state)."""
+    cur = batch["index"]
+    x = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
+                             cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
+
+    if cfg.attn_kind == "mla":
+        caches = (state["ckv"], state["kr"])
+
+        def layer(x, inp):
+            bp, ckv, kr = inp
+            h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+            h, ckv, kr = mla.mla_decode(h, bp["attn"], cfg, ckv, kr, cur)
+            x = x + h
+            h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
+            if cfg.n_experts:
+                h, _ = moe.moe_ffn(h, bp["ffn"], cfg, mesh)
+            else:
+                h = moe.dense_ffn(h, bp["ffn"], cfg)
+            return x + h, (ckv, kr)
+
+        x, (ckv, kr) = mscan(layer, x, (params["blocks"],) + caches)
+        new_state = {"ckv": ckv, "kr": kr}
+    else:
+        caches = (state["k"], state["v"])
+        use_splitk = attention.splitk_ok(cfg, mesh, caches[0].shape[1],
+                                         caches[0].shape[2])
+
+        def layer(x, inp):
+            bp, ck, cv = inp
+            h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+            if use_splitk:
+                h, ck, cv = attention.gqa_decode_splitk(
+                    h, bp["attn"], cfg, ck, cv, cur, mesh)
+            else:
+                h, ck, cv = attention.gqa_decode(h, bp["attn"], cfg, ck, cv,
+                                                 cur)
+            x = x + h
+            h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
+            if cfg.n_experts:
+                h, _ = moe.moe_ffn(h, bp["ffn"], cfg, mesh)
+            else:
+                h = moe.dense_ffn(h, bp["ffn"], cfg)
+            return x + h, (ck, cv)
+
+        x, (ck, cv) = mscan(layer, x, (params["blocks"],) + caches)
+        new_state = {"k": ck, "v": cv}
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
+    return logits.astype(jnp.float32), new_state

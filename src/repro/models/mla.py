@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Training expands the latent KV; decode uses the *absorbed* formulation —
+the KV cache holds only the latent c_kv plus the shared rope key, and the
+up-projections are folded into the query/output sides, so the per-token
+decode reads O(S * (r + d_rope)) bytes instead of O(S * H * hd).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (ParamSpec, apply_rope, constrain,
+                                 rms_norm, rope_angles)
+from repro.models.common import scan as mscan
+
+__all__ = ["mla_param_specs", "mla_train", "mla_decode"]
+
+NEG_INF = -1e30
+
+
+def mla_param_specs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamSpec((d, rq), ("embed", "latent")),
+        "q_norm": ParamSpec((rq,), ("latent",), init="ones"),
+        "wq_b": ParamSpec((rq, h * (dn + dr)), ("latent", "q_heads")),
+        "wkv_a": ParamSpec((d, rkv + dr), ("embed", "latent")),
+        "kv_norm": ParamSpec((rkv,), ("latent",), init="ones"),
+        "wk_b": ParamSpec((rkv, h * dn), ("latent", "q_heads")),
+        "wv_b": ParamSpec((rkv, h * dv), ("latent", "q_heads")),
+        "wo": ParamSpec((h * dv, d), ("q_heads", "embed")),
+    }
+
+
+def _queries(x, p, cfg, positions):
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    ql = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    q = (ql @ p["wq_b"].astype(x.dtype)).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    sin, cos = rope_angles(positions, dr, cfg.rope_theta)
+    return q_nope, apply_rope(q_rope, sin, cos)
+
+
+def _latent_kv(x, p, cfg, positions):
+    rkv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = x @ p["wkv_a"].astype(x.dtype)          # (B, S, rkv + dr)
+    c_kv = rms_norm(kv[..., :rkv], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., rkv:][..., None, :]         # single shared rope head
+    sin, cos = rope_angles(positions, dr, cfg.rope_theta)
+    return c_kv, apply_rope(k_rope, sin, cos)[..., 0, :]
+
+
+def mla_train(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+              positions=None) -> jnp.ndarray:
+    """Training path: expand K/V from the latent, chunked over queries."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope = _queries(x, p, cfg, positions)
+    c_kv, k_rope = _latent_kv(x, p, cfg, positions)
+    k_nope = (c_kv @ p["wk_b"].astype(x.dtype)).reshape(b, s, h, dn)
+    v = (c_kv @ p["wv_b"].astype(x.dtype)).reshape(b, s, h, dv)
+    q_nope = constrain(q_nope, ("batch", None, "q_heads", None))
+    k_nope = constrain(k_nope, ("batch", None, "q_heads", None))
+    v = constrain(v, ("batch", None, "q_heads", None))
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32)).astype(x.dtype)
+    chunk = min(cfg.attn_chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    def chunk_body(_, qo):
+        qn_i, qr_i, off = qo
+        # per-head nope scores + per-head rope queries against the SHARED
+        # rope key (one latent rope head serves all query heads)
+        scores = (jnp.einsum("bchd,bshd->bhcs", qn_i, k_nope) +
+                  jnp.einsum("bchd,bsd->bhcs", qr_i, k_rope)) * scale
+        scores = scores.astype(jnp.float32)
+        q_pos = off + jnp.arange(chunk)[:, None]
+        k_pos = jnp.arange(s)[None, :]
+        scores = jnp.where((k_pos <= q_pos)[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        return None, jnp.einsum("bhcs,bshd->bchd", probs, v)
+
+    qn = jnp.moveaxis(q_nope.reshape(b, nc, chunk, h, dn), 1, 0)
+    qr = jnp.moveaxis(q_rope.reshape(b, nc, chunk, h, dr), 1, 0)
+    offsets = jnp.arange(nc) * chunk
+    _, out = mscan(chunk_body, None, (qn, qr, offsets))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h * dv)
+    out = constrain(out, ("batch", "seq_sp", None))
+    return out @ p["wo"].astype(x.dtype)
+
+
+def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+               cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
+               cur_index: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Absorbed decode. cache_ckv: (B, Smax, rkv); cache_krope: (B, Smax, dr);
+    both sharded (batch, kv_seq). Score/PV contractions run in latent space.
+    """
+    b, _, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    smax = cache_ckv.shape[1]
+    pos = cur_index[None]
+    q_nope, q_rope = _queries(x, p, cfg, pos)        # (B,1,H,dn),(B,1,H,dr)
+    c_new, kr_new = _latent_kv(x, p, cfg, pos)       # (B,1,rkv),(B,1,dr)
+    cache_ckv = jax.lax.dynamic_update_slice(
+        cache_ckv, c_new.astype(cache_ckv.dtype), (0, cur_index, 0))
+    cache_krope = jax.lax.dynamic_update_slice(
+        cache_krope, kr_new.astype(cache_krope.dtype), (0, cur_index, 0))
+    cache_ckv = constrain(cache_ckv, ("batch", "kv_seq", None))
+    cache_krope = constrain(cache_krope, ("batch", "kv_seq", None))
+
+    # absorb wk_b into the query: q_lat (B,H,rkv)
+    wk_b = p["wk_b"].astype(x.dtype).reshape(rkv, h, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b)
+    ckv = cache_ckv.astype(x.dtype)
+    scores = (jnp.einsum("bhr,bsr->bhs", q_lat, ckv) +
+              jnp.einsum("bhd,bsd->bhs", q_rope[:, 0],
+                         cache_krope.astype(x.dtype)))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(float(dn + dr))
+    valid = (jnp.arange(smax) <= cur_index)[None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv)   # (B,H,rkv)
+    wv_b = p["wv_b"].astype(x.dtype).reshape(rkv, h, dv)
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat, wv_b)
+    out = ctx.reshape(b, 1, h * dv) @ p["wo"].astype(x.dtype)
+    return out, cache_ckv, cache_krope

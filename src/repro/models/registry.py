@@ -1,0 +1,36 @@
+"""Model API dispatch: one uniform interface per architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, lm
+
+__all__ = ["ModelAPI", "get_api"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    param_specs: Callable[[ModelConfig], Any]
+    train_loss: Callable[..., Any]
+    forward: Callable[..., Any]
+    decode_state_specs: Optional[Callable[..., Any]]
+    decode_step: Optional[Callable[..., Any]]
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "ssm":
+        return ModelAPI(hybrid.ssm_param_specs, hybrid.ssm_train_loss,
+                        hybrid.ssm_forward, hybrid.ssm_decode_state_specs,
+                        hybrid.ssm_decode_step)
+    if cfg.family == "hybrid":
+        return ModelAPI(hybrid.hybrid_param_specs, hybrid.hybrid_train_loss,
+                        hybrid.hybrid_forward,
+                        hybrid.hybrid_decode_state_specs,
+                        hybrid.hybrid_decode_step)
+    # dense / moe / vlm / audio all run through the unified LM
+    decode_specs = None if cfg.encoder_only else lm.decode_state_specs
+    decode_step = None if cfg.encoder_only else lm.decode_step
+    return ModelAPI(lm.param_specs, lm.train_loss, lm.forward,
+                    decode_specs, decode_step)

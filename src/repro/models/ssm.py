@@ -1,0 +1,293 @@
+"""State-space models: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+TPU adaptation notes (DESIGN.md §2):
+* Mamba-1's recurrence runs as a **chunked associative scan**: an outer
+  ``lax.scan`` over sequence chunks carries the (B, d, N) state, an inner
+  ``associative_scan`` parallelizes within the chunk — the inter-chunk state
+  hand-off is exactly the paper's serial column iteration (Algorithm 2: a
+  bounded carry buffer swept across columns), with the chunk playing the
+  column and the SSM state playing the carry.
+* Mamba-2 uses the matmul-rich SSD chunked form (MXU-friendly): intra-chunk
+  quadratic attention-like term + inter-chunk state recurrence. The
+  inter-chunk combine is a multi-operand accumulation with data-dependent
+  decay weights.
+
+The ``d_inner`` (Mamba-1) / head (Mamba-2) axis is tensor-parallel sharded,
+which keeps the scan working set ~= (B, chunk, d_local, N) per device.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, constrain, rms_norm
+from repro.models.common import scan as mscan
+
+__all__ = [
+    "mamba1_param_specs", "mamba1_train", "mamba1_decode",
+    "mamba1_init_state",
+    "mamba2_param_specs", "mamba2_train", "mamba2_decode",
+    "mamba2_init_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, S, C); w: (C, K); b: (C,)."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]] * w[:, i].astype(x.dtype)
+            for i in range(k))
+    return y + b.astype(x.dtype)
+
+
+def _conv_step(x_new: jnp.ndarray, conv_cache: jnp.ndarray, w: jnp.ndarray,
+               b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token conv using a (B, K-1, C) rolling cache."""
+    window = jnp.concatenate([conv_cache, x_new], axis=1)   # (B, K, C)
+    # same dtype + accumulation order as the train-path shifted-sum conv
+    k = window.shape[1]
+    y = sum(window[:, i] * w[:, i].astype(window.dtype) for i in range(k))
+    y = y + b.astype(x_new.dtype)
+    return y[:, None], window[:, 1:]
+
+
+def _ssm_assoc_op(l, r):
+    """Compose h = a*h_prev + b segments (diagonal A)."""
+    al, bl = l
+    ar, br = r
+    return ar * al, ar * bl + br
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def mamba1_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, n, k, dtr = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                        cfg.ssm_conv, cfg.dt_rank)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((di, k), ("ssm_inner", "conv"), scale=0.2),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "x2dt": ParamSpec((di, dtr), ("ssm_inner", None)),
+        "dt_proj": ParamSpec((dtr, di), (None, "ssm_inner")),
+        "dt_bias": ParamSpec((di,), ("ssm_inner",), init="ssm_dt"),
+        "wB": ParamSpec((di, n), ("ssm_inner", "ssm_state")),
+        "wC": ParamSpec((di, n), ("ssm_inner", "ssm_state")),
+        "A_log": ParamSpec((di, n), ("ssm_inner", "ssm_state"), init="ssm_a"),
+        "D": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def mamba1_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                      ) -> Dict[str, jnp.ndarray]:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def _mamba1_bcdt(x1: jnp.ndarray, p: dict):
+    """Data-dependent (dt, B, C) from the conv'd activation."""
+    dt = jax.nn.softplus(
+        (x1 @ p["x2dt"].astype(x1.dtype)) @ p["dt_proj"].astype(x1.dtype)
+        + p["dt_bias"].astype(x1.dtype)).astype(jnp.float32)
+    bb = (x1 @ p["wB"].astype(x1.dtype)).astype(jnp.float32)
+    cc = (x1 @ p["wC"].astype(x1.dtype)).astype(jnp.float32)
+    return dt, bb, cc
+
+
+def mamba1_train(x: jnp.ndarray, p: dict, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = constrain(x1, ("batch", None, "ssm_inner"))
+    x1 = jax.nn.silu(_causal_conv1d(x1, p["conv_w"], p["conv_b"]))
+    dt, bb, cc = _mamba1_bcdt(x1, p)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))          # (di, N)
+
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(dt), to_chunks(x1.astype(jnp.float32)),
+          to_chunks(bb), to_chunks(cc))
+
+    def chunk_fn(h, inp):
+        dt_c, x_c, b_c, c_c = inp                  # (B, c, di) / (B, c, N)
+        da = jnp.exp(dt_c[..., None] * a)          # (B, c, di, N)
+        dbx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+        acum, bcum = jax.lax.associative_scan(_ssm_assoc_op, (da, dbx),
+                                              axis=1)
+        h_t = acum * h[:, None] + bcum             # (B, c, di, N)
+        y_c = jnp.einsum("bcdn,bcn->bcd", h_t, c_c)
+        return h_t[:, -1], y_c
+
+    h0 = jnp.zeros((b, x1.shape[-1], cfg.ssm_state), jnp.float32)
+    _, ys = mscan(chunk_fn, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, -1)
+    y = y + p["D"].astype(jnp.float32) * x1.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    y = constrain(y, ("batch", None, "ssm_inner"))
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba1_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                  state: Dict[str, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, 1, D); O(1)-state single-token step."""
+    b = x.shape[0]
+    xz = x @ p["in_proj"].astype(x.dtype)
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1c, conv_cache = _conv_step(x1, state["conv"], p["conv_w"], p["conv_b"])
+    x1c = jax.nn.silu(x1c)
+    dt, bb, cc = _mamba1_bcdt(x1c, p)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0, :, None] * a)                       # (B, di, N)
+    dbx = (dt[:, 0] * x1c[:, 0].astype(jnp.float32))[..., None] * \
+        bb[:, 0, None, :]
+    h = da * state["h"] + dbx
+    y = jnp.einsum("bdn,bn->bd", h, cc[:, 0])
+    y = y + p["D"].astype(jnp.float32) * x1c[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"h": h, "conv": conv_cache}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+
+def mamba2_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    h = cfg.ssm_heads
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * n + h), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((conv_dim, k), ("ssm_inner", "conv"), scale=0.2),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="ssm_dt"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="ssm_dt"),
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "norm_w": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                      ) -> Dict[str, jnp.ndarray]:
+    hds = cfg.ssm_heads
+    return {
+        "h": jnp.zeros((batch, hds, cfg.ssm_state, cfg.ssm_head_dim),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def _mamba2_split(xbcdt: jnp.ndarray, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    xc = xbcdt[..., :di]
+    bc = xbcdt[..., di:di + n]
+    cc = xbcdt[..., di + n:di + 2 * n]
+    return xc, bc, cc
+
+
+def mamba2_train(x: jnp.ndarray, p: dict, cfg: ModelConfig) -> jnp.ndarray:
+    """SSD chunked form. x: (B, S, D)."""
+    b, s, d = x.shape
+    di, n, hn, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt_raw = proj[..., di + di + 2 * n:]                    # (B, S, H)
+    xbc = constrain(xbc, ("batch", None, "ssm_inner"))
+    xbc = jax.nn.silu(_causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+    xc, bc, cc = _mamba2_split(xbc, cfg)
+    xh = xc.reshape(b, s, hn, hp).astype(jnp.float32)       # (B,S,H,P)
+    bcf = bc.astype(jnp.float32)
+    ccf = cc.astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,)
+    dta = dt * a                                            # (B,S,H)
+
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(dta), to_chunks(dt), to_chunks(xh), to_chunks(bcf),
+          to_chunks(ccf))
+
+    def chunk_fn(h, inp):
+        dta_c, dt_c, x_c, b_c, c_c = inp
+        cum = jnp.cumsum(dta_c, axis=1)                      # (B,c,H)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j), i >= j
+        li = cum[:, :, None, :] - cum[:, None, :, :]         # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lmat = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", c_c, b_c)        # (B,c,c) shared
+        w = scores[..., None] * lmat * dt_c[:, None]         # (B,c,c,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, x_c)
+        # chunk state: decay-to-end weighted sum of B x^T
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)            # (B,c,H)
+        s_chunk = jnp.einsum("bch,bcn,bchp->bhnp",
+                             decay_end * dt_c, b_c, x_c)     # (B,H,N,P)
+        # inter-chunk contribution from the carried state
+        decay_in = jnp.exp(cum)                              # (B,c,H)
+        y_inter = jnp.einsum("bcn,bhnp,bch->bchp", c_c, h, decay_in)
+        h_next = jnp.exp(cum[:, -1])[..., None, None] * h + s_chunk
+        return h_next, y_intra + y_inter
+
+    h0 = jnp.zeros((b, hn, n, hp), jnp.float32)
+    _, ys = mscan(chunk_fn, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, hn, hp)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    y = constrain(y, ("batch", None, "ssm_inner"))
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                  state: Dict[str, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b = x.shape[0]
+    di, n, hn, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt_raw = proj[..., di + di + 2 * n:]
+    xbc, conv_cache = _conv_step(xbc, state["conv"], p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xc, bc, cc = _mamba2_split(xbc, cfg)
+    xh = xc[:, 0].reshape(b, hn, hp).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                     # (B,H)
+    h = da[..., None, None] * state["h"] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bc[:, 0].astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhnp->bhp", cc[:, 0].astype(jnp.float32), h)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype), {"h": h, "conv": conv_cache}

@@ -1,0 +1,88 @@
+"""AdamW from scratch (no optax in this environment), pytree-native.
+
+Optimizer state lives in the same sharding as the parameters (FSDP: m/v are
+sharded over (pod, data) along with the master weights — ZeRO style)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # ()
+    m: Any                     # pytree like params
+    v: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(tree)]
+    # multi-operand accumulation of per-tensor partials (log-depth tree sum)
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any,
+                 state: AdamWState, lr: Optional[jnp.ndarray] = None
+                 ) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step. ``lr`` overrides cfg.lr (for schedules)."""
+    if cfg.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr_t = cfg.lr if lr is None else lr
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr_t * (delta + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m,
+                                                 flat_v)]
+    new_p = jax.tree.unflatten(tdef, [n[0] for n in new])
+    new_m = jax.tree.unflatten(tdef, [n[1] for n in new])
+    new_v = jax.tree.unflatten(tdef, [n[2] for n in new])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr_t, jnp.float32)}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics

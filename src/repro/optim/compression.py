@@ -1,0 +1,80 @@
+"""int8 gradient compression with exact integer tree reduction.
+
+Cross-pod (DCN) gradient reduction is bandwidth-starved relative to in-pod
+ICI; compressing the pod-boundary reduction to int8 cuts DCN bytes 4x
+(vs fp32 master grads). The sum itself stays **exact** by the paper's
+Theorem: N_pods int8 payloads need 8 + ceil(log2 N_pods) bits, so an int32
+carrier admits up to 2^24 pods — ``core.accum.plan_gradient_reduction``
+checks this at build time. The quantization error is carried per-pod with
+error feedback (residual added to the next step's gradient), the standard
+convergence-preserving trick.
+
+The reduction over the pod axis uses the §7 radix-4 stage tree
+(:func:`repro.dist.collectives.tree_psum`).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accum import plan_gradient_reduction
+from repro.dist.collectives import tree_psum
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean",
+           "init_error_state"]
+
+
+def quantize_int8(g: jnp.ndarray, scale: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Symmetric per-tensor int8 with a *shared* (pre-agreed) scale."""
+    q = jnp.round(g.astype(jnp.float32) / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params: Any, n_shards: int) -> Any:
+    """Per-shard error-feedback residual: leading (n_shards,) axis, sharded
+    over the reduction axis."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_shards,) + p.shape, jnp.float32), params)
+
+
+def compressed_psum_mean(grads: Any, err: Any, sub_axes: Sequence[str],
+                         n_shards: int) -> Tuple[Any, Any]:
+    """Inside shard_map: mean-reduce ``grads`` over the (factored) reduction
+    axis with int8 payloads, exact integer accumulation, and error feedback.
+
+    Args:
+      grads: this shard's gradient pytree (fp32/bf16 leaves).
+      err:   this shard's residual pytree (same shapes, fp32).
+      sub_axes: radix-4 stage axes from make_tree_mesh.
+      n_shards: total shards being reduced (for exactness check + mean).
+
+    Returns (mean_grads fp32, new_err).
+    """
+    plan = plan_gradient_reduction(n_shards, payload_bits=8, acc_bits=32)
+    assert plan.spill_bits <= 32
+
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        # agree on one scale across shards (max |g| anywhere / 127)
+        amax = jnp.max(jnp.abs(g32))
+        for ax in sub_axes:
+            amax = jax.lax.pmax(amax, ax)
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        q = quantize_int8(g32, scale)
+        new_e = g32 - dequantize_int8(q, scale)      # residual feedback
+        # exact integer multi-operand sum (int32 carrier; Theorem-checked)
+        total = tree_psum(q.astype(jnp.int32), sub_axes)
+        return dequantize_int8(total, scale) / n_shards, new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in outs]),
+            jax.tree.unflatten(tdef, [o[1] for o in outs]))

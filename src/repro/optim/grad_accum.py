@@ -1,0 +1,56 @@
+"""Gradient accumulation — the paper's *serial* multi-operand adder, applied
+to microbatches.
+
+Lemma 3 says small-serial beats big-parallel once R_A > R_T; the training
+analogue is running each replica over G microbatches (G "clocks" through one
+small unit) instead of widening data-parallelism (more "area"). The
+accumulation loop is literally Algorithm-2: a single fp32 carry buffer (the
+running gradient) swept across microbatch "columns", drained into the
+optimizer at the end. ``core.planner.plan_training_execution`` decides G.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["accumulated_value_and_grad"]
+
+
+def accumulated_value_and_grad(loss_fn: Callable, num_micro: int):
+    """Wrap ``loss_fn(params, microbatch)`` into an accumulated
+    value-and-grad over a leading microbatch axis.
+
+    Args:
+      loss_fn: scalar loss of (params, batch-slice).
+      num_micro: G — microbatches per optimizer step.
+
+    Returns:
+      fn(params, stacked_batch) -> (mean_loss, mean_grads); stacked_batch
+      leaves have leading dim G. Accumulation is fp32 regardless of the
+      compute dtype (the Theorem's carry-width discipline: the carry buffer
+      must be wider than the operands).
+    """
+    vg = jax.value_and_grad(loss_fn)
+
+    def fn(params, stacked_batch) -> Tuple[jnp.ndarray, Any]:
+        if num_micro == 1:
+            batch = jax.tree.map(lambda x: x[0], stacked_batch)
+            return vg(params, batch)
+
+        def body(carry, micro):
+            acc_loss, acc_g = carry
+            loss, grads = vg(params, micro)
+            acc_g = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+            return (acc_loss + loss.astype(jnp.float32), acc_g), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), stacked_batch)
+        inv = 1.0 / num_micro
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    return fn

@@ -1,0 +1,319 @@
+"""Roofline analysis from AOT-compiled artifacts (no hardware required).
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+
+    compute    = HLO_FLOPs        / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes        / (chips * HBM_BW)
+    collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. XLA reports
+*per-device program* numbers for an SPMD module, so they are divided by
+PEAK/HBM of ONE chip (the formula above divides the *global* totals by the
+chip count — identical, both forms are kept in the report).
+
+collective_bytes is not in cost_analysis: we parse the compiled HLO text and
+sum the operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (including the -start async forms; -done
+forms are skipped so nothing is double-counted).
+
+Hardware model (TPU v5e, per task sheet):
+    197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Iterable, Optional
+
+__all__ = ["HW", "V5E", "collective_bytes", "collective_breakdown",
+           "roofline_report", "model_flops", "fmt_seconds",
+           "extract_cost", "count_hlo_ops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float          # per-chip, bf16
+    hbm_bw: float              # per-chip bytes/s
+    ici_bw: float              # per-link bytes/s
+    hbm_per_chip: float        # bytes
+
+
+V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+         hbm_per_chip=16e9)
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# one full shape token, e.g. bf16[256,4096]{1,0} or f32[] or (tuple omitted)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_OP_LINE_RE = re.compile(
+    r"=\s*(?P<result>\(?[^=]*?)\s*(?P<op>[a-z][a-z0-9-]*)\(")
+_GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _collective_kind(op: str) -> Optional[str]:
+    for c in _COLLECTIVES:
+        if op == c or op == c + "-start":
+            return c
+    return None
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_PAIR_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def _parse_collective_line(line: str):
+    """(kind, operand_bytes, wire_bytes) for a collective HLO line, or None.
+
+    Compiled HLO prints operands as %names (no inline shapes), so sizes are
+    derived from the RESULT shape(s) + replica group size:
+      all-gather:     operand = result / g          wire = result*(g-1)/g
+      reduce-scatter: operand = result * g (sync)   wire = operand*(g-1)/g
+      all-reduce:     operand = result              wire = 2*operand*(g-1)/g
+      all-to-all:     operand = result              wire = operand*(g-1)/g
+      collective-permute: operand = result          wire = operand
+    -start tuple results hold (operand, dest) buffers: use max for the
+    "big side", min for the small side. -done/update forms are skipped.
+    """
+    m = _OP_LINE_RE.search(line)
+    if not m:
+        return None
+    kind = _collective_kind(m.group("op"))
+    if kind is None:
+        return None
+    shapes = [_shape_bytes(d, dims)
+              for d, dims in _SHAPE_RE.findall(m.group("result"))]
+    shapes = [s for s in shapes if s > 0]
+    if not shapes:
+        return None
+    g = _group_size(line)
+    big, small = max(shapes), min(shapes)
+    if kind == "all-gather":
+        result = big
+        operand = small if len(shapes) > 1 and small < big else result / g
+        wire = result * (g - 1) / g
+    elif kind == "reduce-scatter":
+        operand = big if len(shapes) > 1 else big * g
+        wire = operand * (g - 1) / g
+    elif kind == "all-reduce":
+        operand = big
+        wire = 2.0 * operand * (g - 1) / g
+    elif kind in ("all-to-all", "ragged-all-to-all"):
+        operand = big
+        wire = operand * (g - 1) / g
+    else:  # collective-permute
+        operand = big
+        wire = float(operand)
+    return kind, float(operand), float(wire)
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|branch_computations)="
+                       r"\{?%([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str):
+    """{name: [lines]} plus the ENTRY computation name."""
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+def collective_breakdown(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Trip-count-aware collective totals for the per-device program.
+
+    XLA keeps ``lax.scan`` as a while op whose body appears ONCE in the
+    text but executes ``known_trip_count`` times; a flat line scan would
+    undercount loop-borne collectives by the layer/chunk counts. We split
+    the module into computations, attribute collectives locally, then
+    expand the call tree from ENTRY with while-trip multipliers.
+
+    Returns {kind: {"bytes": operand_bytes (task-sheet formula),
+    "wire_bytes": ring-model on-wire bytes, "count": executions}}.
+    """
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:                             # fallback: flat scan
+        comps = {"<all>": [l.strip() for l in hlo_text.splitlines()]}
+        entry = "<all>"
+
+    local: Dict[str, Dict[str, Dict[str, float]]] = {}
+    children: Dict[str, list] = {}
+    for name, lines in comps.items():
+        loc: Dict[str, Dict[str, float]] = {}
+        kids = []
+        for line in lines:
+            if "while(" in line:
+                b = _WHILE_BODY_RE.search(line)
+                c = _WHILE_COND_RE.search(line)
+                if b:
+                    t = _TRIP_RE.search(line)
+                    trips = int(t.group(1)) if t else 1
+                    kids.append((b.group(1), trips))      # body x trips
+                    if c:
+                        kids.append((c.group(1), trips + 1))
+                    continue
+            if any(c in line for c in _COLLECTIVES):
+                parsed = _parse_collective_line(line)
+                if parsed is not None:
+                    kind, operand, wire = parsed
+                    rec = loc.setdefault(
+                        kind, {"bytes": 0.0, "wire_bytes": 0.0, "count": 0})
+                    rec["bytes"] += operand
+                    rec["wire_bytes"] += wire
+                    rec["count"] += 1
+                    continue
+            for callee in _CALLS_RE.findall(line):
+                kids.append((callee, 1))
+        local[name] = loc
+        children[name] = kids
+
+    memo: Dict[str, Dict[str, Dict[str, float]]] = {}
+
+    def total(name: str) -> Dict[str, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {}                       # cycle guard (no real cycles)
+        acc = {k: dict(v) for k, v in local.get(name, {}).items()}
+        for child, mult in children.get(name, ()):  # noqa: B007
+            if child not in local:
+                continue
+            sub = total(child)
+            for kind, v in sub.items():
+                rec = acc.setdefault(
+                    kind, {"bytes": 0.0, "wire_bytes": 0.0, "count": 0})
+                rec["bytes"] += mult * v["bytes"]
+                rec["wire_bytes"] += mult * v["wire_bytes"]
+                rec["count"] += mult * v["count"]
+        memo[name] = acc
+        return acc
+
+    return total(entry)
+
+
+def collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_breakdown(hlo_text).values())
+
+
+def count_hlo_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"=\s*[a-z0-9]+\[[0-9,]*\](?:\{{[^}}]*\}})?\s*"
+                          rf"{re.escape(opname)}\(", hlo_text))
+
+
+# ---------------------------------------------------------------------------
+# cost_analysis plumbing
+# ---------------------------------------------------------------------------
+
+def extract_cost(compiled) -> Dict[str, float]:
+    """flops / bytes from compiled.cost_analysis() across jax versions
+    (dict vs list-of-dict)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes": byts, "raw_keys": len(ca)}
+
+
+# ---------------------------------------------------------------------------
+# roofline report
+# ---------------------------------------------------------------------------
+
+def model_flops(n_params: int, n_tokens: int, kind: str,
+                n_active: Optional[int] = None) -> float:
+    """Useful-work FLOPs: 6*N*D for a train step (fwd+bwd), 2*N*D for
+    forward-only (prefill/decode). MoE: pass activated params as n_active."""
+    n = n_active if n_active is not None else n_params
+    per_tok = 6.0 * n if kind == "train" else 2.0 * n
+    return per_tok * n_tokens
+
+
+def roofline_report(*, flops_per_device: float, bytes_per_device: float,
+                    coll_bytes_per_device: float, chips: int,
+                    hw: HW = V5E, model_flops_total: float = 0.0
+                    ) -> Dict[str, Any]:
+    """Three roofline terms (seconds) + dominant + usefulness ratio.
+
+    cost_analysis numbers are per-device-program; equivalently
+    global_total / chips. Both views divide by one chip's peak.
+    """
+    t_compute = flops_per_device / hw.peak_flops
+    t_memory = bytes_per_device / hw.hbm_bw
+    t_coll = coll_bytes_per_device / hw.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    useful = (model_flops_total / (flops_per_device * chips)
+              if flops_per_device else 0.0)
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": bound,
+        # fraction of the bound the MXU would be busy: perfect overlap model
+        "compute_fraction_of_bound": (t_compute / bound) if bound else 0.0,
+        "model_flops": model_flops_total,
+        "hlo_flops_global": flops_per_device * chips,
+        "useful_flops_ratio": useful,
+        "chips": chips,
+        "hw": hw.name,
+    }
+
+
+def fmt_seconds(s: float) -> str:
+    if s == 0:
+        return "0"
+    if s < 1e-3:
+        return f"{s * 1e6:.1f}us"
+    if s < 1:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s:.2f}s"

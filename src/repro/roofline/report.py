@@ -1,0 +1,108 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+from repro.roofline.analysis import fmt_seconds
+
+__all__ = ["load_records", "dryrun_table", "roofline_table", "main"]
+
+
+def load_records(out_dir: str) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _gb(x: float) -> str:
+    return f"{x / 1e9:.2f}"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compile s | resident GB/dev | HLO temp "
+        "GB/dev | collectives (count: ag/ar/rs/a2a/cp) | coll GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        c = r["collectives"]
+        counts = "/".join(str(int(c.get(k, {}).get("count", 0))) for k in (
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute"))
+        temp = r["memory_analysis"].get("temp_size") or 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_s']} | {_gb(r['resident_bytes_per_device'])} "
+            f"| {_gb(temp)} | {counts} "
+            f"| {_gb(r['collective_bytes_per_device'])} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[Dict], single_pod_only: bool = True) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "bound | MODEL_FLOPS | HLO/MODEL | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if single_pod_only and r["multi_pod"]:
+            continue
+        ro = r["roofline"]
+        ratio = (ro["hlo_flops_global"] / ro["model_flops"]
+                 if ro["model_flops"] else float("nan"))
+        note = _bottleneck_note(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {fmt_seconds(ro['compute_s'])} "
+            f"| {fmt_seconds(ro['memory_s'])} "
+            f"| {fmt_seconds(ro['collective_s'])} "
+            f"| {ro['dominant']} | {fmt_seconds(ro['bound_s'])} "
+            f"| {ro['model_flops']:.2e} | {ratio:.2f} | {note} |")
+    return "\n".join(lines)
+
+
+def _bottleneck_note(r: Dict) -> str:
+    ro = r["roofline"]
+    dom = ro["dominant"]
+    if dom == "collective":
+        big = max(r["collectives"].items(),
+                  key=lambda kv: kv[1]["bytes"])[0]
+        return f"{big} dominates wire traffic"
+    if dom == "memory":
+        if r["kind"] == "decode":
+            return "weight+KV streaming (decode is bandwidth-bound)"
+        return "activation traffic (pre-fusion HLO bytes)"
+    return "MXU-bound"
+
+
+def summarize(recs: List[Dict]) -> str:
+    n_single = sum(not r["multi_pod"] for r in recs)
+    n_multi = sum(bool(r["multi_pod"]) for r in recs)
+    fits = sum(bool(r["fits_hbm"]) for r in recs)
+    return (f"{len(recs)} compiled cells ({n_single} single-pod 16x16, "
+            f"{n_multi} multi-pod 2x16x16); resident state fits 16 GB HBM "
+            f"on {fits}/{len(recs)}.")
+
+
+def main(argv=None) -> int:
+    out_dir = (argv or sys.argv[1:] or ["results/dryrun"])[0]
+    recs = load_records(out_dir)
+    print("## Dry-run summary\n")
+    print(summarize(recs) + "\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16, per-device terms)\n")
+    print(roofline_table(recs))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

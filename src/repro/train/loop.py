@@ -1,0 +1,112 @@
+"""Fault-tolerant training loop driver.
+
+Wires together: deterministic data pipeline -> (possibly accumulated /
+pod-compressed) train step -> async checkpointing -> heartbeat/straggler
+monitoring -> elastic restart planning. The loop is pure Python around a
+jit'd step, so every policy here is unit-testable without hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step,
+                                   restore_checkpoint)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import HostDataConfig, host_batch
+from repro.ft.failures import (FailureEvent, HeartbeatMonitor,
+                               StragglerDetector)
+
+__all__ = ["LoopConfig", "TrainLoop", "run_training"]
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    heartbeat_timeout: float = 300.0
+    straggler_factor: float = 1.5
+    log_every: int = 10
+    grad_accum: int = 1
+    seed: int = 17
+
+
+class TrainLoop:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 loop_cfg: LoopConfig, step_fn: Callable,
+                 state: Dict[str, Any],
+                 data_cfg: Optional[HostDataConfig] = None,
+                 state_shardings: Optional[Any] = None):
+        self.cfg = cfg
+        self.shape = shape
+        self.loop_cfg = loop_cfg
+        self.step_fn = step_fn
+        self.state = state
+        self.data_cfg = data_cfg or HostDataConfig(loop_cfg.seed, 1, 0)
+        self.state_shardings = state_shardings
+        self.ckpt = (AsyncCheckpointer(loop_cfg.ckpt_dir, loop_cfg.keep_ckpts)
+                     if loop_cfg.ckpt_dir else None)
+        self.hb = HeartbeatMonitor(self.data_cfg.num_hosts,
+                                   loop_cfg.heartbeat_timeout)
+        self.straggle = StragglerDetector(
+            straggler_factor=loop_cfg.straggler_factor)
+        self.metrics_log: List[Dict[str, float]] = []
+        self.events: List[FailureEvent] = []
+
+    # -- restart support ------------------------------------------------------
+    def maybe_restore(self) -> int:
+        """Resume from the newest committed checkpoint; returns start step."""
+        if not self.loop_cfg.ckpt_dir:
+            return 0
+        step = latest_step(self.loop_cfg.ckpt_dir)
+        if step is None:
+            return 0
+        self.state = restore_checkpoint(self.loop_cfg.ckpt_dir, step,
+                                        self.state, self.state_shardings)
+        return step
+
+    def _batch_for(self, step: int):
+        if self.loop_cfg.grad_accum > 1:
+            micros = [host_batch(self.cfg, self.shape, self.data_cfg,
+                                 step * self.loop_cfg.grad_accum + g)
+                      for g in range(self.loop_cfg.grad_accum)]
+            return jax.tree.map(lambda *xs: np.stack(xs), *micros)
+        return host_batch(self.cfg, self.shape, self.data_cfg, step)
+
+    # -- main -----------------------------------------------------------------
+    def run(self, start_step: Optional[int] = None) -> Dict[str, Any]:
+        step = self.maybe_restore() if start_step is None else start_step
+        while step < self.loop_cfg.total_steps:
+            t0 = time.monotonic()
+            batch = self._batch_for(step)
+            self.state, metrics = self.step_fn(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.monotonic() - t0
+            self.hb.beat(self.data_cfg.host_index)
+            self.straggle.record(self.data_cfg.host_index, dt)
+            self.events.extend(self.hb.check(step))
+            self.events.extend(self.straggle.check(step))
+            step += 1
+            if step % self.loop_cfg.log_every == 0 or \
+                    step == self.loop_cfg.total_steps:
+                self.metrics_log.append(
+                    {"step": step, "time_s": dt,
+                     **{k: float(np.asarray(v)) for k, v in metrics.items()}})
+            if self.ckpt and step % self.loop_cfg.ckpt_every == 0:
+                tree = dict(self.state)
+                self.ckpt.save(step, tree)
+        if self.ckpt:
+            self.ckpt.save(self.loop_cfg.total_steps, dict(self.state))
+            self.ckpt.wait()
+        return self.state
+
+
+def run_training(cfg: ModelConfig, shape: ShapeConfig, loop_cfg: LoopConfig,
+                 step_fn: Callable, state: Dict[str, Any], **kw):
+    return TrainLoop(cfg, shape, loop_cfg, step_fn, state, **kw).run()

@@ -1,0 +1,141 @@
+"""Property + example tests for the carry theory (paper §2, Tables 1-3)."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import carry as ct
+
+BASES = st.integers(min_value=2, max_value=17)
+OPERANDS = st.integers(min_value=2, max_value=300)
+COLS = st.integers(min_value=1, max_value=12)
+
+
+# ------------------------------------------------------------------ lemma 1
+@given(k=BASES)
+def test_lemma1(k):
+    c, s = ct.lemma1_max_carry_sum(k)
+    z = 2 * (k - 1)
+    assert z == c * k + s
+    assert c == 1 and s == k - 2
+
+
+# ------------------------------------------------------------------ lemma 2
+@given(k=BASES, n=st.integers(min_value=2, max_value=200))
+def test_lemma2_carry_stall(k, n):
+    """C increments with each extra max-valued row except when N = nk + 1."""
+    c_n = ct.exact_max_carry_1col(n, k)
+    c_next = ct.exact_max_carry_1col(n + 1, k)
+    if n % k == 0:  # next row index N+1 = nk+1 -> carry stalls
+        assert c_next == c_n
+    else:
+        assert c_next == c_n + 1
+
+
+# ------------------------------------------------------------------ theorem
+@given(k=BASES, n=OPERANDS)
+def test_theorem_upper_bound_single_column(k, n):
+    c = ct.exact_max_carry_1col(n, k)
+    assert c <= ct.carry_upper_bound(n)
+    assert c == ct.tight_carry_bound(n, k)
+
+
+@given(k=BASES, n=OPERANDS, m=COLS)
+def test_theorem_upper_bound_multicolumn(k, n, m):
+    c, s = ct.max_carry_multicolumn(n, m, k)
+    assert c * (k ** m) + s == ct.max_total_sum(n, m, k)
+    assert c <= ct.carry_upper_bound(n)
+    assert 0 <= s < k ** m
+
+
+@given(k=BASES, n=OPERANDS, m=COLS, data=st.data())
+def test_carry_bound_holds_for_random_operands(k, n, m, data):
+    """Brute force: column-by-column addition of random operands never
+    produces a running carry above N-1 (the theorem's induction claim)."""
+    ops = data.draw(st.lists(st.integers(0, k ** m - 1), min_size=n, max_size=n))
+    rows = [ct.digits(x, k) + [0] * m for x in ops]
+    carry = 0
+    for i in range(m):
+        total = sum(r[i] for r in rows) + carry
+        carry = total // k
+        assert carry <= ct.carry_upper_bound(n)
+
+
+# ------------------------------------------------------------------ corollary
+@given(k=BASES, n=OPERANDS, m=COLS)
+def test_result_width(k, n, m):
+    exact = ct.result_digits(n, m, k)
+    bound = m + ct.carry_digits_bound(n, k)
+    assert exact <= bound
+    # and the bound is achievable-width: max total fits in `bound` digits
+    assert ct.max_total_sum(n, m, k) < k ** bound
+
+
+@given(k=BASES, n=OPERANDS, m=COLS, data=st.data())
+def test_random_sums_fit_exact_width(k, n, m, data):
+    ops = data.draw(st.lists(st.integers(0, k ** m - 1), min_size=n, max_size=n))
+    width = ct.result_digits(n, m, k)
+    assert sum(ops) < k ** width
+
+
+# ------------------------------------------------------------------ tables
+@pytest.mark.parametrize("k,n,c_expected", [
+    (10, 2, 1), (10, 4, 3), (16, 10, 9), (16, 15, 14),   # Table 1a (N<k)
+    (2, 5, 2), (2, 7, 3), (10, 11, 9), (10, 18, 16),     # Table 1b (N>k)
+    (16, 20, 18), (16, 33, 30),
+    (2, 4, 2), (2, 12, 6), (10, 20, 18), (10, 50, 45),   # Table 1c (N=nk)
+    (16, 16, 15), (16, 48, 45),
+])
+def test_table1(k, n, c_expected):
+    assert ct.exact_max_carry_1col(n, k) == c_expected
+
+
+@pytest.mark.parametrize("k,n,m,c,s", [
+    (2, 2, 3, 1, 6), (2, 4, 3, 3, 4), (2, 7, 3, 6, 1), (2, 7, 5, 6, 25),
+    (2, 10, 3, 8, 6), (2, 64, 3, 56, 0),
+    (10, 2, 3, 1, 998), (10, 4, 3, 3, 996), (10, 10, 3, 9, 990),
+    (10, 15, 4, 14, 9985), (10, 1112, 3, 1110, 888),
+    (16, 2, 3, 1, 0xFFE), (16, 4, 3, 3, 0xFFC), (16, 18, 3, 17, 0xFEE),
+    (16, 65520, 2, 65264, 0x10),
+])
+def test_table2(k, n, m, c, s):
+    assert ct.max_carry_multicolumn(n, m, k) == (c, s)
+
+
+def test_table3_column_transition():
+    assert ct.column_transition_delta(3, 4, 2) == 3
+    assert ct.column_transition_N(3, 4, 2) == 19
+    # verify by brute force: exact result width first exceeds 7 bits at N=19
+    assert ct.result_digits(18, 3, 2) == 7
+    assert ct.result_digits(19, 3, 2) == 8
+
+
+@given(k=st.integers(2, 10), m=st.integers(1, 6), p=st.integers(1, 6))
+@settings(max_examples=60)
+def test_column_transition_is_exact(k, m, p):
+    """N* = k^p + delta is the FIRST N past k^p where the result width of an
+    N-operand M-column addition grows by one digit."""
+    n_star = ct.column_transition_N(m, p, k)
+    width_at = ct.result_digits(n_star, m, k)
+    width_before = ct.result_digits(n_star - 1, m, k)
+    assert width_at == width_before + 1
+    # no earlier growth between k^p and n_star
+    base_width = ct.result_digits(k ** p, m, k)
+    for n in range(k ** p, n_star):
+        assert ct.result_digits(n, m, k) == base_width
+
+
+# ------------------------------------------------------------------ budget
+@given(n=OPERANDS, m=COLS)
+def test_carry_budget_consistency(n, m):
+    b = ct.carry_budget(n, m, 2)
+    assert b.carry_value_exact <= b.carry_value_bound
+    assert b.result_digits <= b.result_digits_bound
+    assert b.fits(b.result_digits)
+    assert not b.fits(b.result_digits - 1)
+
+
+@given(x=st.integers(0, 10 ** 24), k=BASES)
+def test_digits_roundtrip(x, k):
+    assert ct.from_digits(ct.digits(x, k), k) == x

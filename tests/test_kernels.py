@@ -1,0 +1,153 @@
+"""Pallas kernel validation: interpret=True vs ref.py oracles, swept over
+shapes and dtypes (per-kernel allclose, exactness for integer paths)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accum import plan_dot_accumulation
+from repro.kernels import ref
+from repro.kernels.bitplane_add import bitplane_add_pallas
+from repro.kernels.moa_reduce import moa_reduce_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+
+# ---------------------------------------------------------------- moa_reduce
+@pytest.mark.parametrize("n,rows,cols", [
+    (2, 8, 128), (4, 64, 128), (7, 33, 257), (16, 128, 384), (33, 16, 130),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_moa_reduce_shapes_dtypes(n, rows, cols, dtype):
+    rng = np.random.default_rng(n * rows + cols)
+    if dtype == jnp.int32:
+        x = jnp.asarray(rng.integers(-1000, 1000, (n, rows, cols)), dtype)
+        acc = jnp.int32
+    else:
+        x = jnp.asarray(rng.standard_normal((n, rows, cols)), dtype)
+        acc = jnp.float32
+    got = moa_reduce_pallas(x, bm=64, bn=128, acc_dtype=acc, interpret=True)
+    want = ref.moa_reduce_ref(x, acc_dtype=acc)
+    if dtype == jnp.int32:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=2e-6, atol=1e-5)
+
+
+def test_moa_reduce_operand_blocking():
+    """bk < N forces cross-grid-step accumulation in the output tile."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((24, 32, 256)), jnp.float32)
+    got = moa_reduce_pallas(x, bm=32, bn=128, bk=5, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.moa_reduce_ref(x)),
+                               rtol=2e-6, atol=1e-5)
+
+
+def test_moa_reduce_bf16_accumulates_fp32():
+    """bf16 inputs, fp32 accumulation: the fused kernel must not lose the
+    small terms that a bf16 chain would (the accumulator-width story)."""
+    n = 256
+    x = jnp.concatenate([jnp.full((1, 8, 128), 1024.0, jnp.bfloat16),
+                         jnp.full((n - 1, 8, 128), 0.25, jnp.bfloat16)])
+    got = moa_reduce_pallas(x, acc_dtype=jnp.float32, out_dtype=jnp.float32,
+                            interpret=True)
+    want = 1024.0 + 0.25 * (n - 1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+# ------------------------------------------------------------- bitplane_add
+@pytest.mark.parametrize("n,m_bits,batch", [
+    (4, 4, 64), (4, 16, 256), (16, 16, 128), (3, 8, 33), (64, 20, 512),
+])
+def test_bitplane_add_exact(n, m_bits, batch):
+    rng = np.random.default_rng(n + m_bits)
+    x = jnp.asarray(rng.integers(0, 2 ** m_bits, (n, batch)), jnp.int32)
+    got = bitplane_add_pallas(x, m_bits=m_bits, bb=128, interpret=True)
+    want = ref.bitplane_add_ref(x, m_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitplane_add_paper_example():
+    """Fig 12 operands, vectorized across a batch of identical problems."""
+    x = jnp.asarray([[0xA], [0xF], [0x1], [0x2]], jnp.int32)
+    x = jnp.tile(x, (1, 256))
+    got = bitplane_add_pallas(x, m_bits=4, interpret=True)
+    assert int(got[0]) == 0x1C and int(got[-1]) == 0x1C
+
+
+def test_bitplane_add_width_guard():
+    with pytest.raises(ValueError):
+        bitplane_add_pallas(jnp.zeros((8, 4), jnp.int32), m_bits=30,
+                            interpret=True)
+
+
+# ------------------------------------------------------------- quant_matmul
+@pytest.mark.parametrize("m,k,n", [
+    (8, 128, 128), (32, 384, 256), (130, 257, 65), (256, 1024, 512),
+])
+def test_quant_matmul_exact(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    x = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+    got = quant_matmul_pallas(x, w, bm=64, bn=64, interpret=True)
+    want = ref.quant_matmul_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quant_matmul_plan_is_binding():
+    """The Theorem's block bound is exact: with an emulated narrow
+    accumulator, max_block terms never overflow but max_block+1 can."""
+    plan = plan_dot_accumulation(1024, acc_bits=18, align=1)
+    # worst-case products: (-128)*(-128) = 2^14 each
+    worst = 2 ** 14
+    assert plan.max_block * worst <= 2 ** 17 - 1 + 1  # fits 18-bit signed
+    assert (plan.max_block + 1) * worst > 2 ** 17     # would overflow
+
+
+def test_quant_matmul_worst_case_no_overflow():
+    """All-(-128) inputs at K=8192: partials stay within int32 as planned."""
+    k = 8192
+    x = jnp.full((4, k), -128, jnp.int8)
+    w = jnp.full((k, 4), -128, jnp.int8)
+    got = quant_matmul_pallas(x, w, interpret=True)
+    assert int(got[0, 0]) == k * 128 * 128
+    plan = plan_dot_accumulation(k, acc_bits=32)
+    assert plan.exact
+
+
+# ----------------------------------------------------------- flash attention
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,hd,dt", [
+    (2, 256, 4, 2, 64, jnp.float32),      # GQA rep=2
+    (1, 128, 8, 8, 128, jnp.float32),     # MHA, aligned head dim
+    (2, 256, 6, 2, 80, jnp.bfloat16),     # rep=3, padded head dim (80->128)
+    (1, 512, 4, 1, 128, jnp.float32),     # MQA, multi-block q and k
+])
+def test_flash_attention_matches_ref(b, s, hq, hkv, hd, dt):
+    rng = np.random.default_rng(hash((b, s, hq)) % 2 ** 31)
+    q = jnp.asarray(rng.standard_normal((b, s, hq, hd)), dt)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), dt)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), dt)
+    out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    ref_out = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_non_causal_and_blocks():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    for bq, bk in ((64, 128), (128, 64), (256, 256)):
+        out = flash_attention_pallas(q, k, v, causal=False, block_q=bq,
+                                     block_k=bk, interpret=True)
+        ref_out = flash_attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                                   rtol=2e-5, atol=2e-5)

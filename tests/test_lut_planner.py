@@ -1,0 +1,146 @@
+"""LUT netlist, gate-cost model, reconfiguration plan, and Lemma 3 tests."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import lut, planner, reconfig
+from repro.core import accum
+
+
+# ------------------------------------------------------------ LUT (Figs 3/4)
+def test_lut_table_is_popcount():
+    for i in range(16):
+        assert lut.LUT4_TABLE[i] == bin(i).count("1")
+
+
+def test_netlist_equals_table():
+    """The Fig-4 gate netlist computes exactly the Fig-3 I/O map."""
+    bits = np.array(list(itertools.product([0, 1], repeat=4)), np.int32)
+    out = lut.lut4_netlist(jnp.asarray(bits[:, ::-1]))  # b0..b3 order-free
+    np.testing.assert_array_equal(np.asarray(out), bits.sum(axis=1))
+
+
+@given(st.integers(1, 64), st.integers(0, 2 ** 31))
+@settings(max_examples=40, deadline=None)
+def test_popcount_tree(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(8, n)).astype(np.int32)
+    out = lut.popcount_tree(jnp.asarray(bits))
+    np.testing.assert_array_equal(np.asarray(out), bits.sum(axis=-1))
+
+
+# ------------------------------------------------------------ §10 cost model
+def test_gate_cost_anchors():
+    assert lut.LUT_DELAY_GATES == 4 and lut.LUT_AREA_GATES == 25
+    assert lut.CLA4_DELAY_GATES == 9 and lut.CLA4_AREA_GATES == 50
+
+
+def test_cla_slower_for_many_operands():
+    """Fig 16/18: LUT adder wins delay and area once N >= 16."""
+    adv16 = lut.performance_advantage(16, 16)
+    assert adv16 > 1.0
+    cla = lut.cla_tree_cost(16, 16)
+    l = lut.lut_tree_cost(16, 16)
+    assert l.area_gates < cla.area_gates * 1.6  # area competitive at scale
+
+
+def test_cla_faster_for_two_operands():
+    """Fig 16: the LUT-based structure is slower when N < 4."""
+    assert lut.cla_adder_cost(4).delay_gates < \
+        lut.lut_parallel_adder_cost(2, 4).delay_gates
+
+
+# ------------------------------------------------------------ §7 plan
+@given(st.integers(2, 1024), st.integers(1, 24))
+@settings(max_examples=80)
+def test_reconfig_plan_structure(n, m):
+    plan = reconfig.plan_reconfig(n, m)
+    assert len(plan.levels) == reconfig.radix_stages(n)
+    # each level reduces by 4x (ceil)
+    for lv in plan.levels:
+        assert lv.sum_modules == -(-lv.inputs // 4)
+    assert plan.carry_value_bound == n - 1
+    assert plan.total_modules >= plan.levels[0].sum_modules
+    assert plan.serial_clocks >= plan.latency_stages
+
+
+def test_plan_16x16_matches_paper():
+    """§7: 16x16 needs U1..U5 (5 sum modules) + carry adders (U6, U7 role)."""
+    plan = reconfig.plan_reconfig(16, 16)
+    assert [l.sum_modules for l in plan.levels] == [4, 1]
+    assert plan.carry_modules >= 1
+    assert plan.result_bits == 20
+
+
+# ------------------------------------------------------------ Lemma 3
+def test_lemma3_tilt_condition():
+    ser = planner.UnitSpec(area=1, clocks_per_op=10)
+    par = planner.UnitSpec(area=15, clocks_per_op=1)
+    assert planner.serial_beats_parallel(ser, par)       # R_A=15 > R_T=10
+    par2 = planner.UnitSpec(area=8, clocks_per_op=1)
+    assert not planner.serial_beats_parallel(ser, par2)  # R_A=8 < R_T=10
+
+
+def test_fig9_curves():
+    """R_T = 17: serial wins at R_A = 20, loses at R_A = 12 (Fig 9)."""
+    s20, p20 = planner.throughput_curves(r_area=20, r_time=17, max_clocks=170)
+    assert s20[-1] > p20[-1]
+    s12, p12 = planner.throughput_curves(r_area=12, r_time=17, max_clocks=170)
+    assert s12[-1] < p12[-1]
+
+
+def test_paper_section6_example():
+    """§6 numeric example: T_s=10, T_p=1, R_A=15 -> in 10 clocks the serial
+    set completes 15 ops vs 10 for the parallel unit."""
+    ser = planner.UnitSpec(area=1, clocks_per_op=10)
+    par = planner.UnitSpec(area=15, clocks_per_op=1)
+    assert planner.throughput(ser, 15, 10) == 15
+    assert planner.throughput(par, 15, 10) == 10
+
+
+def test_training_plan_modes():
+    p = planner.plan_training_execution(
+        global_batch=256, chips=256,
+        chips_per_replica_parallel=64, chips_per_replica_serial=4,
+        step_time_parallel=1.0, step_time_serial=8.0)
+    assert p.mode == "serial-leaning"     # R_A = 16 > R_T = 8
+    assert p.dp_replicas == 64
+    p2 = planner.plan_training_execution(
+        global_batch=256, chips=256,
+        chips_per_replica_parallel=64, chips_per_replica_serial=32,
+        step_time_parallel=1.0, step_time_serial=8.0)
+    assert p2.mode == "parallel-leaning"  # R_A = 2 < R_T = 8
+
+
+# ------------------------------------------------------------ accum planning
+@given(st.integers(2, 10 ** 6), st.integers(2, 16), st.integers(8, 64))
+@settings(max_examples=100)
+def test_max_operands_exact(n, opb, accb):
+    cap = accum.max_operands_exact(accb, opb)
+    if cap >= 1:
+        assert accum.bits_for_sum(cap, opb) <= accb
+    if cap >= 0:
+        assert accum.bits_for_sum(cap + 1, opb) > accb
+
+
+def test_int8_matmul_plan():
+    plan = accum.plan_dot_accumulation(16384, lhs_bits=8, rhs_bits=8,
+                                       acc_bits=32)
+    # 14-bit products in an int32: huge exact blocks — whole K fits
+    assert plan.exact and plan.num_blocks == 1
+    plan16 = accum.plan_dot_accumulation(16384, lhs_bits=8, rhs_bits=8,
+                                         acc_bits=16)
+    # 14-bit products in int16: only 2 terms sum exactly -> many blocks
+    assert plan16.max_block == 2
+    assert plan16.exact
+
+
+def test_gradient_reduction_plan():
+    p = accum.plan_gradient_reduction(512, payload_bits=8, acc_bits=32)
+    assert p.spill_bits <= 32
+    with pytest.raises(ValueError):
+        accum.plan_gradient_reduction(2 ** 26, payload_bits=8, acc_bits=16)

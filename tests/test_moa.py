@@ -1,0 +1,138 @@
+"""Bit-exact adder tests incl. the paper's §9 simulations (Figs 12-15)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import carry as ct
+from repro.core import moa
+
+
+# ------------------------------------------------------------ Python layer
+@given(k=st.integers(2, 16), data=st.data())
+@settings(max_examples=150)
+def test_serial_add_py_matches_bigint(k, data):
+    n = data.draw(st.integers(2, 20))
+    m = data.draw(st.integers(1, 8))
+    ops = data.draw(st.lists(st.integers(0, k ** m - 1), min_size=n, max_size=n))
+    tr = moa.serial_add_py(ops, k, m_digits=m)
+    assert tr.result == sum(ops)
+    assert tr.clocks == m + 1
+    assert all(c <= ct.carry_upper_bound(n) for c in tr.carries)
+
+
+def test_serial_4x4_paper_example():
+    """Fig 12: A + F + 1 + 2 = 1C (hex); LUT column outputs {2,3,1,2};
+    stable data at the 5th clock (M+1 = 5)."""
+    tr = moa.serial_add_py([0xA, 0xF, 0x1, 0x2], k=2, m_digits=4)
+    assert tr.result == 0x1C
+    assert tr.clocks == 5
+    assert tr.column_sums == [2, 3, 1, 2]
+
+
+def test_serial_4x16_paper_example():
+    """Fig 14: A234 + FFFF + 0A2D + FF7F = 2ABDF (hex), 16+1 clocks."""
+    tr = moa.serial_add_py([0xA234, 0xFFFF, 0x0A2D, 0xFF7F], k=2, m_digits=16)
+    assert tr.result == 0x2ABDF
+    assert tr.clocks == 17
+
+
+def test_serial_base10_figure2_example():
+    """Fig 2: sixteen rows of 9999 (base 10) -> Z = 159984."""
+    tr = moa.serial_add_py([9999] * 16, k=10, m_digits=4)
+    assert tr.result == 16 * 9999 == 159984
+
+
+# ------------------------------------------------------------ JAX serial
+@given(data=st.data())
+@settings(max_examples=80, deadline=None)
+def test_jax_serial_matches_numpy(data):
+    n = data.draw(st.integers(2, 24))
+    m = data.draw(st.integers(1, min(16, moa.max_supported_bits(n))))
+    batch = data.draw(st.integers(1, 8))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    ops = rng.integers(0, 2 ** m, size=(batch, n), dtype=np.int64).astype(np.int32)
+    res, clocks = moa.serial_add(jnp.asarray(ops), m)
+    np.testing.assert_array_equal(np.asarray(res), ops.sum(axis=-1))
+    assert clocks == m + 1
+
+
+def test_jax_serial_trace_matches_python():
+    ops = np.array([[0xA, 0xF, 0x1, 0x2]], np.int32)
+    res, clocks, (col_sums, carries) = moa.serial_add(
+        jnp.asarray(ops), 4, return_trace=True)
+    assert int(res[0]) == 0x1C
+    np.testing.assert_array_equal(np.asarray(col_sums)[0], [2, 3, 1, 2])
+    tr = moa.serial_add_py([0xA, 0xF, 0x1, 0x2], 2, m_digits=4)
+    np.testing.assert_array_equal(np.asarray(carries)[0], tr.carries)
+
+
+# ------------------------------------------------------------ JAX parallel
+def test_parallel_4x4_paper_example():
+    """Fig 13: same operands, combinatorial — single-step result."""
+    ops = jnp.asarray([[0xA, 0xF, 0x1, 0x2]], jnp.int32)
+    assert int(moa.parallel_add_4xm(ops, 4)[0]) == 0x1C
+
+
+@given(data=st.data())
+@settings(max_examples=80, deadline=None)
+def test_parallel_4xm_matches_sum(data):
+    m = data.draw(st.integers(1, 16))
+    batch = data.draw(st.integers(1, 16))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    ops = rng.integers(0, 2 ** m, size=(batch, 4), dtype=np.int64).astype(np.int32)
+    res = moa.parallel_add_4xm(jnp.asarray(ops), m)
+    np.testing.assert_array_equal(np.asarray(res), ops.sum(axis=-1))
+
+
+@given(data=st.data())
+@settings(max_examples=50, deadline=None)
+def test_parallel_sc_split_carry_bound(data):
+    """The (S, C) split obeys the Theorem: 4-operand carry <= 3 (2 bits)."""
+    m = data.draw(st.integers(1, 16))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    ops = rng.integers(0, 2 ** m, size=(32, 4), dtype=np.int64).astype(np.int32)
+    s, c = moa.parallel_add_4xm_sc(jnp.asarray(ops), m)
+    assert int(jnp.max(c)) <= 3
+    np.testing.assert_array_equal(
+        np.asarray(s) + (np.asarray(c) << m), ops.sum(axis=-1))
+
+
+# ------------------------------------------------------------ reconfigured
+def test_reconfigured_16x16_paper_sim():
+    """Fig 15 / §7: 16-operand 16-bit adder built from 4-operand modules."""
+    rng = np.random.default_rng(0)
+    ops = rng.integers(0, 2 ** 16, size=(64, 16), dtype=np.int64).astype(np.int32)
+    res, structure = moa.reconfigured_add(jnp.asarray(ops), 16,
+                                          return_structure=True)
+    np.testing.assert_array_equal(np.asarray(res), ops.sum(axis=-1))
+    assert structure["levels"] == 2           # U1..U4 then U5
+    assert structure["carry_value_bound"] == 15
+    # max carry across the batch never exceeds N-1 = 15 (so C6 = 0: no bit
+    # beyond the 4-bit carry field — the paper's structural claim).
+    assert int(jnp.max(structure["carry_total"])) <= 15
+
+
+def test_reconfigured_16x16_all_max():
+    """All-FFFF worst case: result = 16 * 0xFFFF needs exactly 20 bits."""
+    ops = jnp.full((1, 16), 0xFFFF, jnp.int32)
+    res = moa.reconfigured_add(ops, 16)
+    assert int(res[0]) == 16 * 0xFFFF
+    assert ct.result_digits(16, 16, 2) == 20
+
+
+@given(data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_reconfigured_any_n(data):
+    n = data.draw(st.integers(2, 40))
+    m = data.draw(st.integers(1, min(16, moa.max_supported_bits(n))))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    ops = rng.integers(0, 2 ** m, size=(8, n), dtype=np.int64).astype(np.int32)
+    res = moa.reconfigured_add(jnp.asarray(ops), m)
+    np.testing.assert_array_equal(np.asarray(res), ops.sum(axis=-1))
+
+
+def test_width_guard():
+    with pytest.raises(ValueError):
+        moa.serial_add(jnp.zeros((1, 16), jnp.int32), 31)

@@ -1,0 +1,110 @@
+"""Roofline analysis unit tests: HLO collective parsing (incl. while-trip
+expansion), term computation, and the report plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (V5E, collective_breakdown,
+                                     collective_bytes, model_flops,
+                                     roofline_report, _parse_collective_line,
+                                     _group_size)
+
+
+# ------------------------------------------------------------- line parsing
+def test_parse_all_gather_pair_groups():
+    line = ("%ag = f32[512,3072]{0,1} all-gather(%x), channel_id=2, "
+            "replica_groups=[16,16]<=[256], dimensions={1}")
+    kind, operand, wire = _parse_collective_line(line)
+    assert kind == "all-gather"
+    # result 512*3072*4 bytes; operand = result / 16
+    assert operand == 512 * 3072 * 4 / 16
+    assert wire == 512 * 3072 * 4 * 15 / 16
+
+
+def test_parse_all_reduce_list_groups():
+    line = ("%ar = bf16[1024]{0} all-reduce(%x), "
+            "replica_groups={{0,1},{2,3}}, to_apply=%add")
+    kind, operand, wire = _parse_collective_line(line)
+    assert kind == "all-reduce"
+    assert operand == 1024 * 2
+    assert wire == 2 * 1024 * 2 * (2 - 1) / 2
+
+
+def test_parse_reduce_scatter_sync():
+    line = ("%rs = f32[64]{0} reduce-scatter(%x), replica_groups=[8,4]"
+            "<=[32], dimensions={0}, to_apply=%add")
+    kind, operand, wire = _parse_collective_line(line)
+    assert kind == "reduce-scatter"
+    assert operand == 64 * 4 * 4          # result * group
+    assert wire == operand * 3 / 4
+
+
+def test_done_forms_skipped():
+    line = "%agd = f32[512]{0} all-gather-done(%ags)"
+    assert _parse_collective_line(line) is None
+
+
+def test_group_size_fallback():
+    assert _group_size("no groups here") == 1
+
+
+# ------------------------------------------------------- while-trip expansion
+_HLO = """
+%body_inner (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar1 = f32[8]{0} all-reduce(%x), replica_groups=[1,4]<=[4], to_apply=%add
+}
+
+%cond_inner (p: (s32[], f32[8])) -> pred[] {
+}
+
+%body_outer (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %w2 = (s32[], f32[8]) while(%t), condition=%cond_inner, body=%body_inner, backend_config={"known_trip_count":{"n":"5"}}
+  %ar2 = f32[16]{0} all-reduce(%y), replica_groups=[1,4]<=[4], to_apply=%add
+}
+
+%cond_outer (p: (s32[], f32[8])) -> pred[] {
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w1 = (s32[], f32[8]) while(%t0), condition=%cond_outer, body=%body_outer, backend_config={"known_trip_count":{"n":"3"}}
+  %ar3 = f32[32]{0} all-reduce(%z), replica_groups=[1,4]<=[4], to_apply=%add
+}
+"""
+
+
+def test_trip_count_expansion():
+    bd = collective_breakdown(_HLO)
+    ar = bd["all-reduce"]
+    # ar1 runs 3*5 = 15x (8 floats), ar2 3x (16 floats), ar3 once (32)
+    assert ar["count"] == 15 + 3 + 1
+    assert ar["bytes"] == 15 * 8 * 4 + 3 * 16 * 4 + 32 * 4
+    assert collective_bytes(_HLO) == ar["bytes"]
+
+
+def test_real_compiled_module_roundtrip():
+    """Parse an actually-compiled psum module: one all-reduce of the right
+    operand size must be found (single-device modules have none)."""
+    mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(1), ("x",))
+    # single device -> no collectives expected
+    f = jax.jit(lambda x: x * 2)
+    hlo = f.lower(jnp.ones((4, 4))).compile().as_text()
+    assert collective_bytes(hlo) == 0.0
+
+
+# ---------------------------------------------------------------- terms
+def test_roofline_terms_and_dominant():
+    rep = roofline_report(flops_per_device=197e12, bytes_per_device=819e9,
+                          coll_bytes_per_device=100e9, chips=256,
+                          model_flops_total=197e12 * 256 / 2)
+    assert rep["compute_s"] == pytest.approx(1.0)
+    assert rep["memory_s"] == pytest.approx(1.0)
+    assert rep["collective_s"] == pytest.approx(2.0)
+    assert rep["dominant"] == "collective"
+    assert rep["useful_flops_ratio"] == pytest.approx(0.5)
+
+
+def test_model_flops_train_vs_decode():
+    assert model_flops(1e9, 1000, "train") == 6e9 * 1000
+    assert model_flops(1e9, 1000, "decode") == 2e9 * 1000
+    assert model_flops(1e9, 10, "train", n_active=5e8) == 6 * 5e8 * 10

@@ -1,0 +1,195 @@
+"""Optimizer, data pipeline, checkpoint, fault-tolerance, and loop tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import (HostDataConfig, Prefetcher, global_batch,
+                                 host_batch)
+from repro.ft.failures import (HeartbeatMonitor, StragglerDetector,
+                               plan_elastic_mesh)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.grad_accum import accumulated_value_and_grad
+from repro.optim.schedule import warmup_cosine
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.state import build_train_step, init_train_state
+
+SMOKE = ShapeConfig("smoke", seq_len=16, global_batch=4, kind="train")
+
+
+# ----------------------------------------------------------------- optimizer
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.2, weight_decay=0.0, grad_clip=0.0)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_accum_equals_full_batch():
+    """Serial multi-operand accumulation == one big batch (mean grads)."""
+    w = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(4, 3)),
+                          jnp.float32)}
+    xs = jnp.asarray(np.random.default_rng(1).normal(size=(8, 4)), jnp.float32)
+
+    def loss(p, batch):
+        return jnp.mean((batch["x"] @ p["w"]) ** 2)
+
+    full_loss, full_grads = jax.value_and_grad(loss)(w, {"x": xs})
+    stacked = {"x": xs.reshape(4, 2, 4)}
+    acc_loss, acc_grads = accumulated_value_and_grad(loss, 4)(w, stacked)
+    np.testing.assert_allclose(float(acc_loss), float(full_loss), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(acc_grads["w"]),
+                               np.asarray(full_grads["w"]), rtol=1e-5)
+
+
+def test_warmup_cosine():
+    f = warmup_cosine(1.0, 10, 100)
+    assert float(f(jnp.asarray(0))) == 0.0
+    assert abs(float(f(jnp.asarray(10))) - 1.0) < 1e-6
+    assert float(f(jnp.asarray(100))) <= 0.1 + 1e-6
+
+
+# ----------------------------------------------------------------- data
+def test_host_split_matches_global():
+    cfg = get_config("llama3.2-3b").reduced()
+    g = global_batch(cfg, SMOKE, seed=7, step=3)
+    h0 = host_batch(cfg, SMOKE, HostDataConfig(7, 2, 0), step=3)
+    h1 = host_batch(cfg, SMOKE, HostDataConfig(7, 2, 1), step=3)
+    np.testing.assert_array_equal(
+        g["tokens"], np.concatenate([h0["tokens"], h1["tokens"]]))
+
+
+def test_data_deterministic_and_step_dependent():
+    cfg = get_config("llama3.2-3b").reduced()
+    a = global_batch(cfg, SMOKE, seed=1, step=5)
+    b = global_batch(cfg, SMOKE, seed=1, step=5)
+    c = global_batch(cfg, SMOKE, seed=1, step=6)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert np.any(a["tokens"] != c["tokens"])
+
+
+def test_prefetcher():
+    cfg = get_config("llama3.2-3b").reduced()
+    pf = Prefetcher(cfg, SMOKE, HostDataConfig(1, 1, 0), start_step=0)
+    b0 = next(pf)
+    b1 = next(pf)
+    pf.close()
+    want0 = global_batch(cfg, SMOKE, seed=1, step=0)
+    np.testing.assert_array_equal(b0["tokens"], want0["tokens"])
+    assert np.any(b0["tokens"] != b1["tokens"])
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.asarray([1.5, 2.5], jnp.float32),
+            "b": {"c": jnp.asarray([[1, 2]], jnp.int32),
+                  "d": jnp.asarray([0.5], jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    zeros = jax.tree.map(jnp.zeros_like, tree)
+    back = restore_checkpoint(str(tmp_path), 7, zeros)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x, np.float32), np.asarray(y, np.float32)), tree, back)
+    assert back["b"]["d"].dtype == jnp.bfloat16
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    tree = {"a": jnp.ones((2,), jnp.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    # simulate a crash mid-save: directory without commit marker
+    os.makedirs(tmp_path / "step_00000002")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_async_checkpointer(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save(s, {"w": jnp.full((3,), float(s))})
+    ck.close()
+    assert latest_step(str(tmp_path)) == 3
+    steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert len(steps) == 2  # gc kept last 2
+
+
+# ----------------------------------------------------------------- FT
+def test_heartbeat_detects_dead_host():
+    clock = [0.0]
+    hb = HeartbeatMonitor(3, timeout=10.0, clock=lambda: clock[0])
+    clock[0] = 5.0
+    hb.beat(0)
+    hb.beat(1)
+    clock[0] = 14.0   # host 2 silent for 14s > 10s; hosts 0/1 beat 9s ago
+    events = hb.check(at_step=42)
+    assert [e.host for e in events] == [2]
+    assert hb.alive == [0, 1]
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(window=8, straggler_factor=1.5, min_samples=4)
+    for t in range(8):
+        sd.record(0, 1.0)
+        sd.record(1, 1.05)
+        sd.record(2, 2.5)
+    events = sd.check(at_step=7)
+    assert [e.host for e in events] == [2]
+
+
+def test_elastic_mesh_plan():
+    assert plan_elastic_mesh(256, 16, 256) == (16, 16)
+    # lose a host (16 chips) -> shrink data axis
+    assert plan_elastic_mesh(240, 16, 256) == (8, 16)
+    assert plan_elastic_mesh(512, 16, 256, pods=2) == (2, 16, 16)
+    assert plan_elastic_mesh(8, 16, 256) is None
+
+
+# ----------------------------------------------------------------- loop
+def _tiny_setup(tmp_path, total_steps, ckpt_every=2):
+    cfg = get_config("llama3.2-3b").reduced()
+    opt = AdamWConfig(lr=1e-3)
+    state = init_train_state(cfg, jax.random.key(0))
+    state["step"] = jnp.zeros((), jnp.int32)
+    step_fn = jax.jit(build_train_step(cfg, opt))
+    loop_cfg = LoopConfig(total_steps=total_steps, ckpt_dir=str(tmp_path),
+                          ckpt_every=ckpt_every, log_every=1, seed=5)
+    return cfg, step_fn, state, loop_cfg
+
+
+def test_train_loop_restart_is_exact(tmp_path):
+    """6 straight steps == 3 steps + crash + restore + 3 steps."""
+    cfg, step_fn, state, loop_cfg = _tiny_setup(tmp_path / "a", 6,
+                                                ckpt_every=3)
+    loop = TrainLoop(cfg, SMOKE, loop_cfg, step_fn, state)
+    final_a = loop.run()
+
+    cfg, step_fn, state, loop_cfg = _tiny_setup(tmp_path / "b", 3,
+                                                ckpt_every=3)
+    TrainLoop(cfg, SMOKE, loop_cfg, step_fn, state).run()
+    # "restart": new loop, same ckpt dir, more steps
+    cfg, step_fn, state2, loop_cfg2 = _tiny_setup(tmp_path / "b", 6,
+                                                  ckpt_every=3)
+    loop2 = TrainLoop(cfg, SMOKE, loop_cfg2, step_fn, state2)
+    start = loop2.maybe_restore()
+    assert start == 3
+    final_b = loop2.run(start_step=start)
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            rtol=1e-5, atol=1e-6),
+        final_a["params"], final_b["params"])
+
+
+def test_train_loop_loss_decreases(tmp_path):
+    cfg, step_fn, state, loop_cfg = _tiny_setup(tmp_path, 12, ckpt_every=50)
+    loop = TrainLoop(cfg, SMOKE, loop_cfg, step_fn, state)
+    loop.run()
+    losses = [m["loss"] for m in loop.metrics_log]
+    assert losses[-1] < losses[0]

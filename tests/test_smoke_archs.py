@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: reduced config, one forward + train-grad +
+decode step on CPU, asserting output shapes and finiteness (no NaNs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import ARCHS, get_config, list_archs
+from repro.launch.inputs import make_batch
+from repro.models.common import init_params, param_count, shape_structs
+from repro.models.registry import get_api
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+DECODE_SHAPE = ShapeConfig("smoke_dec", seq_len=48, global_batch=2,
+                           kind="decode")
+
+
+def _smoke_cfg(arch_id):
+    return get_config(arch_id).reduced()
+
+
+@pytest.mark.parametrize("arch_id", list_archs())
+def test_forward_and_grad(arch_id):
+    cfg = _smoke_cfg(arch_id)
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    batch = make_batch(cfg, SMOKE_SHAPE, seed=1)
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: api.train_loss(p, batch, cfg)))(params)
+    assert np.isfinite(float(loss)), arch_id
+    gleaves = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32)))
+               for g in gleaves), arch_id
+    # gradient actually flows to (almost) all parameters
+    nonzero = sum(bool(np.any(np.asarray(g) != 0)) for g in gleaves)
+    assert nonzero >= 0.75 * len(gleaves), (arch_id, nonzero, len(gleaves))
+
+
+@pytest.mark.parametrize("arch_id", list_archs())
+def test_logits_shape(arch_id):
+    cfg = _smoke_cfg(arch_id)
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    batch = make_batch(cfg, SMOKE_SHAPE, seed=2)
+    out = jax.jit(lambda p: api.forward(p, batch, cfg))(params)
+    logits = out[0] if isinstance(out, tuple) else out
+    b, s = SMOKE_SHAPE.global_batch, SMOKE_SHAPE.seq_len
+    if cfg.frontend == "vision_stub":
+        assert logits.shape == (b, s, cfg.vocab)     # stub + text positions
+    else:
+        assert logits.shape == (b, s, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch_id",
+                         [a for a in list_archs()
+                          if not ARCHS[a].encoder_only])
+def test_decode_step(arch_id):
+    cfg = _smoke_cfg(arch_id)
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    state = init_params(api.decode_state_specs(
+        cfg, DECODE_SHAPE.global_batch, DECODE_SHAPE.seq_len),
+        jax.random.key(1))
+    state = jax.tree.map(jnp.zeros_like, state)
+    batch = {"tokens": jnp.asarray([[3], [5]], jnp.int32),
+             "index": jnp.asarray(7, jnp.int32)}
+    logits, new_state = jax.jit(
+        lambda p, s, b: api.decode_step(p, s, b, cfg))(params, state, batch)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    # state layout preserved
+    jax.tree.map(lambda a, b: np.testing.assert_equal(a.shape, b.shape),
+                 state, new_state)
+
+
+@pytest.mark.parametrize("arch_id",
+                         [a for a in list_archs()
+                          if not ARCHS[a].encoder_only])
+def test_decode_matches_forward(arch_id):
+    """Greedy decode logits == teacher-forced forward logits (same prefix)."""
+    cfg = _smoke_cfg(arch_id)
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    s = 8
+    toks = jnp.asarray(np.random.default_rng(3).integers(0, cfg.vocab,
+                                                         (2, s)), jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.frontend == "vision_stub":
+        pytest.skip("prefix equivalence exercised via text-only archs")
+    out = api.forward(params, batch, cfg)
+    full_logits = np.asarray((out[0] if isinstance(out, tuple) else out),
+                             np.float32)
+
+    state = jax.tree.map(jnp.zeros_like, init_params(
+        api.decode_state_specs(cfg, 2, s), jax.random.key(1)))
+    step = jax.jit(lambda p, st, b: api.decode_step(p, st, b, cfg))
+    for i in range(s):
+        logits, state = step(params, state,
+                             {"tokens": toks[:, i:i + 1],
+                              "index": jnp.asarray(i, jnp.int32)})
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               full_logits[:, -1], rtol=2e-2, atol=2e-2)
+
+
+def test_param_counts_sane():
+    """Full configs instantiate specs (no arrays) with plausible counts."""
+    expected_range = {
+        "internvl2-26b": (18e9, 30e9),      # backbone only (frontend stubbed)
+        "glm4-9b": (7e9, 11e9),
+        "minicpm3-4b": (2.5e9, 5e9),
+        "qwen2.5-14b": (11e9, 17e9),
+        "llama3.2-3b": (2.3e9, 4.5e9),
+        "hubert-xlarge": (0.7e9, 1.4e9),
+        "llama4-scout-17b-a16e": (80e9, 120e9),   # total (active ~17e9)
+        "phi3.5-moe-42b-a6.6b": (35e9, 50e9),
+        "zamba2-1.2b": (0.9e9, 1.8e9),
+        "falcon-mamba-7b": (6e9, 9e9),
+    }
+    for arch in list_archs():
+        cfg = get_config(arch)
+        api = get_api(cfg)
+        n = param_count(api.param_specs(cfg))
+        lo, hi = expected_range[arch]
+        assert lo <= n <= hi, (arch, f"{n:,}")
