@@ -2,8 +2,13 @@
 
 Analytic stage/byte model for the tree collectives (the paper's latency
 claim: ceil(log4 N) stages instead of N-1 chained adds), the exactness
-window of the int8-compressed reduction, and — when dry-run artifacts are
-present — the actual collective mix of a compiled 256-chip train step.
+window of the int8-compressed reduction, a CPU timing of the fused
+radix-4 VMEM tree vs a chained sum (when the kernel interpreter is
+usable), and — when dry-run artifacts are present — the actual collective
+mix of a compiled 256-chip train step.
+
+Returns a machine-readable dict; ``benchmarks.run`` persists it to
+``results/BENCH_collectives.json`` so later PRs have a perf trajectory.
 """
 from __future__ import annotations
 
@@ -11,47 +16,108 @@ import glob
 import json
 import os
 
-from repro.core.accum import max_operands_exact, plan_gradient_reduction
+from repro.core.accum import max_operands_exact
 from repro.dist.collectives import factor_radix4, stage_count
+from repro.dist.plan import make_reduction_plan
 
-from benchmarks.common import Row, print_rows, section
+from benchmarks.common import Row, print_rows, section, time_fn
 
 
-def run() -> dict:
-    section("radix-4 stage plan (the §7 tree lifted to a mesh axis)")
+def _stage_rows() -> list:
     rows = []
     for n in (4, 16, 64, 256, 512, 1024):
         stages = factor_radix4(n)
         rows.append({"axis_size": n, "stages": "x".join(map(str, stages)),
                      "depth": stage_count(n), "flat_depth_2op": n - 1})
-    print_rows(rows)
+    return rows
 
-    section("int8-compressed exact-reduction window (Theorem)")
-    rows = []
-    for acc in (16, 32):
-        rows.append({"acc_bits": acc, "payload": "int8",
-                     "max_exact_replicas": max_operands_exact(acc, 7,
-                                                              signed=True)})
-    print_rows(rows)
-    plan = plan_gradient_reduction(512, payload_bits=8, acc_bits=32)
-    print(f"512-replica plan: spill_bits={plan.spill_bits} (<=32 -> the "
-          f"whole 2-pod reduction is exact in int32)")
 
-    section("compiled collective mix (from dry-run artifacts, if present)")
-    pats = sorted(glob.glob("results/dryrun/*train_4k__single.json"))
+def _exactness_rows() -> list:
+    return [{"acc_bits": acc, "payload": "int8",
+             "max_exact_replicas": max_operands_exact(acc, 7, signed=True)}
+            for acc in (16, 32)]
+
+
+def _kernel_timings() -> list:
+    """Fused radix-4 VMEM tree vs a chained N-1 add sum (CPU wall clock;
+    interpret-mode Pallas is too slow to time honestly, so the tree shape
+    is exercised through the same plan-driven reducer the kernel uses)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.moa_reduce import _radix4_tree_sum
+
     rows = []
-    for p in pats[:6]:
+    rng = np.random.default_rng(0)
+    for n in (8, 32, 128):
+        x = jnp.asarray(rng.standard_normal((n, 256, 256)), jnp.float32)
+        plan = make_reduction_plan(n)
+
+        tree = jax.jit(lambda v, p=plan: _radix4_tree_sum(v, p))
+
+        def chained(v):
+            acc = v[0]
+            for i in range(1, v.shape[0]):
+                acc = acc + v[i]
+            return acc
+
+        chain = jax.jit(chained)
+        t_tree = time_fn(tree, x)
+        t_chain = time_fn(chain, x)
+        rows.append({"n_operands": n, "tree_depth": plan.depth,
+                     "tree_s": t_tree, "chained_s": t_chain,
+                     "speedup": t_chain / max(t_tree, 1e-12)})
+    return rows
+
+
+def _dryrun_rows() -> list:
+    rows = []
+    for p in sorted(glob.glob("results/dryrun/*train_4k__single.json"))[:6]:
         rec = json.load(open(p))
         for kind, v in rec.get("collectives", {}).items():
             rows.append({"arch": rec["arch"], "kind": kind,
                          "count": v["count"],
                          "operand_GB_per_dev": v["bytes"] / 1e9,
                          "wire_GB_per_dev": v.get("wire_bytes", 0) / 1e9})
+    return rows
+
+
+def run() -> dict:
+    out: dict = {}
+
+    section("radix-4 stage plan (the §7 tree lifted to a mesh axis)")
+    out["stage_plan"] = _stage_rows()
+    print_rows(out["stage_plan"])
+
+    section("int8-compressed exact-reduction window (Theorem)")
+    out["exactness_window"] = _exactness_rows()
+    print_rows(out["exactness_window"])
+    plan = make_reduction_plan(512, payload_bits=8, acc_bits=32)
+    out["plan_512"] = {"stages": list(plan.stages),
+                       "spill_bits": plan.accum.spill_bits}
+    print(f"512-replica plan: stages={'x'.join(map(str, plan.stages))}, "
+          f"spill_bits={plan.accum.spill_bits} (<=32 -> the whole reduction "
+          f"is exact in int32)")
+
+    section("fused radix-4 tree vs chained adds (CPU wall clock)")
+    try:
+        out["kernel_timings"] = _kernel_timings()
+        print_rows(out["kernel_timings"])
+    except Exception as e:  # accelerator-less CI should not fail the bench
+        out["kernel_timings"] = []
+        print(f"(kernel timing skipped: {type(e).__name__}: {e})")
+
+    section("compiled collective mix (from dry-run artifacts, if present)")
+    rows = _dryrun_rows()
+    out["dryrun_collectives"] = rows
     if rows:
         print_rows(rows)
     else:
-        print("(no dry-run artifacts found — run repro.launch.dryrun first)")
-    return {"rows": len(rows)}
+        print("(no dry-run artifacts under results/dryrun/ — fresh checkout "
+              "is fine; run repro.launch.dryrun to populate this section)")
+    out["rows"] = len(rows)
+    return out
 
 
 if __name__ == "__main__":

@@ -1,10 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Benchmarks that return a JSON-serializable dict get it persisted to
+``results/BENCH_<name>.json`` so successive PRs accumulate a comparable
+perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -25,6 +31,38 @@ BENCHES = {
 }
 
 
+def _json_default(o):
+    """numpy scalars/arrays serialize by value; anything else is rejected
+    so garbage reprs never pollute the perf-trajectory files."""
+    import numpy as np
+    if isinstance(o, np.generic):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"{type(o).__name__} is not JSON-serializable")
+
+
+def _persist(name: str, result, elapsed_s: float) -> None:
+    """Write results/BENCH_<name>.json for dict-returning benchmarks.
+
+    Persistence is best-effort: a read-only checkout or a bad result value
+    must not turn a passing benchmark into a failure."""
+    if not isinstance(result, dict):
+        return
+    path = os.path.join("results", f"BENCH_{name}.json")
+    try:
+        payload = json.dumps({"bench": name, "elapsed_s": round(elapsed_s, 3),
+                              **result}, indent=1, default=_json_default)
+        os.makedirs("results", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(payload)
+        print(f"[bench {name}] wrote {path}")
+    except TypeError as e:
+        print(f"[bench {name}] result not JSON-serializable ({e}); skipped")
+    except OSError as e:
+        print(f"[bench {name}] could not write {path} ({e}); skipped")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(BENCHES))
@@ -36,7 +74,8 @@ def main(argv=None) -> int:
         print(f"\n{'#' * 72}\n# bench: {name} — {desc}\n{'#' * 72}")
         t0 = time.monotonic()
         try:
-            mod.run()
+            result = mod.run()
+            _persist(name, result, time.monotonic() - t0)
             print(f"\n[bench {name}] OK in {time.monotonic() - t0:.1f}s")
         except Exception:
             failures.append(name)

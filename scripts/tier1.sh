@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 CI entrypoint: full test suite + a benchmark smoke.
+#
+#   ./scripts/tier1.sh            # from the repo root
+#
+# The dist tests spawn subprocesses with 8 virtual CPU devices; everything
+# runs offline (no network, no accelerator required).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q
+
+# Benchmark smoke: the carry-table bench exercises the theory layer end to
+# end and is fast enough for CI; collectives emits the perf-trajectory JSON.
+python -m benchmarks.run --only carry_tables
+python -m benchmarks.run --only collectives

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import carry as carry_theory
 from repro.core.lut import LUT4_TABLE, lut4_netlist, popcount_tree
+import repro.dist.plan as dist_plan
 
 __all__ = [
     "SerialTrace",
@@ -187,13 +188,26 @@ def parallel_add_4xm_sc(ops: jnp.ndarray, m_bits: int
     return total & mask, total >> m_bits
 
 
+def _pad_and_group(values: jnp.ndarray, level) -> jnp.ndarray:
+    """Zero-pad the last axis per the plan level and group radix-wide."""
+    if level.pad:
+        z = jnp.zeros(values.shape[:-1] + (level.pad,), values.dtype)
+        values = jnp.concatenate([values, z], axis=-1)
+    return values.reshape(values.shape[:-1] + (level.groups, -1))
+
+
 def reconfigured_add(ops: jnp.ndarray, m_bits: int,
-                     return_structure: bool = False):
+                     return_structure: bool = False,
+                     plan: "dist_plan.ReductionPlan | None" = None):
     """§7 reconfiguration: an N-operand adder from 4-operand modules.
 
     The sum path stays M bits wide at every level (as in Fig 10: U1..U4 feed
     U5); every level's 2-bit carries are collected at weight 2^M and reduced
     by small carry adders (U6/U7). Works for any N >= 1 (zero padding).
+
+    The tree shape (per-level padding/grouping) and the carry-path width
+    come from the shared :class:`repro.dist.plan.ReductionPlan` — the same
+    plan object that drives the Pallas VMEM tree and the mesh collectives.
 
     Returns ``result`` with shape (...,); with ``return_structure=True`` also
     returns a dict with per-level carry maxima and the module count, so tests
@@ -202,45 +216,39 @@ def reconfigured_add(ops: jnp.ndarray, m_bits: int,
     n = ops.shape[-1]
     if m_bits > max_supported_bits(n):
         raise ValueError("word too wide for int32 layer")
+    plan = plan or dist_plan.make_reduction_plan(n, m_bits=m_bits)
+    if plan.n != n:
+        raise ValueError(f"plan is for N={plan.n}, got {n} operands")
+    if plan.radix != 4:
+        raise ValueError(f"the 4-operand modules below require a radix-4 "
+                         f"plan, got radix={plan.radix}")
     values = ops.astype(jnp.int32)
     carries: List[jnp.ndarray] = []
-    levels = 0
     modules = 0
-    while values.shape[-1] > 1:
-        levels += 1
-        pad = (-values.shape[-1]) % 4
-        if pad:
-            z = jnp.zeros(values.shape[:-1] + (pad,), values.dtype)
-            values = jnp.concatenate([values, z], axis=-1)
-        groups = values.reshape(values.shape[:-1] + (-1, 4))  # (..., G, 4)
-        modules += groups.shape[-2]
+    for level in plan.levels:
+        groups = _pad_and_group(values, level)                # (..., G, 4)
+        modules += level.groups
         s, c = parallel_add_4xm_sc(groups, m_bits)            # (..., G)
         values = s
         carries.append(c)
     # Carry reduction (U6/U7): all carries live at weight 2^M; their total is
-    # bounded by N-1 (Theorem), so small adders suffice.
+    # bounded by N-1 (Theorem), so the plan's small-adder width suffices.
     if carries:
-        cat = jnp.concatenate(carries, axis=-1)
-        carry_bits = carry_theory.carry_digits_bound(n, 2)
-        carry_total = cat
-        while carry_total.shape[-1] > 1:
-            pad = (-carry_total.shape[-1]) % 4
-            if pad:
-                z = jnp.zeros(carry_total.shape[:-1] + (pad,), cat.dtype)
-                carry_total = jnp.concatenate([carry_total, z], axis=-1)
-            g = carry_total.reshape(carry_total.shape[:-1] + (-1, 4))
-            modules += g.shape[-2]
-            carry_total = parallel_add_4xm(g, max(carry_bits, 2))
+        carry_total = jnp.concatenate(carries, axis=-1)
+        for level in plan.carry_plan().levels:
+            g = _pad_and_group(carry_total, level)
+            modules += level.groups
+            carry_total = parallel_add_4xm(g, plan.carry_adder_bits)
         carry_total = carry_total[..., 0]
     else:
         carry_total = jnp.zeros(values.shape[:-1], jnp.int32)
     result = values[..., 0] + (carry_total << m_bits)
     if return_structure:
         structure = {
-            "levels": levels,
+            "levels": plan.depth,
             "modules": modules,
             "carry_total": carry_total,
-            "carry_value_bound": carry_theory.carry_upper_bound(n),
+            "carry_value_bound": plan.carry_value_bound,
         }
         return result, structure
     return result

@@ -15,6 +15,7 @@ from typing import List
 
 from repro.core import carry as carry_theory
 from repro.core.lut import GateCost, lut_parallel_adder_cost
+import repro.dist.plan as dist_plan
 
 __all__ = ["LevelPlan", "ReconfigPlan", "plan_reconfig", "radix_stages"]
 
@@ -46,35 +47,32 @@ class ReconfigPlan:
 
 
 def radix_stages(n: int, radix: int = 4) -> int:
-    """ceil(log_radix(n)) — depth of the reconfigured tree."""
+    """ceil(log_radix(n)) — depth of the reconfigured tree (computed as the
+    shared plan's exact level count, not via float log)."""
     if n <= 1:
         return 0
-    return math.ceil(math.log(n) / math.log(radix))
+    return len(dist_plan.tree_levels(n, radix))
 
 
-def plan_reconfig(n_operands: int, m_bits: int) -> ReconfigPlan:
+def plan_reconfig(n_operands: int, m_bits: int,
+                  plan: "dist_plan.ReductionPlan | None" = None) -> ReconfigPlan:
     """Compute the §7 module placement for an ``n_operands`` x ``m_bits``
-    adder built from 4-operand modules."""
+    adder built from 4-operand modules.
+
+    The tree shape comes from the shared
+    :class:`repro.dist.plan.ReductionPlan`; this function adds the
+    paper-facing structural accounting (module counts, latency, gate cost).
+    """
     if n_operands < 1:
         raise ValueError("need at least one operand")
-    levels: List[LevelPlan] = []
-    remaining = n_operands
-    total_carries = 0
-    lvl = 0
-    while remaining > 1:
-        lvl += 1
-        groups = math.ceil(remaining / 4)
-        levels.append(LevelPlan(level=lvl, sum_modules=groups,
-                                inputs=remaining, carries_emitted=groups))
-        total_carries += groups
-        remaining = groups
+    plan = plan or dist_plan.make_reduction_plan(n_operands, m_bits=m_bits)
+    levels: List[LevelPlan] = [
+        LevelPlan(level=i + 1, sum_modules=t.groups, inputs=t.n_in,
+                  carries_emitted=t.groups)
+        for i, t in enumerate(plan.levels)
+    ]
     # Carry path: radix-4 tree over all collected 2-bit carries (U6/U7 role).
-    carry_modules = 0
-    c = total_carries
-    while c > 1:
-        g = math.ceil(c / 4)
-        carry_modules += g
-        c = g
+    carry_modules = sum(t.groups for t in plan.carry_plan().levels)
     sum_modules = sum(l.sum_modules for l in levels)
     total_modules = sum_modules + carry_modules
     latency = len(levels) + (1 if carry_modules else 0) + 1  # + final concat

@@ -1,0 +1,146 @@
+"""§7's reconfiguration tree lifted to mesh axes: radix-4 collectives.
+
+A flat ``psum`` over an N-device axis is the cross-device analogue of the
+paper's "conventional two operand adder" chain; the §7 alternative is a
+*planned* radix-4 tree.  :func:`make_tree_mesh` reshapes one mesh axis into
+its :func:`~repro.dist.plan.factor_radix4` stage axes (``data`` ->
+``data_t0, data_t1, ...``); :func:`tree_psum` then reduces stage by stage —
+ceil(log4 N) stages of 4-wide reductions instead of one N-wide one, exactly
+the ReductionPlan shape the in-register and in-VMEM tiers execute.
+
+For integer payloads the Theorem (carry <= N-1) makes the staged sum *exact*
+whenever the flat sum is: every stage partial is bounded by the final total,
+so the :class:`~repro.core.accum.AccumPlan` width check covers the whole
+tree.  For floats the tree is the log-depth (better-conditioned) summation
+order.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.dist.plan import (ReductionPlan, factor_radix4,
+                             make_reduction_plan, stage_count)
+
+__all__ = [
+    "factor_radix4",
+    "stage_count",
+    "make_tree_mesh",
+    "tree_psum",
+    "tree_pmean",
+    "tree_reduce_scatter_gather",
+]
+
+
+def make_tree_mesh(mesh: Mesh, axis: str,
+                   plan: Optional[ReductionPlan] = None
+                   ) -> Tuple[Mesh, Tuple[str, ...]]:
+    """Reshape one mesh axis into its radix-4 stage axes.
+
+    Returns ``(tree_mesh, sub_axes)`` where ``sub_axes`` replaces ``axis``
+    (e.g. ``"data"`` over 8 devices -> ``("data_t0", "data_t1")`` of sizes
+    (4, 2)).  Device order along the factored axes is row-major, so a
+    ``PartitionSpec((*sub_axes,))`` places shards exactly where
+    ``PartitionSpec(axis)`` did on the original mesh.
+
+    A size-1 (or absent-from-factorization) axis is returned unchanged as a
+    single stage so callers can treat ``sub_axes`` uniformly.
+    """
+    if axis not in mesh.shape:
+        raise ValueError(f"axis {axis!r} not in mesh axes {mesh.axis_names}")
+    size = mesh.shape[axis]
+    plan = plan or make_reduction_plan(size)
+    if plan.n != size:
+        raise ValueError(f"plan is for N={plan.n}, mesh axis {axis!r} has "
+                         f"size {size}")
+    if len(plan.stages) <= 1:
+        return mesh, (axis,)
+    sub = plan.sub_axis_names(axis)
+    idx = mesh.axis_names.index(axis)
+    devices = np.asarray(mesh.devices)
+    new_shape = devices.shape[:idx] + plan.stages + devices.shape[idx + 1:]
+    new_names = mesh.axis_names[:idx] + sub + mesh.axis_names[idx + 1:]
+    return Mesh(devices.reshape(new_shape), new_names), sub
+
+
+def _check_int_payload(x: jnp.ndarray, n: int,
+                       plan: Optional[ReductionPlan]) -> None:
+    if plan is None or plan.accum is None:
+        return
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        acc_bits = jnp.iinfo(x.dtype).bits
+        if plan.accum.spill_bits > acc_bits:
+            raise ValueError(
+                f"summing {n} x int{plan.accum.operand_bits + 1} payloads "
+                f"needs {plan.accum.spill_bits} bits; the int{acc_bits} "
+                f"carrier overflows — widen the carrier or shard the "
+                f"reduction")
+
+
+def tree_psum(x, axis_names: Sequence[str],
+              plan: Optional[ReductionPlan] = None):
+    """Radix-4 staged psum over the factored stage axes of one tree mesh.
+
+    Equivalent to ``jax.lax.psum(x, tuple(axis_names))`` — the tree merely
+    fixes the reduction schedule to the §7 stage plan.  ``plan`` (when given
+    with an ``accum`` width plan) asserts at trace time that an integer
+    payload cannot overflow its carrier anywhere in the tree: the Theorem
+    bounds every stage partial by the final total's width.
+    """
+    axis_names = tuple(axis_names)
+    n = 1
+    for ax in axis_names:
+        n *= jax.lax.psum(1, ax)
+    if plan is not None:
+        if plan.n != n:
+            raise ValueError(f"plan is for N={plan.n}, but the "
+                             f"{axis_names} axes reduce {n} shards")
+        for leaf in jax.tree.leaves(x):
+            _check_int_payload(leaf, n, plan)
+    for ax in axis_names:
+        x = jax.tree.map(lambda v: jax.lax.psum(v, ax), x)
+    return x
+
+
+def tree_pmean(x, axis_names: Sequence[str]):
+    """Staged mean: tree_psum / prod(stage sizes)."""
+    axis_names = tuple(axis_names)
+    n = 1
+    for ax in axis_names:
+        n *= jax.lax.psum(1, ax)
+    return jax.tree.map(lambda v: v / n, tree_psum(x, axis_names))
+
+
+def tree_reduce_scatter_gather(x: jnp.ndarray, axis_names: Sequence[str],
+                               axis: int = 0,
+                               plan: Optional[ReductionPlan] = None
+                               ) -> jnp.ndarray:
+    """psum as reduce-scatter down the stage tree + all-gather back up.
+
+    Each stage's ``psum_scatter`` leaves this shard holding ``1/stage`` of
+    the partial sums (the bandwidth-optimal schedule); the matching
+    all-gathers run in reverse stage order so chunks reassemble in their
+    original positions.  Requires ``x.shape[axis]`` divisible by the product
+    of stage sizes.
+    """
+    axis_names = tuple(axis_names)
+    n = 1
+    for ax in axis_names:
+        n *= jax.lax.psum(1, ax)
+    if x.shape[axis] % n:
+        raise ValueError(
+            f"dim {axis} of {x.shape} not divisible by the {n}-device tree; "
+            f"use tree_psum for unscatterable payloads")
+    if plan is not None and plan.n != n:
+        raise ValueError(f"plan is for N={plan.n}, but the {axis_names} "
+                         f"axes reduce {n} shards")
+    _check_int_payload(x, n, plan)
+    for ax in axis_names:
+        x = jax.lax.psum_scatter(x, ax, scatter_dimension=axis, tiled=True)
+    for ax in reversed(axis_names):
+        x = jax.lax.all_gather(x, ax, axis=axis, tiled=True)
+    return x

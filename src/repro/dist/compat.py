@@ -1,0 +1,93 @@
+"""JAX version portability for the dist layer.
+
+The repo targets the current ``jax.shard_map`` API (with ``axis_names``
+partial-manual selection, ``jax.lax.pvary`` varying-axes typing, and
+``jax.sharding.get_abstract_mesh``).  Older jaxlibs (<= 0.4.x) ship the same
+machinery under ``jax.experimental.shard_map`` with an inverted ``auto``
+parameter and no varying-axes type system.  Every shard_map/pvary call in
+the repo goes through this module so both generations work unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional
+
+import jax
+
+__all__ = ["shard_map", "pvary", "get_abstract_mesh", "manual_axis_sizes",
+           "OLD_PARTITIONER"]
+
+_HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+
+# jaxlibs that predate jax.shard_map also carry the GSPMD partitioner bugs
+# this repo works around (padded-head activation constraints miscompile;
+# partial-manual subgroups CHECK-crash).  Gate those paths on this flag.
+OLD_PARTITIONER = not _HAS_JAX_SHARD_MAP
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Iterable[str]] = None):
+    """``jax.shard_map`` with the modern keyword surface on any jax.
+
+    ``axis_names`` selects the *manual* mesh axes (all axes when None); on
+    old jax it is translated to the experimental API's complementary
+    ``auto`` set.  Replication checking is disabled on the old API: partial-
+    manual regions there reject ``check_rep=True``, and the new ``check_vma``
+    typing that replaces it does not exist yet.
+    """
+    if _HAS_JAX_SHARD_MAP:
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # Old XLA CHECK-crashes on partial-manual subgroup shardings (the crash
+    # jax.lax.pvary was later introduced to avoid), so requested-auto axes
+    # are promoted to manual here: specs that do not name them mean
+    # "replicated", which preserves semantics exactly — the would-be-auto
+    # axes just lose partitioner-chosen sharding inside the region.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pvary(x: Any, axis_name) -> Any:
+    """``jax.lax.pvary`` when the varying-axes type system exists.
+
+    On old jax there is no replication typing to discharge: a replicated
+    value used inside a manual region already behaves as per-shard data and
+    its transpose yields the local (per-shard) cotangent, so identity is the
+    faithful translation.
+    """
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_name)
+    return x
+
+
+def get_abstract_mesh():
+    """The context AbstractMesh, or None when the API (or context) is absent.
+
+    Callers treat None like "no manual region"; pair with
+    :func:`manual_axis_sizes`, which also covers old jax.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is None:
+        return None
+    return getter()
+
+
+def manual_axis_sizes() -> dict:
+    """{axis name: size} for mesh axes bound *manual* in the current trace.
+
+    Empty outside any shard_map/pmap region.  New jax reports them on the
+    context AbstractMesh; old jax tracks the same set in the tracing axis
+    env (manual axes are exactly the named axes collectives can see).
+    """
+    am = get_abstract_mesh()
+    if am is not None and not am.empty:
+        manual = getattr(am, "manual_axes", ())
+        return {a: am.shape[a] for a in manual}
+    try:
+        from jax._src import core as _core
+        return dict(_core.get_axis_env().axis_sizes)
+    except Exception:
+        return {}

@@ -29,7 +29,9 @@ from repro.core import carry as carry_theory
 
 try:
     from jax.experimental.pallas import tpu as pltpu
-    _COMPILER_PARAMS = pltpu.CompilerParams(
+    _params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams")
+    _COMPILER_PARAMS = _params_cls(
         dimension_semantics=("parallel",))
 except Exception:  # pragma: no cover
     _COMPILER_PARAMS = None

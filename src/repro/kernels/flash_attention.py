@@ -29,9 +29,11 @@ from jax.experimental import pallas as pl
 
 try:  # TPU compiler params are versioned; fall back gracefully.
     from jax.experimental.pallas import tpu as pltpu
-    _COMPILER_PARAMS = pltpu.CompilerParams(
-        dimension_semantics=("parallel", "parallel", "arbitrary"))
     _VMEM = pltpu.VMEM
+    _params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams")
+    _COMPILER_PARAMS = _params_cls(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
 except Exception:  # pragma: no cover
     _COMPILER_PARAMS = None
     _VMEM = None

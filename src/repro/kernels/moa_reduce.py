@@ -23,9 +23,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+import repro.dist.plan as dist_plan
+
 try:  # TPU compiler params are versioned; fall back gracefully.
     from jax.experimental.pallas import tpu as pltpu
-    _COMPILER_PARAMS = pltpu.CompilerParams(
+    _params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams")
+    _COMPILER_PARAMS = _params_cls(
         dimension_semantics=("parallel", "parallel", "arbitrary"))
 except Exception:  # pragma: no cover
     _COMPILER_PARAMS = None
@@ -33,19 +37,28 @@ except Exception:  # pragma: no cover
 __all__ = ["moa_reduce_kernel", "moa_reduce_pallas"]
 
 
-def _radix4_tree_sum(x: jnp.ndarray) -> jnp.ndarray:
+def _radix4_tree_sum(x: jnp.ndarray,
+                     plan: "dist_plan.ReductionPlan | None" = None) -> jnp.ndarray:
     """Radix-4 tree reduction over axis 0 (the §7 tree, in registers).
+
+    Levels (padding + grouping) come from the shared
+    :class:`repro.dist.plan.ReductionPlan` — the same plan that shapes
+    :func:`repro.core.moa.reconfigured_add` and the mesh collectives.
 
     Tree reduction also improves fp numerics vs left-to-right chaining:
     error grows O(log N) instead of O(N).
     """
-    while x.shape[0] > 1:
-        n = x.shape[0]
-        rem = n % 4
-        if rem:
-            pad = jnp.zeros((4 - rem,) + x.shape[1:], x.dtype)
+    plan = plan or dist_plan.make_reduction_plan(x.shape[0])
+    if plan.radix != 4:
+        raise ValueError(f"the unrolled 4-operand add below requires a "
+                         f"radix-4 plan, got radix={plan.radix}")
+    if plan.n != x.shape[0]:
+        raise ValueError(f"plan is for N={plan.n}, got {x.shape[0]} operands")
+    for level in plan.levels:
+        if level.pad:
+            pad = jnp.zeros((level.pad,) + x.shape[1:], x.dtype)
             x = jnp.concatenate([x, pad], axis=0)
-        g = x.reshape((x.shape[0] // 4, 4) + x.shape[1:])
+        g = x.reshape((level.groups, plan.radix) + x.shape[1:])
         # one "4-operand adder" per group: two levels of pairwise adds
         x = (g[:, 0] + g[:, 1]) + (g[:, 2] + g[:, 3])
     return x[0]
@@ -63,7 +76,8 @@ def moa_reduce_kernel(x_ref, o_ref, *, acc_dtype, n_total, bk):
     if n_total % bk:
         offs = k * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1, 1), 0)
         x = jnp.where(offs < n_total, x, jnp.zeros_like(x))
-    partial = _radix4_tree_sum(x.astype(acc_dtype))
+    partial = _radix4_tree_sum(x.astype(acc_dtype),
+                               dist_plan.make_reduction_plan(bk))
 
     @pl.when(k == 0)
     def _init():

@@ -25,7 +25,9 @@ from repro.core.accum import plan_dot_accumulation
 
 try:
     from jax.experimental.pallas import tpu as pltpu
-    _COMPILER_PARAMS = pltpu.CompilerParams(
+    _params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams")
+    _COMPILER_PARAMS = _params_cls(
         dimension_semantics=("parallel", "parallel", "arbitrary"))
 except Exception:  # pragma: no cover
     _COMPILER_PARAMS = None

@@ -24,6 +24,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.dist import compat
+
 __all__ = [
     "ParamSpec", "init_params", "shape_structs", "make_shardings",
     "logical_to_pspec", "constrain", "DEFAULT_RULES",
@@ -209,8 +211,7 @@ def constrain(x: jnp.ndarray, axes: Sequence[Optional[str]],
     manual region (e.g. the pod-compressed step) the spec is resolved
     against the *context* AbstractMesh and Manual axes are excluded —
     only Auto axes may appear in a with_sharding_constraint there."""
-    am = jax.sharding.get_abstract_mesh()
-    if am is not None and not am.empty and am.manual_axes:
+    if compat.manual_axis_sizes():
         # Inside a manual region: XLA's partitioner mishandles (and can
         # CHECK-crash on) sharding constraints under sdy.manual_computation;
         # rely on propagation from the operands' committed shardings.
@@ -239,7 +240,7 @@ def shardmap_mesh(mesh: Optional[Mesh]):
     context mesh is an AbstractMesh whose axis names differ from the
     original Mesh; shard_map then requires the *context* mesh. Outside any
     region, fall back to the caller-provided concrete mesh."""
-    am = jax.sharding.get_abstract_mesh()
+    am = compat.get_abstract_mesh()
     if am is not None and not am.empty:
         return am
     return mesh

@@ -16,6 +16,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.dist import compat
 from repro.models import attention, mla, moe
 from repro.models.common import (ParamSpec, constrain, cross_entropy_loss,
                                  rms_norm, shardmap_mesh)
@@ -100,7 +101,7 @@ def vocab_parallel_embed(tokens: jnp.ndarray, table: jnp.ndarray,
         x = x * in_range[..., None].astype(x.dtype)
         return jax.lax.psum(x, "model")
 
-    return jax.shard_map(local, mesh=shardmap_mesh(mesh),
+    return compat.shard_map(local, mesh=shardmap_mesh(mesh),
                          axis_names=frozenset({"model"}),
                          in_specs=(P(), P("model", None)),
                          out_specs=P())(tokens, table)

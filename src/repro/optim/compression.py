@@ -19,8 +19,8 @@ from typing import Any, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.accum import plan_gradient_reduction
 from repro.dist.collectives import tree_psum
+from repro.dist.plan import make_reduction_plan
 
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean",
            "init_error_state"]
@@ -57,8 +57,9 @@ def compressed_psum_mean(grads: Any, err: Any, sub_axes: Sequence[str],
 
     Returns (mean_grads fp32, new_err).
     """
-    plan = plan_gradient_reduction(n_shards, payload_bits=8, acc_bits=32)
-    assert plan.spill_bits <= 32
+    # ONE shared plan: tree shape (radix-4 stages) + integer width budget.
+    plan = make_reduction_plan(n_shards, payload_bits=8, acc_bits=32)
+    assert plan.accum is not None and plan.accum.spill_bits <= 32
 
     def leaf(g, e):
         g32 = g.astype(jnp.float32) + e
@@ -70,7 +71,7 @@ def compressed_psum_mean(grads: Any, err: Any, sub_axes: Sequence[str],
         q = quantize_int8(g32, scale)
         new_e = g32 - dequantize_int8(q, scale)      # residual feedback
         # exact integer multi-operand sum (int32 carrier; Theorem-checked)
-        total = tree_psum(q.astype(jnp.int32), sub_axes)
+        total = tree_psum(q.astype(jnp.int32), sub_axes, plan=plan)
         return dequantize_int8(total, scale) / n_shards, new_e
 
     flat_g, tdef = jax.tree.flatten(grads)

@@ -1,0 +1,181 @@
+"""Offline fallback for ``hypothesis``.
+
+This environment cannot install packages, but ``test_carry.py``,
+``test_moa.py`` and ``test_lut_planner.py`` hard-import
+``hypothesis``.  When the real package is available it is used untouched
+(see ``conftest.py``); otherwise :func:`install_shim` registers this module
+as a minimal stand-in that runs each ``@given`` test over a **fixed,
+deterministic example set**: the strategy-space corners first (min/max of
+every integer bound), then seeded pseudo-random draws.  No shrinking, no
+database — on failure the offending example is attached to the assertion.
+
+Only the API surface the test-suite uses is implemented: ``given``
+(positional or keyword strategies), ``settings(max_examples=, deadline=)``,
+and ``strategies.integers / lists / data``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, List, Optional
+
+# Examples per test when the real hypothesis is absent: enough to cover the
+# corners plus a seeded random sweep, small enough to keep tier-1 fast.
+_FALLBACK_MAX_EXAMPLES = 30
+
+
+class _Strategy:
+    """A draw rule: ``sample(rng, corner)`` returns one example; ``corner``
+    indexes deterministic boundary examples before random ones kick in."""
+
+    def sample(self, rng: random.Random, corner: Optional[int]) -> Any:
+        raise NotImplementedError
+
+    @property
+    def n_corners(self) -> int:
+        return 0
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value: Optional[int] = None,
+                 max_value: Optional[int] = None):
+        self.lo = min_value if min_value is not None else -(2 ** 63)
+        self.hi = max_value if max_value is not None else 2 ** 63
+        if self.lo > self.hi:
+            raise ValueError(f"empty integer range [{self.lo}, {self.hi}]")
+
+    @property
+    def n_corners(self) -> int:
+        return 1 if self.lo == self.hi else 2
+
+    def sample(self, rng: random.Random, corner: Optional[int]) -> int:
+        if corner == 0:
+            return self.lo
+        if corner == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)  # bigint-safe
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements: _Strategy, min_size: int = 0,
+                 max_size: Optional[int] = None):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def sample(self, rng: random.Random, corner: Optional[int]) -> List[Any]:
+        size = rng.randint(self.min_size, self.max_size)
+        return [self.elements.sample(rng, None) for _ in range(size)]
+
+
+class _DataStrategy(_Strategy):
+    """Marker strategy; resolved to a :class:`DataObject` at run time."""
+
+    def sample(self, rng: random.Random, corner: Optional[int]):
+        return DataObject(rng)
+
+
+class DataObject:
+    """Interactive draws: ``data.draw(strategy)`` inside the test body."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: Optional[str] = None) -> Any:
+        return strategy.sample(self._rng, None)
+
+
+def integers(min_value: Optional[int] = None,
+             max_value: Optional[int] = None) -> _Strategy:
+    return _Integers(min_value, max_value)
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: Optional[int] = None, **_ignored) -> _Strategy:
+    return _Lists(elements, min_size, max_size)
+
+
+def data() -> _Strategy:
+    return _DataStrategy()
+
+
+def settings(*args, max_examples: Optional[int] = None, deadline=None,
+             **_ignored):
+    """Decorator recording the requested example budget (capped by the
+    fallback budget — the point of the shim is a fixed, fast example set)."""
+    def deco(f):
+        f._hyp_max_examples = max_examples
+        return f
+    if args and callable(args[0]):  # bare @settings
+        return deco(args[0])
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the test over corner examples then seeded random examples."""
+
+    def deco(f):
+        requested = getattr(f, "_hyp_max_examples", None)
+        n_examples = min(requested or _FALLBACK_MAX_EXAMPLES,
+                         _FALLBACK_MAX_EXAMPLES)
+        names = sorted(kw_strategies)
+        strategies = list(arg_strategies) + [kw_strategies[k] for k in names]
+        # positional strategies bind to the RIGHTMOST parameters (as in real
+        # hypothesis), leaving leading params free for fixtures/parametrize
+        sig = inspect.signature(f)
+        param_names = list(sig.parameters)
+        pos_names = param_names[len(param_names) - len(arg_strategies):]
+        # corner phase: the first examples pin every strategy to each of its
+        # boundary values in turn (all-min, all-max), then randoms take over
+        n_corner = min(max((s.n_corners for s in strategies), default=0),
+                       n_examples)
+
+        @functools.wraps(f)
+        def wrapper(*outer_args, **outer_kwargs):
+            name = f"{f.__module__}.{f.__qualname__}".encode()
+            seed_base = zlib.crc32(name)  # deterministic across processes
+            for i in range(n_examples):
+                rng = random.Random(seed_base * 1000003 + i)
+                drawn = []
+                for s in strategies:
+                    corner = i if i < n_corner and s.n_corners else None
+                    drawn.append(s.sample(rng, corner))
+                kw = dict(zip(pos_names, drawn[:len(arg_strategies)]))
+                kw.update(zip(names, drawn[len(arg_strategies):]))
+                try:
+                    f(*outer_args, **kw, **outer_kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {f.__qualname__}: "
+                        f"{kw}") from e
+
+        # pytest must not see the strategy params as fixtures: drop the
+        # wrapped-signature forwarding and expose the leftover params only.
+        del wrapper.__wrapped__
+        drawn_names = set(names) | set(pos_names)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in drawn_names])
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=f)
+        return wrapper
+
+    return deco
+
+
+def install_shim() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__version__ = "0.0.0-offline-shim"
+    hyp.__is_repro_shim__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.lists = lists
+    st.data = data
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,145 @@
+"""The shared ReductionPlan drives all three reduction tiers (§7).
+
+Covers the tentpole contract: one plan object shapes the in-register tree
+(:func:`repro.core.moa.reconfigured_add`), the Pallas VMEM tree
+(:func:`repro.kernels.moa_reduce.moa_reduce_pallas`), and the mesh
+collective stage axes (:func:`repro.dist.collectives.make_tree_mesh`) —
+plus the remainder-shape kernel cases and non-power-of-4 adder cases the
+ad-hoc trees used to get wrong-by-construction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import carry as ct
+from repro.core import moa, reconfig
+from repro.dist.plan import (ReductionPlan, factor_radix4,
+                             make_reduction_plan, stage_count, tree_levels)
+from repro.kernels.moa_reduce import _radix4_tree_sum, moa_reduce_pallas
+
+
+# ------------------------------------------------------------------ plan
+@pytest.mark.parametrize("n,stages", [
+    (1, ()), (2, (2,)), (4, (4,)), (6, (3, 2)), (8, (4, 2)),
+    (16, (4, 4)), (32, (4, 4, 2)), (12, (4, 3)), (5, (5,)), (7, (7,)),
+    (20, (4, 5)), (256, (4, 4, 4, 4)),
+])
+def test_factor_radix4(n, stages):
+    assert factor_radix4(n) == stages
+    assert stage_count(n) == len(stages)
+    prod = 1
+    for s in stages:
+        prod *= s
+    assert prod == max(1, n)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 5, 7, 13, 16, 33, 100, 1024])
+def test_tree_levels_shape(n):
+    levels = tree_levels(n)
+    r = n
+    for lvl in levels:
+        assert lvl.n_in == r
+        assert (lvl.n_in + lvl.pad) == lvl.groups * 4
+        assert 0 <= lvl.pad < 4
+        r = lvl.groups
+    assert r == 1
+
+
+def test_plan_budgets():
+    p = make_reduction_plan(16, m_bits=16, payload_bits=8)
+    assert p.carry_value_bound == 15
+    assert p.budget is not None and p.budget.carry_value_bound == 15
+    assert p.accum is not None and p.accum.spill_bits <= 32
+    assert p.sub_axis_names("pod") == ("pod_t0", "pod_t1")
+    # depth of the ceil tree == depth of the exact stage tree for powers of 4
+    assert p.depth == len(p.stages) == 2
+
+
+def test_one_plan_drives_all_tiers():
+    """The same ReductionPlan object shapes register tree, VMEM tree, and
+    mesh stage axes (the tentpole's 'no duplicated radix logic' claim)."""
+    n, m = 16, 10
+    plan = make_reduction_plan(n, m_bits=m)
+    rng = np.random.default_rng(0)
+    ops = jnp.asarray(rng.integers(0, 2 ** m, (8, n)), jnp.int32)
+
+    # register tier
+    got = moa.reconfigured_add(ops, m, plan=plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ops.sum(-1)))
+
+    # VMEM-tree tier (the kernel's inner reduction, same plan object)
+    stacked = jnp.moveaxis(ops, -1, 0).astype(jnp.int32)   # (n, batch)
+    got_k = _radix4_tree_sum(stacked, plan)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(ops.sum(-1)))
+
+    # mesh tier: the plan's stages name the tree-mesh axes
+    assert plan.stages == (4, 4)
+    assert plan.sub_axis_names("data") == ("data_t0", "data_t1")
+
+    # structural planner consumes the identical plan
+    rp = reconfig.plan_reconfig(n, m, plan=plan)
+    assert [l.inputs for l in rp.levels] == [l.n_in for l in plan.levels]
+
+
+# ------------------------------------------------------ reconfigured_add
+@pytest.mark.parametrize("n", [5, 7, 13])
+def test_reconfigured_matches_serial_nonpow4(n):
+    """Non-power-of-4 N: the padded §7 tree equals Algorithm-2 serial."""
+    m = min(10, moa.max_supported_bits(n))
+    rng = np.random.default_rng(n)
+    ops = jnp.asarray(rng.integers(0, 2 ** m, (64, n)), jnp.int32)
+    got = moa.reconfigured_add(ops, m)
+    want, clocks = moa.serial_add(ops, m)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ops.sum(-1)))
+    assert clocks == m + 1
+
+
+def test_reconfigured_carry_within_budget():
+    n, m = 13, 8
+    ops = jnp.full((4, n), 2 ** m - 1, jnp.int32)       # worst case
+    plan = make_reduction_plan(n, m_bits=m)
+    _, structure = moa.reconfigured_add(ops, m, return_structure=True,
+                                        plan=plan)
+    assert structure["levels"] == plan.depth
+    assert int(jnp.max(structure["carry_total"])) <= plan.carry_value_bound
+
+
+# ------------------------------------------------------------ Pallas tier
+@pytest.mark.parametrize("n,rows,cols,bk", [
+    (7, 16, 200, 3),     # n % bk != 0, cols not a block multiple
+    (13, 40, 130, 4),    # n % bk != 0, rows/cols not block multiples
+    (5, 33, 257, 2),     # everything ragged
+    (9, 8, 128, 9),      # bk == n, single operand step
+])
+def test_moa_reduce_remainder_shapes(n, rows, cols, bk):
+    rng = np.random.default_rng(n * rows + cols)
+    x = jnp.asarray(rng.standard_normal((n, rows, cols)), jnp.float32)
+    got = moa_reduce_pallas(x, bm=16, bn=128, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp.sum(x, 0)),
+                               rtol=2e-6, atol=1e-5)
+
+
+def test_moa_reduce_remainder_int_exact():
+    """Integer payloads stay exact through masked remainder blocks."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-9000, 9000, (11, 21, 150)), jnp.int32)
+    got = moa_reduce_pallas(x, bm=8, bn=128, bk=4, acc_dtype=jnp.int32,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(jnp.sum(x, 0)))
+
+
+# ------------------------------------------------------------ collectives
+def test_tree_psum_single_axis_plan_check():
+    """int payload overflow detection: a plan whose accumulator cannot hold
+    the staged sum must be rejected at trace time."""
+    from repro.dist.collectives import tree_psum
+
+    big = make_reduction_plan(2 ** 26, payload_bits=8, acc_bits=64)
+    assert big.accum.spill_bits > 32
+    with pytest.raises(ValueError, match="overflow"):
+        # carrier int32 < spill_bits -> must raise (no devices needed:
+        # the check runs before any collective is traced)
+        from repro.dist.collectives import _check_int_payload
+        _check_int_payload(jnp.zeros((2,), jnp.int32), 2 ** 26, big)

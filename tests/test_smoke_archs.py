@@ -103,8 +103,11 @@ def test_decode_matches_forward(arch_id):
         logits, state = step(params, state,
                              {"tokens": toks[:, i:i + 1],
                               "index": jnp.asarray(i, jnp.int32)})
+    # 5e-2: the absorbed-MLA decode reassociates (c_kv @ wk_b) @ q in bf16,
+    # so its logits differ from the teacher-forced path by a few bf16 ulp;
+    # cache/indexing bugs (the target of this test) produce O(1) errors.
     np.testing.assert_allclose(np.asarray(logits, np.float32),
-                               full_logits[:, -1], rtol=2e-2, atol=2e-2)
+                               full_logits[:, -1], rtol=5e-2, atol=5e-2)
 
 
 def test_param_counts_sane():
