@@ -38,14 +38,15 @@ def _row(k: int, n: int, m: int) -> Row:
 
 
 def run() -> dict:
-    section("Table 1a (N < k): 1-column carry bounds")
-    print_rows([_row(*t) for t in TABLE_1A])
-    section("Table 1b (N > k)")
-    print_rows([_row(*t) for t in TABLE_1B])
-    section("Table 1c (N = nk)")
-    print_rows([_row(*t) for t in TABLE_1C])
-    section("Table 2 (multi-column)")
-    print_rows([_row(*t) for t in TABLE_2])
+    tables = {}
+    for name, title, spec in (
+            ("table_1a", "Table 1a (N < k): 1-column carry bounds", TABLE_1A),
+            ("table_1b", "Table 1b (N > k)", TABLE_1B),
+            ("table_1c", "Table 1c (N = nk)", TABLE_1C),
+            ("table_2", "Table 2 (multi-column)", TABLE_2)):
+        section(title)
+        tables[name] = [_row(*t) for t in spec]
+        print_rows(tables[name])
 
     # wide sweep: theory == brute force everywhere
     checked = 0
@@ -56,7 +57,7 @@ def run() -> dict:
                 checked += 1
     print(f"\nsweep: {checked} (k,N,M) cells checked against bigint "
           f"arithmetic — all bounds hold")
-    return {"cells_checked": checked}
+    return {"cells_checked": checked, **tables}
 
 
 if __name__ == "__main__":

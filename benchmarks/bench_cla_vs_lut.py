@@ -8,6 +8,7 @@ from benchmarks.common import Row, print_rows, section
 
 
 def run() -> dict:
+    out = {}
     section("Fig 16: gate delay / area vs operand count (M = 4 bits, the "
             "paper's anchor width)")
     rows = []
@@ -21,6 +22,7 @@ def run() -> dict:
     print_rows(rows)
     assert rows[0]["lut_faster"] is False          # N=2: CLA wins (9 vs 16)
     assert all(r["lut_faster"] for r in rows if r["N"] >= 16)
+    out["fig16_delay_area"] = rows
 
     section("Fig 17: delay vs bit width (N = 4 and 16)")
     rows = []
@@ -31,6 +33,7 @@ def run() -> dict:
             rows.append({"N": n, "M": m, "cla_delay": c.delay_gates,
                          "lut_delay": l.delay_gates})
     print_rows(rows)
+    out["fig17_delay_vs_width"] = rows
 
     section("Fig 18: performance advantage d(CLA)/d(LUT) (eqn 22)")
     rows = []
@@ -45,7 +48,8 @@ def run() -> dict:
     assert adv[(256, 16)] > adv[(16, 16)] > 1.0 > adv[(2, 4)]
     print("\nLUT adder overtakes CLA past N=4 and the advantage grows with "
           "N — the paper's §10 conclusion")
-    return {"rows": len(rows)}
+    out["fig18_advantage"] = rows
+    return out
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ from benchmarks.common import Row, print_rows, section
 
 
 def run() -> dict:
+    out = {}
     section("Fig 9: throughput after T clocks (speed ratio 17:1)")
     rows = []
     for r_area in (12, 20):
@@ -24,6 +25,7 @@ def run() -> dict:
     print_rows(rows)
     # paper's claim: R_A=20 > R_T=17 -> serial set wins; R_A=12 < 17 -> loses
     assert rows[-1]["serial_wins"] and not rows[2]["serial_wins"]
+    out["fig9_throughput"] = rows
 
     section("Lemma 3 boundary sweep (R_T = 17)")
     rows = []
@@ -34,6 +36,7 @@ def run() -> dict:
                      "serial_beats_parallel":
                          planner.serial_beats_parallel(s, p)})
     print_rows(rows)
+    out["boundary_sweep"] = rows
 
     section("Cluster analogue: microbatch (serial) vs wide-DP (parallel)")
     rows = []
@@ -50,7 +53,8 @@ def run() -> dict:
                          "grad_accum": plan.grad_accum_steps,
                          "mode": plan.mode})
     print_rows(rows)
-    return {"rows": len(rows)}
+    out["cluster_analogue"] = rows
+    return out
 
 
 if __name__ == "__main__":

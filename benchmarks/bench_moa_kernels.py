@@ -29,6 +29,7 @@ def _chained_add(x):
 
 def run() -> dict:
     rng = np.random.default_rng(0)
+    out = {}
 
     section("fused MOA reduce vs chained adds (N operands of (256,512))")
     rows = []
@@ -44,6 +45,7 @@ def run() -> dict:
         rows.append({"N": n, "fused_s": t_f, "chained_s": t_c,
                      "speedup": t_c / t_f})
     print_rows(rows)
+    out["fused_vs_chained"] = rows
 
     section("Pallas kernels, interpret mode: bit-exact vs oracle")
     x = jnp.asarray(rng.standard_normal((8, 256, 256)), jnp.float32)
@@ -78,7 +80,9 @@ def run() -> dict:
                      "spill_bits": plan.spill_bits,
                      "exact_in_int32": plan.exact})
     print_rows(rows)
-    return {"ok": True}
+    out["k_blocking"] = rows
+    out["pallas_bit_exact"] = True      # the three interpret-mode checks
+    return out
 
 
 if __name__ == "__main__":

@@ -82,7 +82,8 @@ def run() -> dict:
     rows.append({"neuron": "arn_moa16", "s_per_call": t_arn,
                  "neurons_per_s": 4096 / t_arn})
     print_rows(rows)
-    return {"ok": True}
+    return {"throughput": rows, "arn_int_vs_float_max_err": err,
+            "arn_result_bits": budget.result_digits}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,120 @@
+"""Serving benchmark: chunked-prefill continuous batching vs the legacy
+per-token loop.
+
+The paper's Lemma-3 question — when do many shared small reduction units
+beat dedicated large ones — is the serving question: how many concurrent
+requests can share one set of jitted reduction trees.  This bench measures
+the answer for the reduced config on CPU:
+
+* per-token baseline: one ``decode_step`` dispatch per token (prefill AND
+  decode), the seed repo's serve loop, warmed up so compile is excluded;
+* engine: shape-bucketed chunked prefill + continuously-batched decode at
+  per-slot positions, AOT-compiled so timings never include compile.
+
+Emits ``results/BENCH_serve.json`` with prefill/decode tok/s for both
+paths, the prefill speedup, and decode batch occupancy — the perf
+trajectory baseline for later serving PRs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.launch.serve import generate
+from repro.models.common import init_params, param_count
+from repro.models.registry import get_api
+from repro.serve import ServeEngine
+
+from benchmarks.common import print_rows, section
+
+ARCH = "llama3.2-3b"
+N_REQUESTS = 8
+SLOTS = 4
+PROMPT_MEAN = 32
+GEN = 16
+PREFILL_CHUNK = 32
+
+
+def run() -> dict:
+    cfg = get_config(ARCH).reduced(dtype=jnp.float32)
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    rng = np.random.default_rng(0)
+    lens = [max(4, PROMPT_MEAN + int(d))
+            for d in rng.integers(-8, 9, N_REQUESTS)]
+    prompts = [rng.integers(0, cfg.vocab, (n,)).tolist() for n in lens]
+    max_seq = max(16, -(-(max(lens) + GEN) // 16) * 16)
+
+    section(f"serve: {N_REQUESTS} requests, prompts {min(lens)}-{max(lens)} "
+            f"tokens, gen {GEN}, reduced {ARCH} "
+            f"({param_count(api.param_specs(cfg)) / 1e6:.2f}M params)")
+
+    # ---- per-token baseline: the legacy lockstep loop needs equal prompt
+    # lengths, so staggered traffic runs request by request — exactly how
+    # the seed serve loop would handle it without a scheduler.
+    base_prefill_s = base_decode_s = 0.0
+    base_prefill_toks = base_decode_toks = 0
+    for pr in prompts:
+        _, st = generate(cfg, params, np.asarray([pr], np.int32), GEN)
+        base_prefill_s += st["prefill_s"]
+        base_decode_s += st["decode_s"]
+        base_prefill_toks += len(pr) - 1
+        base_decode_toks += GEN
+    base = {
+        "prefill_tok_s": base_prefill_toks / max(base_prefill_s, 1e-9),
+        "decode_tok_s": base_decode_toks / max(base_decode_s, 1e-9),
+    }
+
+    # ---- engine: chunked prefill + continuous batching (+ paged split-K)
+    eng = ServeEngine(cfg, params, max_slots=SLOTS, max_seq=max_seq,
+                      prefill_chunk=PREFILL_CHUNK)
+    reqs = [eng.submit(pr, GEN) for pr in prompts]
+    eng.warmup()
+    eng.run()
+    assert all(len(r.generated) == GEN for r in reqs)
+    stats = eng.stats_summary()
+
+    rows = [
+        {"path": "per_token_loop", "prefill_tok_s": base["prefill_tok_s"],
+         "decode_tok_s": base["decode_tok_s"], "occupancy": 1.0 / SLOTS},
+        {"path": "engine", "prefill_tok_s": stats["prefill_tok_s"],
+         "decode_tok_s": stats["decode_tok_s"],
+         "occupancy": stats["mean_occupancy"]},
+    ]
+    print_rows(rows)
+    speedup_prefill = stats["prefill_tok_s"] / base["prefill_tok_s"]
+    speedup_decode = stats["decode_tok_s"] / base["decode_tok_s"]
+    print(f"\nchunked prefill speedup: {speedup_prefill:.1f}x   "
+          f"batched decode speedup: {speedup_decode:.1f}x   "
+          f"(page={eng.page_size}, buckets={eng.chunk_buckets})")
+    assert speedup_prefill >= 5.0, (
+        f"chunked prefill only {speedup_prefill:.1f}x over per-token")
+
+    return {
+        "arch": cfg.arch_id,
+        "requests": N_REQUESTS,
+        "slots": SLOTS,
+        "gen": GEN,
+        "prompt_lens": lens,
+        "max_seq": max_seq,
+        "prefill_chunk": PREFILL_CHUNK,
+        "page_size": eng.page_size,
+        "per_token": base,
+        "engine": {
+            "prefill_tok_s": stats["prefill_tok_s"],
+            "decode_tok_s": stats["decode_tok_s"],
+            "prefill_s": stats["prefill_s"],
+            "decode_s": stats["decode_s"],
+            "mean_occupancy": stats["mean_occupancy"],
+            "decode_steps": stats["decode_steps"],
+        },
+        "prefill_speedup": speedup_prefill,
+        "decode_speedup": speedup_decode,
+        "compile_excluded": True,
+    }
+
+
+if __name__ == "__main__":
+    run()

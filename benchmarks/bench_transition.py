@@ -12,6 +12,7 @@ from benchmarks.common import Row, print_rows, section
 
 
 def run() -> dict:
+    out = {}
     section("Table 3 anchor (k=2, M=3): transition at N = 16 + 3 = 19")
     rows = []
     for n in (15, 16, 18, 19):
@@ -24,6 +25,7 @@ def run() -> dict:
     n_star = ct.column_transition_N(3, 4, 2)
     assert (delta, n_star) == (3, 19), (delta, n_star)
     print(f"eqn-20 solver: delta={delta}, N*={n_star} (paper: 3, 19)")
+    out["table3_anchor"] = rows
 
     section("eqn (20) sweep: transitions for k in {2,10,16}")
     rows = []
@@ -39,7 +41,9 @@ def run() -> dict:
     print_rows(rows)
     print(f"\nall {len(rows)} transitions verified exactly "
           f"(carry widens by exactly one digit at N*)")
-    return {"transitions_verified": len(rows)}
+    out["transitions_verified"] = len(rows)
+    out["transition_sweep"] = rows
+    return out
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ import traceback
 
 from benchmarks import (bench_adders, bench_carry_tables, bench_cla_vs_lut,
                         bench_collectives, bench_lemma3, bench_moa_kernels,
-                        bench_neuron, bench_transition)
+                        bench_neuron, bench_serve, bench_transition)
 
 BENCHES = {
     "carry_tables": (bench_carry_tables, "Tables 1a/1b/1c + 2"),
@@ -28,6 +28,7 @@ BENCHES = {
     "moa_kernels": (bench_moa_kernels, "kernel layer"),
     "neuron": (bench_neuron, "§8 neurons"),
     "collectives": (bench_collectives, "§7 tree collectives"),
+    "serve": (bench_serve, "chunked-prefill continuous-batching engine"),
 }
 
 

@@ -13,6 +13,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -q
 
 # Benchmark smoke: the carry-table bench exercises the theory layer end to
-# end and is fast enough for CI; collectives emits the perf-trajectory JSON.
+# end and is fast enough for CI; collectives and serve emit the
+# perf-trajectory JSONs (serve also dry-runs the chunked-prefill
+# continuous-batching engine on a fresh checkout).
 python -m benchmarks.run --only carry_tables
 python -m benchmarks.run --only collectives
+python -m benchmarks.run --only serve

@@ -62,6 +62,9 @@ class ModelConfig:
     ssm_chunk: int = 256
     use_moa_reduce: bool = True    # fused multi-operand combine kernels
     use_flash_attn: bool = True    # Pallas streaming-softmax attention (TPU)
+    # serve-engine paged split-K decode: KV pages combined via the shared
+    # radix-4 ReductionPlan (0 = dense cache-attend decode)
+    decode_page_size: int = 0
 
     @property
     def hd(self) -> int:

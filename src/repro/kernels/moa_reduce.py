@@ -34,10 +34,10 @@ try:  # TPU compiler params are versioned; fall back gracefully.
 except Exception:  # pragma: no cover
     _COMPILER_PARAMS = None
 
-__all__ = ["moa_reduce_kernel", "moa_reduce_pallas"]
+__all__ = ["moa_reduce_kernel", "moa_reduce_pallas", "radix4_tree_sum"]
 
 
-def _radix4_tree_sum(x: jnp.ndarray,
+def radix4_tree_sum(x: jnp.ndarray,
                      plan: "dist_plan.ReductionPlan | None" = None) -> jnp.ndarray:
     """Radix-4 tree reduction over axis 0 (the §7 tree, in registers).
 
@@ -76,7 +76,7 @@ def moa_reduce_kernel(x_ref, o_ref, *, acc_dtype, n_total, bk):
     if n_total % bk:
         offs = k * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1, 1), 0)
         x = jnp.where(offs < n_total, x, jnp.zeros_like(x))
-    partial = _radix4_tree_sum(x.astype(acc_dtype),
+    partial = radix4_tree_sum(x.astype(acc_dtype),
                                dist_plan.make_reduction_plan(bk))
 
     @pl.when(k == 0)
@@ -127,3 +127,7 @@ def moa_reduce_pallas(x: jnp.ndarray, *, bm: int = 256, bn: int = 256,
         interpret=interpret,
     )(x)
     return acc.astype(out_dtype)
+
+
+# Back-compat alias: pre-serve-engine callers imported the private name.
+_radix4_tree_sum = radix4_tree_sum

@@ -18,9 +18,14 @@ def moa_reduce_ref(x: jnp.ndarray, acc_dtype=jnp.float32,
 
 
 def bitplane_add_ref(x: jnp.ndarray, m_bits: int) -> jnp.ndarray:
-    """Exact integer column sums — width checked by the caller."""
+    """Exact integer column sums — width checked by the caller.
+
+    The accumulator is explicitly int32: the kernel wrapper has already
+    validated (via the carry-width plan) that the N-operand sum fits, and
+    with x64 disabled an int64 astype would silently truncate to int32
+    anyway, emitting a UserWarning on every call."""
     del m_bits  # widths are validated by the kernel wrapper
-    return jnp.sum(x.astype(jnp.int64), axis=0).astype(jnp.int32)
+    return jnp.sum(x.astype(jnp.int32), axis=0)
 
 
 def quant_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

@@ -1,13 +1,14 @@
-"""Serving driver: batched prefill + decode with a persistent KV/SSM cache.
+"""Serving driver: chunked-prefill, continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
-        --reduced --batch 4 --prompt-len 16 --gen 32
+        --reduced --requests 8 --slots 4 --prompt-len 16 --gen 32
 
-Implements the production serve loop shape: requests are batched, the
-prompt is ingested token-by-token into the cache (prefill), then greedy
-decode emits ``--gen`` tokens per request. Decode state layout comes from
-``decode_state_specs`` — the same specs the dry-run shards over the
-production mesh.
+Requests flow through :class:`repro.serve.ServeEngine`: prompts are
+ingested by shape-bucketed chunked prefill (one jitted dispatch per prompt
+block), and decode is continuously batched — short and long requests share
+every decode step at per-slot positions, finished slots are refilled
+mid-flight.  ``--per-token`` instead runs :func:`generate`, the legacy
+one-dispatch-per-token loop kept as the measurement baseline.
 """
 from __future__ import annotations
 
@@ -21,22 +22,33 @@ import numpy as np
 from repro.configs.registry import get_config, list_archs
 from repro.models.common import init_params
 from repro.models.registry import get_api
+from repro.serve import ServeEngine, state_zeros
 
-__all__ = ["main", "generate"]
+__all__ = ["main", "generate", "serve_batch"]
 
 
 def generate(cfg, params, prompts: np.ndarray, gen: int,
              greedy: bool = True, seed: int = 0):
-    """prompts: (B, P) int32. Returns (B, P+gen) generated ids + stats."""
+    """Legacy per-token serve loop (the measurement baseline).
+
+    prompts: (B, P) int32. Returns (B, P+gen) generated ids + stats.
+    One ``decode_step`` dispatch per token for every phase — prefill
+    included — which is exactly the dispatch-bound shape the engine
+    replaces.  Kept for baseline benchmarks and equivalence tests.
+    """
     api = get_api(cfg)
     b, p = prompts.shape
     max_seq = p + gen
-    state = jax.tree.map(
-        jnp.zeros_like,
-        init_params(api.decode_state_specs(cfg, b, max_seq),
-                    jax.random.key(1)))
+    # decode caches are declared zero-init: build zeros straight from the
+    # specs instead of drawing random parameters only to zero them
+    state = state_zeros(api.decode_state_specs(cfg, b, max_seq))
     dstep = jax.jit(lambda pr, s, batch: api.decode_step(pr, s, batch, cfg))
     toks = jnp.asarray(prompts, jnp.int32)
+    # warm up OUTSIDE the timed region: the first call compiles; replaying
+    # it on a discarded state keeps compile time out of prefill_s/decode_s
+    dstep(params, state, {"tokens": toks[:, :1],
+                          "index": jnp.asarray(0, jnp.int32)}
+          )[0].block_until_ready()
     out = [toks]
     key = jax.random.key(seed)
     t_prefill = t_decode = 0.0
@@ -62,18 +74,48 @@ def generate(cfg, params, prompts: np.ndarray, gen: int,
         cur = nxt
         out.append(nxt)
     ids = jnp.concatenate(out, axis=1)
-    return np.asarray(ids), {"prefill_s": t_prefill, "decode_s": t_decode,
-                             "decode_tok_s": b * gen / max(t_decode, 1e-9)}
+    return np.asarray(ids), {
+        "prefill_s": t_prefill, "decode_s": t_decode,
+        "prefill_tok_s": b * (p - 1) / max(t_prefill, 1e-9),
+        "decode_tok_s": b * gen / max(t_decode, 1e-9)}
+
+
+def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
+                max_seq: int = 0, prefill_chunk: int = 32,
+                page_size=None):
+    """Run a list of requests through the engine; returns (outputs, stats).
+
+    prompts: list of 1-D int token lists; gens: per-request generation
+    lengths (int or list). Outputs are per-request generated-token lists in
+    submission order."""
+    if isinstance(gens, int):
+        gens = [gens] * len(prompts)
+    if not max_seq:
+        max_seq = max(len(p) + g for p, g in zip(prompts, gens))
+        max_seq = max(16, -(-max_seq // 16) * 16)        # pad to 16
+    eng = ServeEngine(cfg, params, max_slots=slots, max_seq=max_seq,
+                      prefill_chunk=prefill_chunk, page_size=page_size)
+    reqs = [eng.submit(list(p), g) for p, g in zip(prompts, gens)]
+    eng.warmup()
+    eng.run()
+    return [r.generated for r in reqs], eng.stats_summary()
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="llama3.2-3b", choices=list_archs())
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="mean prompt length (lengths are staggered)")
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--page", type=int, default=None,
+                    help="KV page size for the split-K decode combine "
+                         "(default auto; 0 = dense)")
+    ap.add_argument("--per-token", action="store_true",
+                    help="run the legacy per-token baseline loop instead")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -85,16 +127,40 @@ def main(argv=None) -> int:
     api = get_api(cfg)
     params = init_params(api.param_specs(cfg), jax.random.key(args.seed))
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    ids, stats = generate(cfg, params, prompts, args.gen,
-                          greedy=not args.sample, seed=args.seed)
-    print(f"arch={cfg.arch_id} batch={args.batch} "
-          f"prompt={args.prompt_len} gen={args.gen}")
-    print(f"prefill {stats['prefill_s']:.2f}s  decode {stats['decode_s']:.2f}s"
-          f"  throughput {stats['decode_tok_s']:.1f} tok/s")
-    print(f"first request ids: {ids[0, :args.prompt_len]} -> "
-          f"{ids[0, args.prompt_len:]}")
+
+    if args.per_token:
+        prompts = rng.integers(0, cfg.vocab,
+                               (args.slots, args.prompt_len)).astype(np.int32)
+        ids, stats = generate(cfg, params, prompts, args.gen)
+        print(f"[per-token] arch={cfg.arch_id} batch={args.slots} "
+              f"prompt={args.prompt_len} gen={args.gen}")
+        print(f"prefill {stats['prefill_s']:.2f}s "
+              f"({stats['prefill_tok_s']:.1f} tok/s)  "
+              f"decode {stats['decode_s']:.2f}s "
+              f"({stats['decode_tok_s']:.1f} tok/s)")
+        print(f"first request ids: {ids[0, :args.prompt_len]} -> "
+              f"{ids[0, args.prompt_len:]}")
+        return 0
+
+    # staggered prompt lengths around --prompt-len: the continuous-batching
+    # case (uniform lengths would never exercise refill)
+    lens = [max(1, args.prompt_len + int(d))
+            for d in rng.integers(-args.prompt_len // 2,
+                                  args.prompt_len // 2 + 1, args.requests)]
+    prompts = [rng.integers(0, cfg.vocab, (n,)).tolist() for n in lens]
+    outs, stats = serve_batch(cfg, params, prompts, args.gen,
+                              slots=args.slots,
+                              prefill_chunk=args.prefill_chunk,
+                              page_size=args.page)
+    print(f"[engine] arch={cfg.arch_id} requests={args.requests} "
+          f"slots={args.slots} gen={args.gen} "
+          f"prompt_lens={lens}")
+    print(f"prefill {stats['prefill_s']:.2f}s "
+          f"({stats['prefill_tok_s']:.1f} tok/s)  "
+          f"decode {stats['decode_s']:.2f}s "
+          f"({stats['decode_tok_s']:.1f} tok/s)  "
+          f"occupancy {stats['mean_occupancy']:.0%}")
+    print(f"first request: {prompts[0]} -> {outs[0]}")
     return 0
 
 

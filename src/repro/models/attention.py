@@ -22,9 +22,58 @@ from repro.models.common import (ParamSpec, apply_rope, constrain,
                                  rope_angles, shardmap_mesh)
 from repro.models.common import scan as mscan
 
-__all__ = ["gqa_param_specs", "gqa_train", "gqa_decode"]
+__all__ = ["gqa_param_specs", "gqa_train", "gqa_decode", "gqa_decode_paged",
+           "decode_positions", "batched_cache_write", "causal_valid"]
 
 NEG_INF = -1e30
+
+
+def decode_positions(cur_index: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """Query positions for a decode/prefill call.
+
+    ``cur_index`` is either a scalar (all sequences at the same length — the
+    classic lockstep decode) or a per-sequence ``(B,)`` vector (continuous
+    batching: every slot advances independently).  Returns ``(C,)`` positions
+    for the scalar case and ``(B, C)`` for the vector case.
+    """
+    cur = jnp.asarray(cur_index, jnp.int32)
+    offs = jnp.arange(chunk, dtype=jnp.int32)
+    if cur.ndim == 0:
+        return cur[None] + offs if chunk > 1 else cur[None]
+    return cur[:, None] + offs[None, :]
+
+
+def _rope_tables(positions: jnp.ndarray, dim: int, theta: float):
+    """(sin, cos) shaped so they broadcast against (B, C, H, dim) queries:
+    ``(C, 1, dim/2)`` for shared positions, ``(B, C, 1, dim/2)`` per-slot."""
+    sin, cos = rope_angles(positions, dim, theta)
+    return sin[..., None, :], cos[..., None, :]
+
+
+def causal_valid(pos: jnp.ndarray, smax: int) -> jnp.ndarray:
+    """Attendable-key mask for decode: key position s is visible to query
+    c of sequence b iff s <= position(b, c).  ``pos`` is (C,) (shared
+    positions) or (B, C) (per-slot); returns (1, 1, C, S) or (B, 1, C, S)
+    ready to broadcast against (B, H, C, S) scores."""
+    k_pos = jnp.arange(smax, dtype=jnp.int32)
+    if pos.ndim == 1:
+        return (k_pos[None, :] <= pos[:, None])[None, None]
+    return (k_pos[None, None, :] <= pos[:, :, None])[:, None]
+
+
+def batched_cache_write(cache: jnp.ndarray, new: jnp.ndarray,
+                        cur_index: jnp.ndarray) -> jnp.ndarray:
+    """Write ``new`` (B, C, ...) into ``cache`` (B, S, ...) at sequence
+    offset ``cur_index`` — scalar (one shared offset) or (B,) (one offset
+    per slot, vmapped dynamic_update_slice)."""
+    new = new.astype(cache.dtype)
+    zeros = (0,) * (cache.ndim - 2)
+    if cur_index.ndim == 0:
+        return jax.lax.dynamic_update_slice(cache, new,
+                                            (0, cur_index) + zeros)
+    return jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i,) + zeros)
+    )(cache, new, cur_index)
 
 
 def gqa_param_specs(cfg: ModelConfig, prefix_layers: bool = True) -> dict:
@@ -289,29 +338,44 @@ def splitk_ok(cfg: ModelConfig, mesh, batch: int, smax: int) -> bool:
     return smax % mesh.shape["model"] == 0 and batch % dp == 0
 
 
+def _decode_qkv_cache(x, p, cfg, cache_k, cache_v, cur_index):
+    """Shared decode front-end: project + rope the C new tokens, write them
+    into the cache at per-slot offsets, return (q, caches, valid mask).
+
+    ``valid`` is (B or 1, 1, C, Smax): key position s is attendable by
+    query c of sequence b iff s <= position(b, c)."""
+    b, c, _ = x.shape
+    smax = cache_k.shape[1]
+    cur = jnp.asarray(cur_index, jnp.int32)
+    q, k_new, v_new = _project_qkv(x, p, cfg)
+    pos = decode_positions(cur, c)                   # (C,) or (B, C)
+    sin, cos = _rope_tables(pos, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_new = apply_rope(k_new, sin, cos)
+    cache_k = batched_cache_write(cache_k, k_new, cur)
+    cache_v = batched_cache_write(cache_v, v_new, cur)
+    cache_k = constrain(cache_k, ("batch", "kv_seq", None, None))
+    cache_v = constrain(cache_v, ("batch", "kv_seq", None, None))
+    return q, cache_k, cache_v, causal_valid(pos, smax)
+
+
 def gqa_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                cache_k: jnp.ndarray, cache_v: jnp.ndarray,
                cur_index: jnp.ndarray
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """One-token decode. x: (B, 1, D); cache_{k,v}: (B, Smax, Hkv, hd)
+    """Cache-attend decode / chunked prefill. x: (B, C, D) — C == 1 is the
+    classic one-token step, C > 1 ingests a whole prompt chunk in one call;
+    ``cur_index`` is a scalar (lockstep) or (B,) vector (continuous
+    batching, every slot at its own length). cache_{k,v}: (B, Smax, Hkv, hd)
     sharded (batch, kv_seq). Returns (out, new_cache_k, new_cache_v).
 
     The softmax over the kv_seq-sharded axis lowers to partial max/sum
     accumulators all-reduced across the model axis — split-K decode as a
     multi-operand combine.
     """
-    b, one, d = x.shape
-    smax = cache_k.shape[1]
-    q, k_new, v_new = _project_qkv(x, p, cfg)
-    sin, cos = rope_angles(cur_index[None], cfg.hd, cfg.rope_theta)
-    q = apply_rope(q, sin, cos)
-    k_new = apply_rope(k_new, sin, cos)
-    cache_k = jax.lax.dynamic_update_slice(
-        cache_k, k_new.astype(cache_k.dtype), (0, cur_index, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(
-        cache_v, v_new.astype(cache_v.dtype), (0, cur_index, 0, 0))
-    cache_k = constrain(cache_k, ("batch", "kv_seq", None, None))
-    cache_v = constrain(cache_v, ("batch", "kv_seq", None, None))
+    b, c, d = x.shape
+    q, cache_k, cache_v, valid = _decode_qkv_cache(
+        x, p, cfg, cache_k, cache_v, cur_index)
 
     pad = tp_head_pad(cfg)
     hq = cfg.n_heads + pad
@@ -322,10 +386,71 @@ def gqa_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     scores = jnp.einsum("bchd,bshd->bhcs", q, k) / jnp.sqrt(
         jnp.asarray(cfg.hd, jnp.float32)).astype(x.dtype)
     scores = scores.astype(jnp.float32)
-    valid = (jnp.arange(smax) <= cur_index)[None, None, None, :]
     scores = jnp.where(valid, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bhcs,bshd->bchd", probs, v)  # (b, 1, hq, hd)
+    out = jnp.einsum("bhcs,bshd->bchd", probs, v)  # (b, C, hq, hd)
     out = _unpad_heads(out, pad, cfg.n_kv_heads)
-    out = out.reshape(b, 1, cfg.n_heads * cfg.hd)
+    out = out.reshape(b, c, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def gqa_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     cur_index: jnp.ndarray, page: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged split-K decode: the serve-engine hot path as the fourth
+    consumer of the shared reduction engine.
+
+    The KV cache is viewed as ``n_pages`` fixed-size pages along the
+    sequence axis. Each page contributes a partial (sum-exp, PV) accumulator
+    under the global row max, and the page-axis combine is an explicit
+    N-operand reduction routed through the same radix-4 tree plan
+    (:func:`repro.dist.plan.make_reduction_plan`) that shapes the
+    in-register, in-VMEM, and cross-device tiers — on TPU via the fused
+    Pallas reduce, elsewhere via the identical in-register tree. Identical
+    math to :func:`gqa_decode` up to fp reassociation of the page sums.
+    """
+    import repro.dist.plan as dist_plan
+    from repro.kernels import ops as kops
+    from repro.kernels.moa_reduce import radix4_tree_sum
+
+    b, c, d = x.shape
+    smax = cache_k.shape[1]
+    if smax % page:
+        raise ValueError(f"page={page} must divide max_seq={smax}")
+    n_pages = smax // page
+    q, cache_k, cache_v, valid = _decode_qkv_cache(
+        x, p, cfg, cache_k, cache_v, cur_index)
+
+    pad = tp_head_pad(cfg)
+    hq = cfg.n_heads + pad
+    q = _pad_heads(q, pad, cfg.n_kv_heads)
+    n_rep = hq // cfg.n_kv_heads
+    k = _repeat_kv(cache_k.astype(x.dtype), n_rep)
+    v = _repeat_kv(cache_v.astype(x.dtype), n_rep)
+    scores = jnp.einsum("bchd,bshd->bhcs", q, k) / jnp.sqrt(
+        jnp.asarray(cfg.hd, jnp.float32)).astype(x.dtype)
+    scores = jnp.where(valid, scores.astype(jnp.float32), NEG_INF)
+
+    # split-K over pages: global row max, then per-page partial accumulators
+    m = jnp.max(scores, axis=-1, keepdims=True)              # (b,h,C,1)
+    p_ = jnp.exp(scores - m)                                 # (b,h,C,S)
+    pp = p_.reshape(*p_.shape[:-1], n_pages, page)
+    l_pages = jnp.moveaxis(pp.sum(axis=-1), -1, 0)           # (n_pages,b,h,C)
+    vp = jnp.moveaxis(v.reshape(b, n_pages, page, hq, cfg.hd), 1, 0)
+    o_pages = jnp.einsum("bhcns,nbshd->nbhcd",
+                         pp.astype(x.dtype), vp)             # (n_pages,...)
+
+    plan = dist_plan.make_reduction_plan(n_pages)
+    if kops.on_tpu():
+        flat = lambda t: kops.moa_reduce(
+            t.reshape(n_pages, t.shape[1], -1)).reshape(t.shape[1:])
+        l, o = flat(l_pages), flat(o_pages.astype(jnp.float32))
+    else:
+        l = radix4_tree_sum(l_pages, plan)
+        o = radix4_tree_sum(o_pages.astype(jnp.float32), plan)
+    out = (o / l[..., None]).astype(x.dtype)                 # (b,h,C,hd)
+    out = jnp.moveaxis(out, 1, 2)                            # (b,C,h,hd)
+    out = _unpad_heads(out, pad, cfg.n_kv_heads)
+    out = out.reshape(b, c, cfg.n_heads * cfg.hd)
     return out @ p["wo"].astype(x.dtype), cache_k, cache_v

@@ -22,9 +22,10 @@ from repro.models.lm import stack_specs, vocab_parallel_embed
 
 __all__ = [
     "ssm_param_specs", "ssm_train_loss", "ssm_decode_state_specs",
-    "ssm_decode_step", "ssm_forward",
+    "ssm_decode_step", "ssm_forward", "ssm_prefill_chunk",
     "hybrid_param_specs", "hybrid_train_loss", "hybrid_decode_state_specs",
     "hybrid_decode_step", "hybrid_forward", "hybrid_layout",
+    "hybrid_prefill_chunk",
 ]
 
 
@@ -127,6 +128,44 @@ def ssm_decode_step(params, state, batch, cfg: ModelConfig,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
     return logits.astype(jnp.float32), {"h": hs, "conv": convs}
+
+
+def _scan_prefill(decode_step_fn, params, state, batch, cfg: ModelConfig,
+                  mesh: Optional[Mesh] = None):
+    """Chunked prefill for recurrent-state families: one jitted dispatch
+    ingests the whole (B, C) chunk by scanning the single-token decode step
+    over the chunk *inside* the graph — bit-identical to the per-token loop
+    (it is literally the same step function) minus C-1 host round-trips.
+
+    batch: {"tokens": (B, C), "index": scalar chunk start, "nvalid":
+    scalar count of real tokens (<= C); state updates and logits from
+    padded positions are masked out."""
+    tokens = batch["tokens"]
+    b, c = tokens.shape
+    start = jnp.asarray(batch["index"], jnp.int32)
+    nvalid = jnp.asarray(batch.get("nvalid", c), jnp.int32)
+
+    def step(carry, t):
+        st, logits = carry
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        lg, new_st = decode_step_fn(params, st,
+                                    {"tokens": tok, "index": start + t},
+                                    cfg, mesh)
+        keep = t < nvalid
+        st = jax.tree.map(lambda new, old: jnp.where(keep, new, old),
+                          new_st, st)
+        logits = jnp.where(keep, lg, logits)     # ends at position nvalid-1
+        return (st, logits), None
+
+    logits0 = jnp.zeros((b, cfg.vocab), jnp.float32)
+    (state, logits), _ = jax.lax.scan(step, (state, logits0),
+                                      jnp.arange(c, dtype=jnp.int32))
+    return logits, state
+
+
+def ssm_prefill_chunk(params, state, batch, cfg: ModelConfig,
+                      mesh: Optional[Mesh] = None):
+    return _scan_prefill(ssm_decode_step, params, state, batch, cfg, mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -254,8 +293,10 @@ def hybrid_decode_step(params, state, batch, cfg: ModelConfig,
         (groups, period) + state["h"].shape[1:])
     conv_g = state["conv"][:groups * period].reshape(
         (groups, period) + state["conv"].shape[1:])
-    use_splitk = attention.splitk_ok(cfg, mesh, state["k"].shape[1],
-                                     state["k"].shape[2])
+    # splitk's shard_map assumes one shared write offset -> scalar index only
+    use_splitk = (jnp.ndim(cur) == 0 and
+                  attention.splitk_ok(cfg, mesh, state["k"].shape[1],
+                                      state["k"].shape[2]))
 
     def group(x, gp):
         mamba_p, la, lb, hg, convg, ck, cv = gp
@@ -290,3 +331,8 @@ def hybrid_decode_step(params, state, batch, cfg: ModelConfig,
     logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
     return logits.astype(jnp.float32), {"h": new_h, "conv": new_conv,
                                         "k": cks, "v": cvs}
+
+
+def hybrid_prefill_chunk(params, state, batch, cfg: ModelConfig,
+                         mesh: Optional[Mesh] = None):
+    return _scan_prefill(hybrid_decode_step, params, state, batch, cfg, mesh)

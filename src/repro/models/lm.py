@@ -25,6 +25,7 @@ from repro.models.common import scan as mscan
 __all__ = [
     "param_specs", "block_specs", "stack_specs",
     "forward", "train_loss", "decode_state_specs", "decode_step",
+    "prefill_chunk",
 ]
 
 
@@ -208,12 +209,15 @@ def decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int
     }
 
 
-def decode_step(params: dict, state: Dict[str, jnp.ndarray],
-                batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
-                mesh: Optional[Mesh] = None
-                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """One new token for every sequence. batch: {"tokens": (B, 1),
-    "index": scalar current length}. Returns (logits (B, V), new state)."""
+def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
+                   batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                   mesh: Optional[Mesh] = None
+                   ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Run the block stack in cache-attend mode over C new tokens.
+
+    batch: {"tokens": (B, C), "index": scalar current length OR a (B,)
+    per-slot length vector (continuous batching)}. Returns the final
+    hidden states (B, C, D) and the updated cache state."""
     cur = batch["index"]
     x = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
                              cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
@@ -237,8 +241,14 @@ def decode_step(params: dict, state: Dict[str, jnp.ndarray],
         new_state = {"ckv": ckv, "kr": kr}
     else:
         caches = (state["k"], state["v"])
-        use_splitk = attention.splitk_ok(cfg, mesh, caches[0].shape[1],
-                                         caches[0].shape[2])
+        # splitk's shard_map assumes one shared write offset; paged split-K
+        # is the single-host analogue keyed off the shared reduction plan.
+        use_splitk = (jnp.ndim(cur) == 0 and
+                      attention.splitk_ok(cfg, mesh, caches[0].shape[1],
+                                          caches[0].shape[2]))
+        page = cfg.decode_page_size
+        use_paged = (not use_splitk and page > 0
+                     and caches[0].shape[2] % page == 0)
 
         def layer(x, inp):
             bp, ck, cv = inp
@@ -246,6 +256,9 @@ def decode_step(params: dict, state: Dict[str, jnp.ndarray],
             if use_splitk:
                 h, ck, cv = attention.gqa_decode_splitk(
                     h, bp["attn"], cfg, ck, cv, cur, mesh)
+            elif use_paged:
+                h, ck, cv = attention.gqa_decode_paged(
+                    h, bp["attn"], cfg, ck, cv, cur, page)
             else:
                 h, ck, cv = attention.gqa_decode(h, bp["attn"], cfg, ck, cv,
                                                  cur)
@@ -259,6 +272,37 @@ def decode_step(params: dict, state: Dict[str, jnp.ndarray],
 
         x, (ck, cv) = mscan(layer, x, (params["blocks"],) + caches)
         new_state = {"k": ck, "v": cv}
+    return x, new_state
+
+
+def decode_step(params: dict, state: Dict[str, jnp.ndarray],
+                batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                mesh: Optional[Mesh] = None
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One new token for every sequence. batch: {"tokens": (B, 1),
+    "index": scalar current length or (B,) per-slot lengths}.
+    Returns (logits (B, V), new state)."""
+    x, new_state = _decode_blocks(params, state, batch, cfg, mesh)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
+    logits = (x @ params["lm_head"].astype(x.dtype))[:, -1]
+    return logits.astype(jnp.float32), new_state
+
+
+def prefill_chunk(params: dict, state: Dict[str, jnp.ndarray],
+                  batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                  mesh: Optional[Mesh] = None
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Ingest a whole prompt chunk in ONE dispatch (chunked prefill).
+
+    batch: {"tokens": (B, C), "index": scalar chunk start offset,
+    "nvalid": scalar count of real tokens in the chunk (<= C; trailing
+    bucket padding beyond it only writes masked-off cache positions)}.
+    Returns (logits (B, V) at the last valid position, new state)."""
+    x, new_state = _decode_blocks(params, state, batch, cfg, mesh)
+    nvalid = batch.get("nvalid")
+    last = (jnp.asarray(x.shape[1] if nvalid is None else nvalid, jnp.int32)
+            - 1)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+    x_last = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+    logits = (x_last @ params["lm_head"].astype(x_last.dtype))[:, 0]
     return logits.astype(jnp.float32), new_state

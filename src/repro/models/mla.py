@@ -38,13 +38,22 @@ def mla_param_specs(cfg: ModelConfig) -> dict:
     }
 
 
+def _mla_rope_tables(positions, dr, theta):
+    """Per-slot (B, S) positions need an explicit head axis so the tables
+    broadcast against (B, S, H, dr) instead of colliding with H."""
+    sin, cos = rope_angles(positions, dr, theta)
+    if positions.ndim == 2:
+        sin, cos = sin[:, :, None, :], cos[:, :, None, :]
+    return sin, cos
+
+
 def _queries(x, p, cfg, positions):
     b, s, _ = x.shape
     h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
     ql = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
     q = (ql @ p["wq_b"].astype(x.dtype)).reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    sin, cos = rope_angles(positions, dr, cfg.rope_theta)
+    sin, cos = _mla_rope_tables(positions, dr, cfg.rope_theta)
     return q_nope, apply_rope(q_rope, sin, cos)
 
 
@@ -53,7 +62,7 @@ def _latent_kv(x, p, cfg, positions):
     kv = x @ p["wkv_a"].astype(x.dtype)          # (B, S, rkv + dr)
     c_kv = rms_norm(kv[..., :rkv], p["kv_norm"], cfg.norm_eps)
     k_rope = kv[..., rkv:][..., None, :]         # single shared rope head
-    sin, cos = rope_angles(positions, dr, cfg.rope_theta)
+    sin, cos = _mla_rope_tables(positions, dr, cfg.rope_theta)
     return c_kv, apply_rope(k_rope, sin, cos)[..., 0, :]
 
 
@@ -104,36 +113,39 @@ def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
                cur_index: jnp.ndarray
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Absorbed decode. cache_ckv: (B, Smax, rkv); cache_krope: (B, Smax, dr);
-    both sharded (batch, kv_seq). Score/PV contractions run in latent space.
+    """Absorbed decode / chunked prefill. x: (B, C, D) — C new tokens per
+    sequence; ``cur_index`` scalar (lockstep) or (B,) (per-slot lengths).
+    cache_ckv: (B, Smax, rkv); cache_krope: (B, Smax, dr); both sharded
+    (batch, kv_seq). Score/PV contractions run in latent space.
     """
-    b, _, _ = x.shape
+    from repro.models.attention import (batched_cache_write, causal_valid,
+                                        decode_positions)
+
+    b, c, _ = x.shape
     h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     rkv = cfg.kv_lora_rank
     smax = cache_ckv.shape[1]
-    pos = cur_index[None]
-    q_nope, q_rope = _queries(x, p, cfg, pos)        # (B,1,H,dn),(B,1,H,dr)
-    c_new, kr_new = _latent_kv(x, p, cfg, pos)       # (B,1,rkv),(B,1,dr)
-    cache_ckv = jax.lax.dynamic_update_slice(
-        cache_ckv, c_new.astype(cache_ckv.dtype), (0, cur_index, 0))
-    cache_krope = jax.lax.dynamic_update_slice(
-        cache_krope, kr_new.astype(cache_krope.dtype), (0, cur_index, 0))
+    cur = jnp.asarray(cur_index, jnp.int32)
+    pos = decode_positions(cur, c)                   # (C,) or (B, C)
+    q_nope, q_rope = _queries(x, p, cfg, pos)        # (B,C,H,dn),(B,C,H,dr)
+    c_new, kr_new = _latent_kv(x, p, cfg, pos)       # (B,C,rkv),(B,C,dr)
+    cache_ckv = batched_cache_write(cache_ckv, c_new, cur)
+    cache_krope = batched_cache_write(cache_krope, kr_new, cur)
     cache_ckv = constrain(cache_ckv, ("batch", "kv_seq", None))
     cache_krope = constrain(cache_krope, ("batch", "kv_seq", None))
 
-    # absorb wk_b into the query: q_lat (B,H,rkv)
+    # absorb wk_b into the query: q_lat (B,C,H,rkv)
     wk_b = p["wk_b"].astype(x.dtype).reshape(rkv, h, dn)
-    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wk_b)
+    q_lat = jnp.einsum("bchd,rhd->bchr", q_nope, wk_b)
     ckv = cache_ckv.astype(x.dtype)
-    scores = (jnp.einsum("bhr,bsr->bhs", q_lat, ckv) +
-              jnp.einsum("bhd,bsd->bhs", q_rope[:, 0],
+    scores = (jnp.einsum("bchr,bsr->bhcs", q_lat, ckv) +
+              jnp.einsum("bchd,bsd->bhcs", q_rope,
                          cache_krope.astype(x.dtype)))
     scores = scores.astype(jnp.float32) / jnp.sqrt(float(dn + dr))
-    valid = (jnp.arange(smax) <= cur_index)[None, None, :]
-    scores = jnp.where(valid, scores, NEG_INF)
+    scores = jnp.where(causal_valid(pos, smax), scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    ctx_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv)   # (B,H,rkv)
+    ctx_lat = jnp.einsum("bhcs,bsr->bchr", probs, ckv)   # (B,C,H,rkv)
     wv_b = p["wv_b"].astype(x.dtype).reshape(rkv, h, dv)
-    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat, wv_b)
-    out = ctx.reshape(b, 1, h * dv) @ p["wo"].astype(x.dtype)
+    ctx = jnp.einsum("bchr,rhd->bchd", ctx_lat, wv_b)
+    out = ctx.reshape(b, c, h * dv) @ p["wo"].astype(x.dtype)
     return out, cache_ckv, cache_krope

@@ -17,20 +17,26 @@ class ModelAPI:
     forward: Callable[..., Any]
     decode_state_specs: Optional[Callable[..., Any]]
     decode_step: Optional[Callable[..., Any]]
+    #: chunked prefill: ingest a (B, C) prompt chunk in one dispatch.
+    #: Signature matches decode_step with batch keys {tokens, index, nvalid};
+    #: returns (logits at the last valid position, new state).
+    prefill_chunk: Optional[Callable[..., Any]] = None
 
 
 def get_api(cfg: ModelConfig) -> ModelAPI:
     if cfg.family == "ssm":
         return ModelAPI(hybrid.ssm_param_specs, hybrid.ssm_train_loss,
                         hybrid.ssm_forward, hybrid.ssm_decode_state_specs,
-                        hybrid.ssm_decode_step)
+                        hybrid.ssm_decode_step, hybrid.ssm_prefill_chunk)
     if cfg.family == "hybrid":
         return ModelAPI(hybrid.hybrid_param_specs, hybrid.hybrid_train_loss,
                         hybrid.hybrid_forward,
                         hybrid.hybrid_decode_state_specs,
-                        hybrid.hybrid_decode_step)
+                        hybrid.hybrid_decode_step,
+                        hybrid.hybrid_prefill_chunk)
     # dense / moe / vlm / audio all run through the unified LM
     decode_specs = None if cfg.encoder_only else lm.decode_state_specs
     decode_step = None if cfg.encoder_only else lm.decode_step
+    prefill = None if cfg.encoder_only else lm.prefill_chunk
     return ModelAPI(lm.param_specs, lm.train_loss, lm.forward,
-                    decode_specs, decode_step)
+                    decode_specs, decode_step, prefill)

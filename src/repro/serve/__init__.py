@@ -1,0 +1,11 @@
+"""Serving subsystem: chunked prefill + continuous batching over the
+shared decode state (see :mod:`repro.serve.engine`)."""
+from repro.serve.cache import (reset_slot, slot_slice, slot_update,
+                               state_bytes, state_zeros)
+from repro.serve.engine import ServeEngine, auto_page_size
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = [
+    "ServeEngine", "auto_page_size", "Request", "Scheduler",
+    "state_zeros", "slot_slice", "slot_update", "reset_slot", "state_bytes",
+]

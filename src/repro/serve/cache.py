@@ -1,0 +1,100 @@
+"""Per-slot decode-state management (the serve engine's page table).
+
+The engine owns ONE batched decode-state pytree, declared by
+``decode_state_specs(cfg, max_slots, max_seq)``.  Each request is pinned to
+a *slot* — one index of the batch axis — and every state leaf is treated as
+a page of that slot: admission touches exactly the admitted slot's pages
+(slice / reset / write-back via dynamic slicing on the leaf's batch axis),
+never the whole batch.  The batch axis can sit at a different position per
+leaf (e.g. ``(layers, batch, seq, ...)``), so its index is read off the
+ParamSpec's logical axis names rather than assumed.
+
+Everything here is jax-traceable and is used *inside* the engine's jitted
+prefill/decode functions.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+__all__ = ["state_zeros", "batch_axis", "slot_slice", "slot_update",
+           "reset_slot", "state_bytes"]
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def state_zeros(specs: Any) -> Any:
+    """Zero decode state straight from the spec tree.
+
+    Decode caches are *declared* zero-initialized, so allocate zeros
+    directly — no PRNG, no drawing full random parameters only to discard
+    them (the seed serve loop paid an entire ``init_params`` + per-leaf
+    ``zeros_like`` for every batch)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
+                        is_leaf=_is_spec)
+
+
+def batch_axis(spec: ParamSpec) -> int:
+    """Index of the batch (slot) axis in one state leaf."""
+    return spec.axes.index("batch")
+
+
+def _leaf_slot_slice(leaf: jnp.ndarray, spec: ParamSpec, slot) -> jnp.ndarray:
+    ax = batch_axis(spec)
+    starts = [jnp.asarray(0, jnp.int32)] * leaf.ndim
+    starts[ax] = jnp.asarray(slot, jnp.int32)
+    sizes = list(leaf.shape)
+    sizes[ax] = 1
+    return jax.lax.dynamic_slice(leaf, starts, sizes)
+
+
+def _leaf_slot_update(leaf: jnp.ndarray, spec: ParamSpec, slot,
+                      update: jnp.ndarray) -> jnp.ndarray:
+    ax = batch_axis(spec)
+    starts = [jnp.asarray(0, jnp.int32)] * leaf.ndim
+    starts[ax] = jnp.asarray(slot, jnp.int32)
+    return jax.lax.dynamic_update_slice(leaf, update.astype(leaf.dtype),
+                                        starts)
+
+
+def slot_slice(state: Any, specs: Any, slot) -> Any:
+    """Extract one slot's pages as a batch-1 state tree (jit-traceable)."""
+    return jax.tree.map(
+        lambda leaf, s: _leaf_slot_slice(leaf, s, slot), state, specs,
+        is_leaf=lambda x: _is_spec(x))
+
+
+def slot_update(state: Any, specs: Any, slot, slot_state: Any) -> Any:
+    """Write a batch-1 state tree back into ``slot`` of the batched state."""
+    return jax.tree.map(
+        lambda leaf, s, upd: _leaf_slot_update(leaf, s, slot, upd),
+        state, specs, slot_state, is_leaf=lambda x: _is_spec(x))
+
+
+def reset_slot(state: Any, specs: Any, slot) -> Any:
+    """Zero exactly one slot's pages (admission must not disturb the other
+    slots mid-flight, and must not re-zero the whole batch)."""
+    return jax.tree.map(
+        lambda leaf, s: _leaf_slot_update(
+            leaf, s, slot,
+            jnp.zeros([1 if i == batch_axis(s) else d
+                       for i, d in enumerate(leaf.shape)], leaf.dtype)),
+        state, specs, is_leaf=lambda x: _is_spec(x))
+
+
+def state_bytes(specs: Any) -> int:
+    """Total decode-state footprint (for logs/benchmarks)."""
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * jnp.dtype(s.dtype).itemsize
+    return total

@@ -1,0 +1,152 @@
+"""Continuous-batching scheduler: admit / decode / retire / evict.
+
+Pure host-side Python — no jax — so scheduling policy is unit-testable
+without compiling a model.  The engine asks three questions every step:
+
+1. ``admissions()`` — which pending requests go into which free slots now
+   (chunked prefill happens per admission);
+2. after the batched decode step, ``on_decode(tokens)`` — append one token
+   to every live request, retire the finished ones, free their slots;
+3. ``has_work`` — is anything pending or live.
+
+Short and long requests share every decode step: a slot freed by a finished
+request is refilled on the next ``admissions()`` call while the remaining
+slots keep decoding (slot refill mid-flight).  ``evict()`` preempts a live
+request back to the pending queue — its re-admission re-prefills prompt +
+tokens generated so far, so no output is lost.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+__all__ = ["Request", "Scheduler"]
+
+_rid_counter = itertools.count()
+
+
+@dataclass
+class Request:
+    """One generation request plus its runtime bookkeeping."""
+
+    prompt: Sequence[int]
+    max_new: int
+    rid: int = field(default_factory=lambda: next(_rid_counter))
+    eos_id: Optional[int] = None
+
+    # runtime state (owned by the scheduler/engine)
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    pos: int = 0                # tokens currently in the slot's cache
+
+    @property
+    def context(self) -> List[int]:
+        """Tokens to prefill on (re-)admission: prompt + already generated."""
+        return list(self.prompt) + self.generated
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        if self.generated and self.eos_id is not None \
+                and self.generated[-1] == self.eos_id:
+            return True
+        return self.remaining <= 0
+
+
+class Scheduler:
+    """Fixed-width slot scheduler over a shared decode batch."""
+
+    def __init__(self, max_slots: int, max_seq: int):
+        if max_slots < 1:
+            raise ValueError("need at least one slot")
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.pending: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+
+    # -------------------------------------------------------------- submit
+    def submit(self, req: Request) -> Request:
+        # a request must fit its context + at least one generated token
+        if len(req.context) + 1 > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: context {len(req.context)} + 1 token "
+                f"exceeds max_seq={self.max_seq}")
+        self.pending.append(req)
+        return req
+
+    # ---------------------------------------------------------- admissions
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.max_slots) if s not in self.active]
+
+    def admissions(self) -> List[Tuple[int, Request]]:
+        """Pair waiting requests with free slots (FIFO). The caller performs
+        the actual prefill, then the request is live in its slot."""
+        pairs = []
+        for slot in self.free_slots():
+            if not self.pending:
+                break
+            req = self.pending.popleft()
+            req.slot = slot
+            req.pos = 0
+            self.active[slot] = req
+            pairs.append((slot, req))
+        return pairs
+
+    # -------------------------------------------------------------- decode
+    def on_prefill(self, req: Request, first_token: int) -> None:
+        """Record the prefill result: cache holds the context, plus the
+        first generated token sampled from the prefill logits."""
+        req.pos = len(req.context)
+        req.generated.append(int(first_token))
+        self._maybe_retire(req)
+
+    def on_decode(self, tokens: Dict[int, int]) -> List[Request]:
+        """Advance every live slot by its sampled token; returns the
+        requests that finished this step (their slots are free again)."""
+        done = []
+        for slot, tok in tokens.items():
+            req = self.active.get(slot)
+            if req is None:
+                continue
+            req.generated.append(int(tok))
+            req.pos += 1
+            if self._maybe_retire(req):
+                done.append(req)
+        return done
+
+    def _maybe_retire(self, req: Request) -> bool:
+        # the next decode would write cache position req.pos; retire when
+        # the cache is full instead
+        hit_cap = req.pos >= self.max_seq
+        if req.done or hit_cap:
+            if req.slot in self.active:
+                del self.active[req.slot]
+            req.slot = None
+            self.finished.append(req)
+            return True
+        return False
+
+    # --------------------------------------------------------------- evict
+    def evict(self, slot: int) -> Request:
+        """Preempt a live request back to the head of the pending queue.
+        Re-admission re-prefills prompt + generated, continuing seamlessly."""
+        req = self.active.pop(slot)
+        req.slot = None
+        req.pos = 0
+        self.pending.appendleft(req)
+        return req
+
+    # --------------------------------------------------------------- state
+    @property
+    def has_work(self) -> bool:
+        return bool(self.pending or self.active)
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.active) / self.max_slots
