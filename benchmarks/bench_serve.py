@@ -1,5 +1,5 @@
 """Serving benchmark: chunked-prefill continuous batching vs the legacy
-per-token loop.
+per-token loop, plus prefix-cache reuse on a shared-prefix workload.
 
 The paper's Lemma-3 question — when do many shared small reduction units
 beat dedicated large ones — is the serving question: how many concurrent
@@ -9,11 +9,16 @@ the answer for the reduced config on CPU:
 * per-token baseline: one ``decode_step`` dispatch per token (prefill AND
   decode), the seed repo's serve loop, warmed up so compile is excluded;
 * engine: shape-bucketed chunked prefill + continuously-batched decode at
-  per-slot positions, AOT-compiled so timings never include compile.
+  per-slot positions, AOT-compiled so timings never include compile;
+* shared-prefix workload: requests extending one system prompt, served
+  cold (prefix cache off) and warm (on) — the warm run skips chunked
+  prefill for every resident prefix span, and the uplift in *effective*
+  prefill tok/s (reused tokens count as served) is the prefix-cache win.
 
 Emits ``results/BENCH_serve.json`` with prefill/decode tok/s for both
-paths, the prefill speedup, and decode batch occupancy — the perf
-trajectory baseline for later serving PRs.
+paths, the prefill speedup, decode batch occupancy, and the prefix-cache
+hit/miss/reuse counters — the perf trajectory baseline for later serving
+PRs.  See ``docs/serving.md`` for what each metric excludes.
 """
 from __future__ import annotations
 
@@ -35,6 +40,37 @@ SLOTS = 4
 PROMPT_MEAN = 32
 GEN = 16
 PREFILL_CHUNK = 32
+# Shared-prefix workload: a long system prompt + short unique tails, the
+# shape prefix caching exists for.  96 shared tokens = three full 32-token
+# prefill chunks skipped per hit (the tail still prefills, so every request
+# produces fresh logits to sample from).
+SHARED_PREFIX = 96
+TAIL = 8
+
+
+def _prefix_workload(cfg, params, prompts, *, prefix_cache: bool) -> dict:
+    """Serve the shared-prefix request list and return prefill-side stats
+    (``prefix_cache`` toggles reuse; greedy decode, warmed AOT engine)."""
+    max_seq = max(16, -(-(max(len(p) for p in prompts) + GEN) // 16) * 16)
+    eng = ServeEngine(cfg, params, max_slots=SLOTS, max_seq=max_seq,
+                      prefill_chunk=PREFILL_CHUNK,
+                      prefix_cache=prefix_cache, min_prefix=8)
+    reqs = [eng.submit(p, GEN) for p in prompts]
+    eng.warmup()
+    eng.run()
+    assert all(len(r.generated) == GEN for r in reqs)
+    st = eng.stats_summary()
+    return {
+        "prefill_s": st["prefill_s"],
+        "prefill_tok_s": st["prefill_tok_s"],
+        "effective_prefill_tok_s": st["effective_prefill_tok_s"],
+        "prefill_tokens": st["prefill_tokens"],
+        "prefix_hits": st["prefix_hits"],
+        "prefix_misses": st["prefix_misses"],
+        "prefix_hit_rate": st["prefix_hit_rate"],
+        "prefix_reused_tokens": st["prefix_reused_tokens"],
+        "tokens": [r.generated for r in reqs],
+    }
 
 
 def run() -> dict:
@@ -92,6 +128,34 @@ def run() -> dict:
     assert speedup_prefill >= 5.0, (
         f"chunked prefill only {speedup_prefill:.1f}x over per-token")
 
+    # ---- shared-prefix workload: cold prefill vs prefix-cache reuse
+    section(f"prefix cache: {N_REQUESTS} requests sharing a "
+            f"{SHARED_PREFIX}-token system prompt (+{TAIL}-token tails)")
+    system = rng.integers(0, cfg.vocab, (SHARED_PREFIX,)).tolist()
+    shared_prompts = [system + rng.integers(0, cfg.vocab, (TAIL,)).tolist()
+                      for _ in range(N_REQUESTS)]
+    cold = _prefix_workload(cfg, params, shared_prompts, prefix_cache=False)
+    warm = _prefix_workload(cfg, params, shared_prompts, prefix_cache=True)
+    assert warm["prefix_hits"] > 0, "shared-prefix workload never hit"
+    assert warm["tokens"] == cold["tokens"], (
+        "prefix reuse changed greedy outputs")
+    prefix_uplift = (warm["effective_prefill_tok_s"]
+                     / max(cold["prefill_tok_s"], 1e-9))
+    print_rows([
+        {"path": "cold", "prefill_tok_s": cold["prefill_tok_s"],
+         "hit_rate": cold["prefix_hit_rate"],
+         "reused_tokens": cold["prefix_reused_tokens"]},
+        {"path": "prefix_reuse",
+         "prefill_tok_s": warm["effective_prefill_tok_s"],
+         "hit_rate": warm["prefix_hit_rate"],
+         "reused_tokens": warm["prefix_reused_tokens"]},
+    ])
+    print(f"\nprefix-cache prefill uplift: {prefix_uplift:.2f}x "
+          f"({warm['prefix_hits']:.0f}/{warm['prefix_hits'] + warm['prefix_misses']:.0f} "
+          f"admissions hit, {warm['prefix_reused_tokens']:.0f} tokens reused)")
+    cold.pop("tokens")
+    warm.pop("tokens")
+
     return {
         "arch": cfg.arch_id,
         "requests": N_REQUESTS,
@@ -112,6 +176,13 @@ def run() -> dict:
         },
         "prefill_speedup": speedup_prefill,
         "decode_speedup": speedup_decode,
+        "prefix": {
+            "shared_prefix": SHARED_PREFIX,
+            "tail": TAIL,
+            "cold": cold,
+            "reuse": warm,
+            "prefill_uplift": prefix_uplift,
+        },
         "compile_excluded": True,
     }
 

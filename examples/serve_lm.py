@@ -6,7 +6,10 @@ Submits a wave of requests with staggered prompt/generation lengths to the
 chunked-prefill continuous-batching engine, then replays one request
 through the legacy per-token loop to show the engine reproduces it — the
 SSM archs demonstrate the O(1)-state long-context story (state size
-independent of context length).
+independent of context length).  A second wave shares one system-prompt
+prefix and samples with temperature/top-p, demonstrating prefix-cache
+reuse and per-request in-graph sampling (attention archs only; SSM state
+is not positional, so the prefix cache gates itself off there).
 """
 import argparse
 
@@ -18,6 +21,7 @@ from repro.configs.registry import get_config, list_archs
 from repro.launch.serve import generate, serve_batch
 from repro.models.common import init_params, param_count
 from repro.models.registry import get_api
+from repro.serve import SamplingParams
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -57,6 +61,21 @@ def main(argv=None) -> int:
     tag = "==" if outs[0] == ref else f"~= (per-token loop got {ref})"
     assert len(outs[0]) == gens[0]
     print(f"engine output {tag} per-token loop for request 0  -> serve_lm OK")
+
+    # second wave: one shared system prefix + sampled continuations; the
+    # prefix cache turns every admission after the first into a page copy
+    system = rng.integers(0, cfg.vocab, (12,)).tolist()
+    shared = [system + rng.integers(0, cfg.vocab, (4,)).tolist()
+              for _ in range(args.slots + 1)]
+    sampled = [SamplingParams(temperature=0.8, top_p=0.95, seed=100 + i)
+               for i in range(len(shared))]
+    outs2, st2 = serve_batch(cfg, params, shared, 8, slots=args.slots,
+                             prefill_chunk=16, sampling=sampled)
+    print(f"shared-prefix wave: {st2['prefix_hits']:.0f} prefix hits, "
+          f"{st2['prefix_reused_tokens']:.0f} tokens reused "
+          f"(hit rate {st2['prefix_hit_rate']:.0%})")
+    for i, o in enumerate(outs2):
+        print(f"  sampled req {i} (seed={100 + i}): {o}")
     return 0
 
 

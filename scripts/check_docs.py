@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Docs link checker: every cross-reference in docs/*.md must resolve.
+
+Checked reference kinds:
+
+1. Markdown links ``[text](target)`` — ``target`` must exist on disk
+   (resolved against the doc's directory, then the repo root).  External
+   links (``http(s)://``, ``mailto:``) and pure anchors (``#...``) are
+   skipped.
+2. Inline-code repo paths — a backtick span that looks like a repo path
+   (``src/...``, ``scripts/...``, ``benchmarks/...``, ``tests/...``,
+   ``examples/...``, ``docs/...``, ``results/...``) must exist.  A
+   trailing ``/`` means a directory; ``path.py::symbol`` additionally
+   requires ``symbol`` to appear in the file.
+3. Inline-code dotted module refs — a backtick span matching
+   ``repro.mod[.sub...][.Symbol]`` must resolve under ``src/repro``:
+   the module/package must exist, and a trailing symbol must appear in
+   the module source.
+
+Exit status 0 when everything resolves; 1 with one line per broken ref.
+Run from anywhere: paths are anchored at the repo root (parent of this
+script's directory).  Used by ``scripts/tier1.sh`` and
+``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ROOT / "docs"
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_SPAN = re.compile(r"`([^`\n]+)`")
+_REPO_PATH = re.compile(
+    r"^(?:src|scripts|benchmarks|tests|examples|docs|results)/"
+    r"[\w./\-]*$")
+_DOTTED = re.compile(r"^repro(?:\.\w+)+$")
+
+
+def _strip_code_blocks(text: str) -> str:
+    """Drop fenced code blocks (their contents are illustrative, and the
+    ascii diagrams would false-positive the path regex)."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def _symbol_in(path: Path, symbol: str) -> bool:
+    return re.search(rf"\b{re.escape(symbol)}\b",
+                     path.read_text(errors="replace")) is not None
+
+
+def _check_repo_path(ref: str) -> str | None:
+    """Validate one ``path[::symbol]`` repo reference; returns an error
+    string or None."""
+    path_part, _, symbol = ref.partition("::")
+    target = ROOT / path_part
+    if path_part.endswith("/"):
+        return None if target.is_dir() else f"missing directory {path_part}"
+    if not target.exists():
+        return f"missing path {path_part}"
+    if symbol and target.is_file() and not _symbol_in(target, symbol):
+        return f"symbol {symbol!r} not found in {path_part}"
+    return None
+
+
+def _check_dotted(ref: str) -> str | None:
+    """Validate one ``repro.x.y[.Symbol]`` reference against src/repro;
+    returns an error string or None."""
+    parts = ref.split(".")[1:]          # drop the leading "repro"
+    base = ROOT / "src" / "repro"
+    for i, comp in enumerate(parts):
+        if (base / comp).is_dir():
+            base = base / comp
+            continue
+        if (base / f"{comp}.py").is_file():
+            mod = base / f"{comp}.py"
+            rest = parts[i + 1:]
+            if not rest:
+                return None
+            if len(rest) > 1:
+                return f"{ref}: too many trailing components after module"
+            if not _symbol_in(mod, rest[0]):
+                return f"{ref}: symbol {rest[0]!r} not in {mod.relative_to(ROOT)}"
+            return None
+        return f"{ref}: no module/package {'.'.join(parts[:i + 1])!r} under src/repro"
+    return None                          # resolved to a package directory
+
+
+def check_file(path: Path) -> list:
+    """All broken references in one markdown file, as strings."""
+    errors = []
+    text = _strip_code_blocks(path.read_text(errors="replace"))
+    try:
+        rel = path.relative_to(ROOT)
+    except ValueError:                  # e.g. a tmp file under test
+        rel = path
+
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1).split("#")[0]
+        if not target or target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not ((path.parent / target).exists() or (ROOT / target).exists()):
+            errors.append(f"{rel}: broken link -> {target}")
+
+    for m in _CODE_SPAN.finditer(text):
+        ref = m.group(1).strip()
+        err = None
+        if _REPO_PATH.match(ref.partition("::")[0]):
+            err = _check_repo_path(ref)
+        elif _DOTTED.match(ref):
+            err = _check_dotted(ref)
+        if err:
+            errors.append(f"{rel}: {err}")
+    return errors
+
+
+def main(argv=None) -> int:
+    """Check every docs/*.md (plus any extra files passed in ``argv``);
+    prints one line per broken reference, returns 0/1."""
+    files = sorted(DOCS.glob("*.md"))
+    for extra in (argv or []):
+        files.append(Path(extra).resolve())
+    if not files:
+        print("check_docs: no docs/*.md found", file=sys.stderr)
+        return 1
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: {len(files)} files OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -12,10 +12,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -q
 
+# Docs tier: every docs/*.md cross-reference (markdown links, repo paths,
+# repro.* dotted refs) must resolve, and the public serve API keeps full
+# docstring coverage (the AST check also runs inside the pytest suite
+# above; re-run it here so a docs-only change can be smoke-checked fast).
+python scripts/check_docs.py
+python -m pytest -q tests/test_docs.py
+
 # Benchmark smoke: the carry-table bench exercises the theory layer end to
 # end and is fast enough for CI; collectives and serve emit the
 # perf-trajectory JSONs (serve also dry-runs the chunked-prefill
-# continuous-batching engine on a fresh checkout).
+# continuous-batching engine — sampling, prefix cache, SLO admission —
+# on a fresh checkout).
 python -m benchmarks.run --only carry_tables
 python -m benchmarks.run --only collectives
 python -m benchmarks.run --only serve

@@ -1,14 +1,18 @@
 """Serving driver: chunked-prefill, continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
-        --reduced --requests 8 --slots 4 --prompt-len 16 --gen 32
+        --reduced --requests 8 --slots 4 --prompt-len 16 --gen 32 \
+        --temperature 0.8 --top-p 0.95 --slo-ms 2000
 
 Requests flow through :class:`repro.serve.ServeEngine`: prompts are
 ingested by shape-bucketed chunked prefill (one jitted dispatch per prompt
-block), and decode is continuously batched — short and long requests share
-every decode step at per-slot positions, finished slots are refilled
-mid-flight.  ``--per-token`` instead runs :func:`generate`, the legacy
-one-dispatch-per-token loop kept as the measurement baseline.
+block, shared prompt prefixes reused from resident slot pages), decode is
+continuously batched — short and long requests share every decode step at
+per-slot positions, finished slots are refilled mid-flight — and tokens are
+sampled in-graph per slot (``--temperature 0`` = greedy).  ``--per-token``
+instead runs :func:`generate`, the legacy one-dispatch-per-token loop kept
+as the measurement baseline.  See ``docs/serving.md`` for the full request
+lifecycle and knob reference.
 """
 from __future__ import annotations
 
@@ -22,7 +26,7 @@ import numpy as np
 from repro.configs.registry import get_config, list_archs
 from repro.models.common import init_params
 from repro.models.registry import get_api
-from repro.serve import ServeEngine, state_zeros
+from repro.serve import SamplingParams, ServeEngine, state_zeros
 
 __all__ = ["main", "generate", "serve_batch"]
 
@@ -82,21 +86,47 @@ def generate(cfg, params, prompts: np.ndarray, gen: int,
 
 def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
                 max_seq: int = 0, prefill_chunk: int = 32,
-                page_size=None):
+                page_size=None, sampling=None, slo_ms=None,
+                prefix_cache: bool = True):
     """Run a list of requests through the engine; returns (outputs, stats).
 
-    prompts: list of 1-D int token lists; gens: per-request generation
-    lengths (int or list). Outputs are per-request generated-token lists in
-    submission order."""
+    Args:
+      cfg: model config; params: model parameters.
+      prompts: list of 1-D int token lists.
+      gens: per-request generation lengths (int or list).
+      slots: decode batch width; max_seq: per-slot cache capacity
+        (0 = derived from the longest request, padded to 16).
+      prefill_chunk: max tokens per prefill dispatch.
+      page_size: KV page size for paged split-K decode (None = auto).
+      sampling: per-request :class:`SamplingParams`, one shared instance,
+        or None for greedy decoding everywhere.
+      slo_ms: per-request completion-latency SLO in ms (scalar or list;
+        None = no SLO).
+      prefix_cache: enable prefix-cache reuse across requests.
+
+    Returns:
+      (outputs, stats): per-request generated-token lists in submission
+      order, and the engine's :meth:`~repro.serve.ServeEngine.stats_summary`.
+    """
+    n = len(prompts)
     if isinstance(gens, int):
-        gens = [gens] * len(prompts)
+        gens = [gens] * n
+    if sampling is None or isinstance(sampling, SamplingParams):
+        sampling = [sampling] * n
+    if slo_ms is None or isinstance(slo_ms, (int, float)):
+        slo_ms = [slo_ms] * n
     if not max_seq:
         max_seq = max(len(p) + g for p, g in zip(prompts, gens))
         max_seq = max(16, -(-max_seq // 16) * 16)        # pad to 16
     eng = ServeEngine(cfg, params, max_slots=slots, max_seq=max_seq,
-                      prefill_chunk=prefill_chunk, page_size=page_size)
-    reqs = [eng.submit(list(p), g) for p, g in zip(prompts, gens)]
+                      prefill_chunk=prefill_chunk, page_size=page_size,
+                      prefix_cache=prefix_cache)
+    # warm up BEFORE submitting: the SLO clock starts at submission, and
+    # AOT compile / first-execution setup is engine bring-up, not request
+    # latency (same reason the throughput timers exclude it)
     eng.warmup()
+    reqs = [eng.submit(list(p), g, sampling=sp, slo_ms=sl)
+            for p, g, sp, sl in zip(prompts, gens, sampling, slo_ms)]
     eng.run()
     return [r.generated for r in reqs], eng.stats_summary()
 
@@ -116,6 +146,17 @@ def main(argv=None) -> int:
                          "(default auto; 0 = dense)")
     ap.add_argument("--per-token", action="store_true",
                     help="run the legacy per-token baseline loop instead")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus truncation (1.0 = disabled)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request completion-latency SLO in ms "
+                         "(enables deadline-aware admission)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable prefix-cache reuse across requests")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -148,18 +189,30 @@ def main(argv=None) -> int:
             for d in rng.integers(-args.prompt_len // 2,
                                   args.prompt_len // 2 + 1, args.requests)]
     prompts = [rng.integers(0, cfg.vocab, (n,)).tolist() for n in lens]
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed)
     outs, stats = serve_batch(cfg, params, prompts, args.gen,
                               slots=args.slots,
                               prefill_chunk=args.prefill_chunk,
-                              page_size=args.page)
+                              page_size=args.page,
+                              sampling=sampling, slo_ms=args.slo_ms,
+                              prefix_cache=not args.no_prefix_cache)
     print(f"[engine] arch={cfg.arch_id} requests={args.requests} "
           f"slots={args.slots} gen={args.gen} "
-          f"prompt_lens={lens}")
+          f"prompt_lens={lens} sampling={sampling}")
     print(f"prefill {stats['prefill_s']:.2f}s "
           f"({stats['prefill_tok_s']:.1f} tok/s)  "
           f"decode {stats['decode_s']:.2f}s "
           f"({stats['decode_tok_s']:.1f} tok/s)  "
           f"occupancy {stats['mean_occupancy']:.0%}")
+    print(f"prefix cache: {stats['prefix_hits']:.0f} hits / "
+          f"{stats['prefix_misses']:.0f} misses "
+          f"({stats['prefix_reused_tokens']:.0f} tokens reused)")
+    if args.slo_ms is not None:
+        print(f"SLO {args.slo_ms:.0f}ms: {stats['slo_met']:.0f} met / "
+              f"{stats['slo_missed']:.0f} missed  "
+              f"(preemptions {stats['preemptions']:.0f})")
     print(f"first request: {prompts[0]} -> {outs[0]}")
     return 0
 

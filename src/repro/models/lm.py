@@ -188,7 +188,13 @@ def train_loss(params: dict, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
 
 def decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int
                        ) -> Dict[str, ParamSpec]:
-    """KV-cache layout (as ParamSpecs so dry-run/sharding derive from it)."""
+    """KV-cache layout (as ParamSpecs so dry-run/sharding derive from it).
+
+    Every leaf's logical axes name both ``batch`` (the serve tier's slot
+    axis — see ``repro.serve.cache``) and ``kv_seq`` (the position axis).
+    A fully ``kv_seq``-positional tree is what makes prefix-cache page
+    reuse sound; SSM/hybrid families return state leaves without it and
+    are gated out of reuse by ``repro.serve.cache.supports_prefix``."""
     l, hd = cfg.n_layers, cfg.hd
     if cfg.attn_kind == "mla":
         return {
@@ -281,7 +287,13 @@ def decode_step(params: dict, state: Dict[str, jnp.ndarray],
                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """One new token for every sequence. batch: {"tokens": (B, 1),
     "index": scalar current length or (B,) per-slot lengths}.
-    Returns (logits (B, V), new state)."""
+    Returns (logits (B, V), new state).
+
+    Shape conventions the serve tier relies on: a ``(B,)`` index vector
+    means every slot attends/writes at its own position (continuous
+    batching); logits are always float32 regardless of ``cfg.dtype`` so
+    in-graph sampling (``repro.serve.sampling.sample_tokens``) sees the
+    same numerics as the greedy argmax path."""
     x, new_state = _decode_blocks(params, state, batch, cfg, mesh)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = (x @ params["lm_head"].astype(x.dtype))[:, -1]
@@ -297,7 +309,10 @@ def prefill_chunk(params: dict, state: Dict[str, jnp.ndarray],
     batch: {"tokens": (B, C), "index": scalar chunk start offset,
     "nvalid": scalar count of real tokens in the chunk (<= C; trailing
     bucket padding beyond it only writes masked-off cache positions)}.
-    Returns (logits (B, V) at the last valid position, new state)."""
+    Returns (logits (B, V) at the last valid position, new state); logits
+    are float32 (same guarantee as :func:`decode_step`, so the first
+    sampled token of a request draws from the same numerics either way).
+    """
     x, new_state = _decode_blocks(params, state, batch, cfg, mesh)
     nvalid = batch.get("nvalid")
     last = (jnp.asarray(x.shape[1] if nvalid is None else nvalid, jnp.int32)

@@ -9,12 +9,27 @@ never the whole batch.  The batch axis can sit at a different position per
 leaf (e.g. ``(layers, batch, seq, ...)``), so its index is read off the
 ParamSpec's logical axis names rather than assumed.
 
-Everything here is jax-traceable and is used *inside* the engine's jitted
-prefill/decode functions.
+Two layers live here:
+
+* jax-traceable slot ops (``slot_slice`` / ``slot_update`` / ``reset_slot``
+  / ``copy_slot``) used *inside* the engine's jitted prefill/decode
+  functions;
+* the host-side :class:`PrefixTrie` — a radix trie over the token
+  sequences currently materialized in each slot's pages.  Admission asks it
+  for the longest resident prefix of a new prompt; on a hit the engine
+  copies the matching slot's pages and skips chunked prefill for the shared
+  span (prefix-cache reuse, including reuse of *recently retired* slots
+  whose pages have not been overwritten yet).
+
+Prefix reuse is only sound for state trees whose every leaf is positional
+(has a ``kv_seq`` axis): an attention KV row at position ``i`` depends only
+on tokens ``[0..i]``, so a copied prefix equals a recomputed one.  SSM /
+hybrid conv+state leaves summarize the *whole* sequence in O(1) state, so
+:func:`supports_prefix` gates those families off (every lookup misses).
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +37,8 @@ import jax.numpy as jnp
 from repro.models.common import ParamSpec
 
 __all__ = ["state_zeros", "batch_axis", "slot_slice", "slot_update",
-           "reset_slot", "state_bytes"]
+           "reset_slot", "copy_slot", "state_bytes", "supports_prefix",
+           "PrefixTrie"]
 
 
 def _is_spec(x) -> bool:
@@ -30,18 +46,19 @@ def _is_spec(x) -> bool:
 
 
 def state_zeros(specs: Any) -> Any:
-    """Zero decode state straight from the spec tree.
+    """Zero decode state allocated straight from the ``specs`` tree.
 
     Decode caches are *declared* zero-initialized, so allocate zeros
     directly — no PRNG, no drawing full random parameters only to discard
     them (the seed serve loop paid an entire ``init_params`` + per-leaf
-    ``zeros_like`` for every batch)."""
+    ``zeros_like`` for every batch). Returns an array tree with one zero
+    array per ParamSpec leaf of ``specs``."""
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
                         is_leaf=_is_spec)
 
 
 def batch_axis(spec: ParamSpec) -> int:
-    """Index of the batch (slot) axis in one state leaf."""
+    """Index of the batch (slot) axis in one state leaf's ``spec.axes``."""
     return spec.axes.index("batch")
 
 
@@ -64,22 +81,25 @@ def _leaf_slot_update(leaf: jnp.ndarray, spec: ParamSpec, slot,
 
 
 def slot_slice(state: Any, specs: Any, slot) -> Any:
-    """Extract one slot's pages as a batch-1 state tree (jit-traceable)."""
+    """Extract one ``slot``'s pages of ``state`` as a batch-1 state tree
+    (jit-traceable; ``specs`` names each leaf's batch axis)."""
     return jax.tree.map(
         lambda leaf, s: _leaf_slot_slice(leaf, s, slot), state, specs,
         is_leaf=lambda x: _is_spec(x))
 
 
 def slot_update(state: Any, specs: Any, slot, slot_state: Any) -> Any:
-    """Write a batch-1 state tree back into ``slot`` of the batched state."""
+    """Write the batch-1 tree ``slot_state`` back into ``slot`` of the
+    batched ``state`` (``specs`` names each leaf's batch axis)."""
     return jax.tree.map(
         lambda leaf, s, upd: _leaf_slot_update(leaf, s, slot, upd),
         state, specs, slot_state, is_leaf=lambda x: _is_spec(x))
 
 
 def reset_slot(state: Any, specs: Any, slot) -> Any:
-    """Zero exactly one slot's pages (admission must not disturb the other
-    slots mid-flight, and must not re-zero the whole batch)."""
+    """Zero exactly one ``slot``'s pages of ``state`` (admission must not
+    disturb the other slots mid-flight, and must not re-zero the whole
+    batch; ``specs`` names each leaf's batch axis)."""
     return jax.tree.map(
         lambda leaf, s: _leaf_slot_update(
             leaf, s, slot,
@@ -88,8 +108,21 @@ def reset_slot(state: Any, specs: Any, slot) -> Any:
         state, specs, is_leaf=lambda x: _is_spec(x))
 
 
+def copy_slot(state: Any, specs: Any, src, dst) -> Any:
+    """Copy the ``src`` slot's pages of ``state`` over the ``dst`` slot's
+    (jit-traceable; ``specs`` names each leaf's batch axis).
+
+    The whole page is copied — for positional (``kv_seq``) leaves the
+    positions beyond the reused prefix hold the source request's tokens,
+    which is safe: causal attention masks positions at or past the current
+    length, and continued prefill overwrites them in order.  This is the
+    prefix-cache hit path (:class:`PrefixTrie`)."""
+    return slot_update(state, specs, dst, slot_slice(state, specs, src))
+
+
 def state_bytes(specs: Any) -> int:
-    """Total decode-state footprint (for logs/benchmarks)."""
+    """Total decode-state footprint in bytes of the ``specs`` tree (for
+    logs/benchmarks)."""
     leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
     total = 0
     for s in leaves:
@@ -98,3 +131,121 @@ def state_bytes(specs: Any) -> int:
             n *= d
         total += n * jnp.dtype(s.dtype).itemsize
     return total
+
+
+def supports_prefix(specs: Any) -> bool:
+    """True when every leaf of ``specs`` is positional (has a ``kv_seq``
+    axis), i.e. a copied page prefix equals a recomputed one.
+
+    Attention families (dense GQA, MLA) qualify; SSM and hybrid families do
+    not — their conv/state leaves summarize the whole sequence, so a page
+    copied from another request is only valid at that request's *final*
+    position, never at an interior prefix."""
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return bool(leaves) and all("kv_seq" in s.axes for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# host-side prefix cache (radix trie over resident slot pages)
+# ---------------------------------------------------------------------------
+
+class _TrieNode:
+    """One trie position: child edge per token, plus the slots whose
+    resident token sequence passes through this node."""
+
+    __slots__ = ("children", "slots")
+
+    def __init__(self):
+        self.children: Dict[int, "_TrieNode"] = {}
+        self.slots: set = set()
+
+
+class PrefixTrie:
+    """Radix trie mapping token prefixes to the slot pages that hold them.
+
+    Host-side and jax-free.  The engine keeps it in sync with the pages:
+
+    * :meth:`insert` after a prefill writes a slot's context;
+    * :meth:`extend` after each decode step appends the fed token;
+    * :meth:`remove` when a slot's pages are about to be overwritten by a
+      new admission (the trie entry outlives the *request* — a retired or
+      evicted request's pages stay matchable until the slot is reused).
+
+    :meth:`longest_match` answers admission's question: how many leading
+    tokens of a new prompt are already materialized in some slot's pages.
+    """
+
+    def __init__(self):
+        self._root = _TrieNode()
+        self._slot_tokens: Dict[int, List[int]] = {}
+
+    def __len__(self) -> int:
+        """Number of slots with a resident (matchable) entry."""
+        return len(self._slot_tokens)
+
+    def tokens(self, slot: int) -> Optional[List[int]]:
+        """The token sequence currently indexed for ``slot`` (or None)."""
+        toks = self._slot_tokens.get(slot)
+        return None if toks is None else list(toks)
+
+    def length(self, slot: int) -> Optional[int]:
+        """Number of tokens indexed for ``slot`` (or None if no entry) —
+        equivalently, the first cache position NOT covered by the entry."""
+        toks = self._slot_tokens.get(slot)
+        return None if toks is None else len(toks)
+
+    def insert(self, slot: int, tokens: Sequence[int]) -> None:
+        """Index ``tokens`` as the resident content of ``slot``'s pages
+        (replaces any previous entry for that slot)."""
+        self.remove(slot)
+        node = self._root
+        for t in tokens:
+            node = node.children.setdefault(int(t), _TrieNode())
+            node.slots.add(slot)
+        self._slot_tokens[slot] = [int(t) for t in tokens]
+
+    def extend(self, slot: int, token: int) -> None:
+        """Append one ``token`` to ``slot``'s entry (decode wrote one more
+        cache position). No-op if the slot has no entry."""
+        toks = self._slot_tokens.get(slot)
+        if toks is None:
+            return
+        node = self._root
+        for t in toks:
+            node = node.children[t]
+        node = node.children.setdefault(int(token), _TrieNode())
+        node.slots.add(slot)
+        toks.append(int(token))
+
+    def remove(self, slot: int) -> bool:
+        """Drop ``slot``'s entry (its pages are being overwritten), pruning
+        nodes that no longer index any slot. Returns True if an entry was
+        actually removed."""
+        toks = self._slot_tokens.pop(slot, None)
+        if toks is None:
+            return False
+        node, path = self._root, []
+        for t in toks:
+            path.append((node, t))
+            node = node.children[t]
+            node.slots.discard(slot)
+        for parent, t in reversed(path):
+            child = parent.children[t]
+            if not child.slots and not child.children:
+                del parent.children[t]
+        return True
+
+    def longest_match(self, tokens: Sequence[int]) -> Tuple[int, int]:
+        """Longest resident prefix of ``tokens``.
+
+        Returns ``(length, slot)``: the deepest trie walk along ``tokens``
+        and a slot whose pages hold that whole prefix (the smallest slot id
+        on ties, for determinism). ``(0, -1)`` when nothing matches."""
+        node, depth, slot = self._root, 0, -1
+        for t in tokens:
+            nxt = node.children.get(int(t))
+            if nxt is None or not nxt.slots:
+                break
+            node, depth = nxt, depth + 1
+            slot = min(nxt.slots)
+        return depth, slot

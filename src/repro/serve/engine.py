@@ -11,6 +11,19 @@ The production serve-loop shape the seed repo was missing:
   advances ALL live slots at their own per-slot positions (the vector-index
   decode path), and a slot freed by a finished request is refilled by the
   next admission while the rest keep decoding.
+* **In-graph sampling** — each request carries
+  :class:`~repro.serve.sampling.SamplingParams`; the jitted decode dispatch
+  samples every slot at once from per-slot ``(B,)`` temperature / top-k /
+  top-p / PRNG lanes (:func:`~repro.serve.sampling.sample_tokens`).
+  ``temperature=0`` is the greedy fast path, bit-exact with argmax decode.
+* **Prefix-cache reuse** — a host-side :class:`~repro.serve.cache.PrefixTrie`
+  tracks the token prefix materialized in each slot's pages; a new request
+  whose prompt extends a resident (or recently retired) prefix copies those
+  pages and skips chunked prefill for the shared span.
+* **SLO-aware admission** — the scheduler orders admissions earliest
+  deadline first under an engine-fed cost model and can preempt a live
+  request (which still meets its own SLO after re-queue) to rescue an
+  at-risk pending one.
 * **Paged slot state** — per-request KV/SSM state lives in slot pages of one
   shared batched tree (:mod:`repro.serve.cache`); admission resets exactly
   one slot, never the whole batch.
@@ -37,9 +50,14 @@ import numpy as np
 from repro.models.common import shape_structs
 from repro.models.registry import get_api
 from repro.serve import cache
+from repro.serve.sampling import (GREEDY, SamplingParams, sample_tokens,
+                                  sampling_lanes)
 from repro.serve.scheduler import Request, Scheduler
 
 __all__ = ["ServeEngine", "auto_page_size"]
+
+#: EWMA weight for the scheduler cost model's newest timing sample.
+_COST_EWMA = 0.5
 
 
 def auto_page_size(max_seq: int) -> int:
@@ -72,11 +90,18 @@ class ServeEngine:
       prefill_chunk: max tokens ingested per prefill dispatch.
       page_size: KV page size for the paged split-K decode combine;
         ``None`` = auto (:func:`auto_page_size`), ``0`` = dense decode.
+      prefix_cache: enable prefix-cache reuse across requests (only takes
+        effect for fully positional state trees — attention families; see
+        :func:`repro.serve.cache.supports_prefix`).
+      min_prefix: smallest resident-prefix match worth reusing; shorter
+        matches run the full cold prefill (a 1-token copy saves nothing
+        and incidental matches would perturb greedy equivalence tests).
     """
 
     def __init__(self, cfg, params, *, max_slots: int = 4,
                  max_seq: int = 128, prefill_chunk: int = 32,
-                 page_size: Optional[int] = None):
+                 page_size: Optional[int] = None,
+                 prefix_cache: bool = True, min_prefix: int = 8):
         api = get_api(cfg)
         if api.decode_step is None or api.prefill_chunk is None:
             raise ValueError(f"{cfg.arch_id} has no decode path")
@@ -92,29 +117,51 @@ class ServeEngine:
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
         self.page_size = page_size
+        self.min_prefix = min_prefix
         self.chunk_buckets = _buckets(prefill_chunk)
-        self.scheduler = Scheduler(max_slots, max_seq)
+        self.scheduler = Scheduler(max_slots, max_seq,
+                                   prefill_chunk=prefill_chunk)
         self.specs = api.decode_state_specs(self.cfg, max_slots, max_seq)
         self.state = cache.state_zeros(self.specs)
+        self.prefix = (cache.PrefixTrie()
+                       if prefix_cache and cache.supports_prefix(self.specs)
+                       else None)
         self._exe: Dict[Any, Any] = {}
         self._warm: set = set()
+        self._chunk_ewma: Optional[float] = None
+        self._step_ewma: Optional[float] = None
         self.reset_stats()
 
     # ------------------------------------------------------------ stats
     def reset_stats(self) -> None:
+        """Zero the engine counters/timers (the scheduler's SLO tallies and
+        the cost model are NOT reset — they describe the live workload)."""
         self.stats: Dict[str, float] = {
             "prefill_s": 0.0, "decode_s": 0.0,
             "prefill_tokens": 0, "decode_tokens": 0,
             "decode_steps": 0, "occupancy_sum": 0.0,
-            "admissions": 0, "evictions": 0,
+            "admissions": 0, "evictions": 0, "preemptions": 0,
+            "prefix_hits": 0, "prefix_misses": 0,
+            "prefix_reused_tokens": 0, "prefix_evictions": 0,
         }
 
     def stats_summary(self) -> Dict[str, float]:
+        """Derived view of the counters: tok/s rates, mean occupancy,
+        prefix-cache hit rate, *effective* prefill tok/s (reused tokens
+        count as served — the uplift a cold engine cannot reach), and the
+        scheduler's SLO met/missed tallies."""
         s = dict(self.stats)
         s["prefill_tok_s"] = s["prefill_tokens"] / max(s["prefill_s"], 1e-9)
         s["decode_tok_s"] = s["decode_tokens"] / max(s["decode_s"], 1e-9)
         s["mean_occupancy"] = (s["occupancy_sum"] / s["decode_steps"]
                                if s["decode_steps"] else 0.0)
+        lookups = s["prefix_hits"] + s["prefix_misses"]
+        s["prefix_hit_rate"] = s["prefix_hits"] / lookups if lookups else 0.0
+        s["effective_prefill_tok_s"] = (
+            (s["prefill_tokens"] + s["prefix_reused_tokens"])
+            / max(s["prefill_s"], 1e-9))
+        s["slo_met"] = self.scheduler.slo_met_count
+        s["slo_missed"] = self.scheduler.slo_missed_count
         return s
 
     # ----------------------------------------------------- compiled fns
@@ -144,71 +191,143 @@ class ServeEngine:
             "reset", reset, shape_structs(self.specs),
             jax.ShapeDtypeStruct((), jnp.int32))
 
+    def _copy_exe(self):
+        def copy(state, src, dst):
+            return cache.copy_slot(state, self.specs, src, dst)
+        i32 = jnp.int32
+        return self._get(
+            "copy", copy, shape_structs(self.specs),
+            jax.ShapeDtypeStruct((), i32), jax.ShapeDtypeStruct((), i32))
+
     def _prefill_exe(self, cb: int):
-        def prefill(params, state, tokens, slot, start, nvalid):
+        def prefill(params, state, tokens, slot, start, nvalid,
+                    temp, top_k, top_p, seed, sidx):
             slot_state = cache.slot_slice(state, self.specs, slot)
             logits, new_slot = self.api.prefill_chunk(
                 params, slot_state,
                 {"tokens": tokens, "index": start, "nvalid": nvalid},
                 self.cfg)
             state = cache.slot_update(state, self.specs, slot, new_slot)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = sample_tokens(logits, temp[None], top_k[None],
+                                top_p[None], seed[None], sidx[None])
             return nxt, logits, state
-        i32 = jnp.int32
+        i32, f32 = jnp.int32, jnp.float32
+        sc = jax.ShapeDtypeStruct((), i32)
+        sf = jax.ShapeDtypeStruct((), f32)
         return self._get(
             ("prefill", cb), prefill, self._params_structs(),
             shape_structs(self.specs),
             jax.ShapeDtypeStruct((1, cb), i32),
-            jax.ShapeDtypeStruct((), i32), jax.ShapeDtypeStruct((), i32),
-            jax.ShapeDtypeStruct((), i32))
+            sc, sc, sc, sf, sc, sf, sc, sc)
 
     def _decode_exe(self):
-        def decode(params, state, tokens, positions):
+        def decode(params, state, tokens, positions,
+                   temps, top_ks, top_ps, seeds, idxs):
             logits, state = self.api.decode_step(
                 params, state, {"tokens": tokens, "index": positions},
                 self.cfg)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = sample_tokens(logits, temps, top_ks, top_ps, seeds, idxs)
             return nxt, logits, state
-        i32 = jnp.int32
+        i32, f32 = jnp.int32, jnp.float32
+        b = self.max_slots
+        lane_i = jax.ShapeDtypeStruct((b,), i32)
+        lane_f = jax.ShapeDtypeStruct((b,), f32)
         return self._get(
             "decode", decode, self._params_structs(),
             shape_structs(self.specs),
-            jax.ShapeDtypeStruct((self.max_slots, 1), i32),
-            jax.ShapeDtypeStruct((self.max_slots,), i32))
+            jax.ShapeDtypeStruct((b, 1), i32), lane_i,
+            lane_f, lane_i, lane_f, lane_i, lane_i)
+
+    def _greedy_lanes(self, b: int):
+        return sampling_lanes([GREEDY] * b, [0] * b)
 
     def warmup(self) -> None:
         """Force every compilation AND first execution up front (optional;
         the engine also warms lazily, still outside the timed regions)."""
-        i32 = jnp.int32
+        i32, f32 = jnp.int32, jnp.float32
         z = jnp.asarray(0, i32)
+        zf = jnp.asarray(0.0, f32)
+        onef = jnp.asarray(1.0, f32)
         self._ensure_warm("reset", self._reset_exe(), self.state, z)
+        if self.prefix is not None:
+            self._ensure_warm("copy", self._copy_exe(), self.state, z, z)
         self._ensure_warm(
             "decode", self._decode_exe(), self.params, self.state,
             jnp.zeros((self.max_slots, 1), i32),
-            jnp.zeros((self.max_slots,), i32))
+            jnp.zeros((self.max_slots,), i32),
+            *self._greedy_lanes(self.max_slots))
         for cb in self.chunk_buckets:
             self._ensure_warm(
                 ("prefill", cb), self._prefill_exe(cb), self.params,
                 self.state, jnp.zeros((1, cb), i32), z, z,
-                jnp.asarray(cb, i32))
+                jnp.asarray(cb, i32), zf, z, onef, z, z)
 
     # ----------------------------------------------------------- submit
     def submit(self, prompt: Sequence[int], max_new: int,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               slo_ms: Optional[float] = None) -> Request:
+        """Queue one generation request.
+
+        Args:
+          prompt: token ids to condition on.
+          max_new: generation budget.
+          eos_id: optional stop token.
+          sampling: per-request :class:`SamplingParams` (``None`` = greedy).
+          slo_ms: optional completion-latency SLO in milliseconds.
+
+        Returns:
+          The live :class:`Request` handle (its ``generated`` list fills in
+          as the engine runs)."""
         return self.scheduler.submit(
-            Request(prompt=list(prompt), max_new=max_new, eos_id=eos_id))
+            Request(prompt=list(prompt), max_new=max_new, eos_id=eos_id,
+                    sampling=sampling, slo_ms=slo_ms))
 
     def evict(self, slot: int) -> Request:
+        """Preempt the live request in ``slot`` back to the pending queue
+        (its re-admission re-prefills, or prefix-reuses, its context)."""
         self.stats["evictions"] += 1
         return self.scheduler.evict(slot)
 
     # ------------------------------------------------------------ admit
+    def _feed_cost_model(self, chunk_s: Optional[float] = None,
+                         step_s: Optional[float] = None) -> None:
+        """EWMA the newest measured prefill-chunk / decode-step time into
+        the scheduler's cost model (``chunk_s`` / ``step_s`` in seconds)."""
+        if chunk_s is not None:
+            self._chunk_ewma = (chunk_s if self._chunk_ewma is None else
+                                (1 - _COST_EWMA) * self._chunk_ewma
+                                + _COST_EWMA * chunk_s)
+        if step_s is not None:
+            self._step_ewma = (step_s if self._step_ewma is None else
+                               (1 - _COST_EWMA) * self._step_ewma
+                               + _COST_EWMA * step_s)
+        self.scheduler.update_cost_model(self._chunk_ewma, self._step_ewma)
+
     def _admit(self, slot: int, req: Request) -> List[Request]:
-        reset = self._reset_exe()
-        slot32 = jnp.asarray(slot, jnp.int32)
+        """Admit ``req`` into ``slot``: prefix-cache lookup, page copy or
+        slot reset, then chunked prefill of the (remaining) context; samples
+        the request's first token from the prefill logits."""
+        sp = req.sampling or GREEDY
         ctx = req.context
+        slot32 = jnp.asarray(slot, jnp.int32)
+
+        # ---- prefix-cache lookup: reuse the longest resident prefix
+        reuse, src = 0, -1
+        if self.prefix is not None:
+            match_len, match_slot = self.prefix.longest_match(ctx)
+            match_len = min(match_len, len(ctx) - 1)   # keep >= 1 token to
+            if match_len >= self.min_prefix:           # prefill for logits
+                reuse, src = match_len, match_slot
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_reused_tokens"] += reuse
+            else:
+                self.stats["prefix_misses"] += 1
+            if self.prefix.remove(slot) and src != slot:
+                self.stats["prefix_evictions"] += 1
+
         pieces = []
-        pos = 0
+        pos = reuse
         while pos < len(ctx):
             piece = ctx[pos:pos + self.prefill_chunk]
             cb = next(b for b in self.chunk_buckets if b >= len(piece))
@@ -225,53 +344,122 @@ class ServeEngine:
             self._ensure_warm(("prefill", cb), exe, self.params, self.state,
                               jnp.asarray(toks), slot32,
                               jnp.asarray(pos, jnp.int32),
-                              jnp.asarray(len(piece), jnp.int32))
+                              jnp.asarray(len(piece), jnp.int32),
+                              jnp.asarray(0.0, jnp.float32),
+                              jnp.asarray(0, jnp.int32),
+                              jnp.asarray(1.0, jnp.float32),
+                              jnp.asarray(0, jnp.int32),
+                              jnp.asarray(0, jnp.int32))
             pieces.append((pos, len(piece), exe, jnp.asarray(toks)))
             pos += len(piece)
+        reset = self._reset_exe()
         self._ensure_warm("reset", reset, self.state, slot32)
+        if reuse and src != slot:
+            copy = self._copy_exe()
+            self._ensure_warm("copy", copy, self.state, slot32, slot32)
+        # the first prefill token continues the request's sample stream
+        temp = jnp.asarray(sp.temperature, jnp.float32)
+        top_k = jnp.asarray(sp.top_k, jnp.int32)
+        top_p = jnp.asarray(sp.top_p, jnp.float32)
+        seed = jnp.asarray(sp.seed, jnp.int32)
+        sidx = jnp.asarray(len(req.generated), jnp.int32)
 
         t0 = time.perf_counter()
-        self.state = reset(self.state, slot32)
+        if reuse and src != slot:
+            self.state = copy(self.state, jnp.asarray(src, jnp.int32),
+                              slot32)
+        elif not reuse:
+            self.state = reset(self.state, slot32)
+        # (reuse with src == slot: the pages are already in place)
         nxt = None
         for start, nvalid, exe, toks in pieces:
             nxt, _, self.state = exe(
                 self.params, self.state, toks, slot32,
-                jnp.asarray(start, jnp.int32), jnp.asarray(nvalid, jnp.int32))
+                jnp.asarray(start, jnp.int32), jnp.asarray(nvalid, jnp.int32),
+                temp, top_k, top_p, seed, sidx)
         nxt.block_until_ready()
-        self.stats["prefill_s"] += time.perf_counter() - t0
-        self.stats["prefill_tokens"] += len(ctx)
+        dt = time.perf_counter() - t0
+        self.stats["prefill_s"] += dt
+        self.stats["prefill_tokens"] += len(ctx) - reuse
         self.stats["admissions"] += 1
+        if not reuse:
+            # prefix-hit admissions time a page copy plus (at most) a tiny
+            # tail chunk — feeding that into the model would make a "chunk"
+            # look far cheaper than a full prefill dispatch; only cold
+            # admissions give an unbiased chunk cost
+            self._feed_cost_model(chunk_s=dt / max(1, len(pieces)))
         self.scheduler.on_prefill(req, int(nxt[0]))
+        if self.prefix is not None:
+            # the slot's pages now hold exactly ctx (the sampled first
+            # token is not written until the next decode step feeds it)
+            self.prefix.insert(slot, ctx)
         return [req] if req.slot is None else []
 
     # ------------------------------------------------------------- step
     def _decode_once(self) -> List[Request]:
+        """One batched decode step over every live slot (idle slots run the
+        greedy lane and their outputs are discarded)."""
         tokens = np.zeros((self.max_slots, 1), np.int32)
         positions = np.zeros((self.max_slots,), np.int32)
+        sps = [GREEDY] * self.max_slots
+        sidx = [0] * self.max_slots
         for slot, req in self.scheduler.active.items():
             tokens[slot, 0] = req.generated[-1]
             positions[slot] = req.pos
+            sps[slot] = req.sampling or GREEDY
+            sidx[slot] = len(req.generated)
+        if self.prefix is not None:
+            # idle lanes run in the shared dispatch too, and their
+            # (discarded) token's KV is written unconditionally at
+            # positions[slot]; aim each idle write at the first cache
+            # position the trie does NOT index, so a retired slot's
+            # matchable prefix survives until the slot is actually reused
+            for slot in range(self.max_slots):
+                if slot in self.scheduler.active:
+                    continue
+                n = self.prefix.length(slot)
+                if n is None:
+                    continue
+                if n >= self.max_seq:   # pages full: no safe position left
+                    self.prefix.remove(slot)
+                    self.stats["prefix_evictions"] += 1
+                else:
+                    positions[slot] = n
+        temps, top_ks, top_ps, seeds, idxs = sampling_lanes(sps, sidx)
+        toks_d = jnp.asarray(tokens)
+        pos_d = jnp.asarray(positions)
         exe = self._decode_exe()
         self._ensure_warm("decode", exe, self.params, self.state,
-                          jnp.asarray(tokens), jnp.asarray(positions))
+                          toks_d, pos_d, temps, top_ks, top_ps, seeds, idxs)
         occ = self.scheduler.occupancy
+        live = list(self.scheduler.active)
 
         t0 = time.perf_counter()
-        nxt, _, self.state = exe(self.params, self.state,
-                                 jnp.asarray(tokens), jnp.asarray(positions))
+        nxt, _, self.state = exe(self.params, self.state, toks_d, pos_d,
+                                 temps, top_ks, top_ps, seeds, idxs)
         nxt = np.asarray(nxt)
-        self.stats["decode_s"] += time.perf_counter() - t0
-        live = list(self.scheduler.active)
+        dt = time.perf_counter() - t0
+        self.stats["decode_s"] += dt
         self.stats["decode_tokens"] += len(live)
         self.stats["decode_steps"] += 1
         self.stats["occupancy_sum"] += occ
+        self._feed_cost_model(step_s=dt)
+        if self.prefix is not None:
+            # this step wrote each live slot's fed token into its pages
+            for slot in live:
+                self.prefix.extend(slot, int(tokens[slot, 0]))
         return self.scheduler.on_decode({s: int(nxt[s]) for s in live})
 
     def step(self) -> List[Request]:
-        """One engine iteration: refill free slots (chunked prefill per
-        admission), then one batched decode step shared by ALL live slots.
-        Returns the requests that finished during this iteration."""
+        """One engine iteration: SLO preemption check, refill free slots
+        (chunked prefill per admission), then one batched decode step shared
+        by ALL live slots. Returns the requests that finished during this
+        iteration."""
         finished: List[Request] = []
+        victim = self.scheduler.maybe_preempt()
+        if victim is not None:
+            self.evict(victim)
+            self.stats["preemptions"] += 1
         for slot, req in self.scheduler.admissions():
             finished += self._admit(slot, req)
         if self.scheduler.active:

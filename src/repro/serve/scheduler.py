@@ -1,4 +1,4 @@
-"""Continuous-batching scheduler: admit / decode / retire / evict.
+"""Continuous-batching scheduler: admit / decode / retire / evict, SLO-aware.
 
 Pure host-side Python — no jax — so scheduling policy is unit-testable
 without compiling a model.  The engine asks three questions every step:
@@ -14,13 +14,32 @@ request is refilled on the next ``admissions()`` call while the remaining
 slots keep decoding (slot refill mid-flight).  ``evict()`` preempts a live
 request back to the pending queue — its re-admission re-prefills prompt +
 tokens generated so far, so no output is lost.
+
+**SLO-aware admission** (this tier's policy, replacing blind FIFO): a
+request may carry a latency SLO (``slo_ms``, wall time from submission to
+completion).  The scheduler keeps a cost model — an engine-fed estimate of
+per-chunk prefill time and per-step decode time — and orders admission by
+earliest deadline first among SLO'd requests (no-SLO requests follow, in
+FIFO order).  ``eviction_candidate()`` picks the live request that best
+survives a re-queue (largest post-requeue slack — no-SLO requests are
+preferred victims since they cannot miss), and ``maybe_preempt()`` triggers
+an eviction only when it actually rescues an at-risk pending request:
+the pending request still meets its deadline if admitted *now* but not if
+it waits for a natural slot release, and the victim still meets its own
+SLO after the re-queue.
 """
 from __future__ import annotations
 
 import itertools
+import math
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Callable, Deque, Dict, List, Optional,
+                    Sequence, Tuple)
+
+if TYPE_CHECKING:  # sampling imports jax; keep this module jax-free
+    from repro.serve.sampling import SamplingParams
 
 __all__ = ["Request", "Scheduler"]
 
@@ -29,17 +48,33 @@ _rid_counter = itertools.count()
 
 @dataclass
 class Request:
-    """One generation request plus its runtime bookkeeping."""
+    """One generation request plus its runtime bookkeeping.
+
+    Args:
+      prompt: token ids to condition on.
+      max_new: generation budget (tokens sampled after the prompt).
+      rid: request id (auto-assigned, monotonic per process).
+      eos_id: optional stop token — generation retires on sampling it.
+      sampling: per-request :class:`~repro.serve.sampling.SamplingParams`
+        (``None`` = greedy argmax, the PR 2 behaviour).
+      slo_ms: optional completion-latency SLO in milliseconds, measured
+        from submission; drives admission order and eviction choice.
+    """
 
     prompt: Sequence[int]
     max_new: int
     rid: int = field(default_factory=lambda: next(_rid_counter))
     eos_id: Optional[int] = None
+    sampling: Optional["SamplingParams"] = None
+    slo_ms: Optional[float] = None
 
     # runtime state (owned by the scheduler/engine)
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None
     pos: int = 0                # tokens currently in the slot's cache
+    submit_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    slo_met: Optional[bool] = None
 
     @property
     def context(self) -> List[int]:
@@ -48,10 +83,12 @@ class Request:
 
     @property
     def remaining(self) -> int:
+        """Tokens still to generate before hitting ``max_new``."""
         return self.max_new - len(self.generated)
 
     @property
     def done(self) -> bool:
+        """True once ``eos_id`` was sampled or the budget is exhausted."""
         if self.generated and self.eos_id is not None \
                 and self.generated[-1] == self.eos_id:
             return True
@@ -59,56 +96,128 @@ class Request:
 
 
 class Scheduler:
-    """Fixed-width slot scheduler over a shared decode batch."""
+    """Slot scheduler over a shared decode batch, with an SLO admission tier.
 
-    def __init__(self, max_slots: int, max_seq: int):
+    Args:
+      max_slots: decode batch width (concurrent requests).
+      max_seq: per-slot cache capacity (context + generated tokens).
+      prefill_chunk: the engine's max prefill-dispatch size; used by the
+        cost model to estimate how many chunked-prefill dispatches a
+        pending request needs.
+      clock: monotonic time source (injectable for deterministic tests).
+    """
+
+    def __init__(self, max_slots: int, max_seq: int, *,
+                 prefill_chunk: int = 32,
+                 clock: Callable[[], float] = time.monotonic):
         if max_slots < 1:
             raise ValueError("need at least one slot")
         self.max_slots = max_slots
         self.max_seq = max_seq
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.clock = clock
         self.pending: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
         self.finished: List[Request] = []
+        # engine-fed cost model (EWMA of measured times; 0 = unknown yet)
+        self.est_chunk_s: float = 0.0
+        self.est_step_s: float = 0.0
+        self.slo_met_count = 0
+        self.slo_missed_count = 0
+
+    # ----------------------------------------------------------- cost model
+    def update_cost_model(self, chunk_s: Optional[float] = None,
+                          step_s: Optional[float] = None) -> None:
+        """Feed measured service times: ``chunk_s`` is the engine's current
+        estimate of one prefill-chunk dispatch, ``step_s`` of one batched
+        decode step (pass ``None`` to leave either unchanged)."""
+        if chunk_s is not None:
+            self.est_chunk_s = float(chunk_s)
+        if step_s is not None:
+            self.est_step_s = float(step_s)
+
+    def est_service_s(self, req: Request) -> float:
+        """Estimated remaining service time of ``req`` if admitted now:
+        chunked prefill of its context plus its remaining decode budget,
+        under the current cost model (0 while the model is cold)."""
+        chunks = math.ceil(max(1, len(req.context)) / self.prefill_chunk)
+        return (chunks * self.est_chunk_s
+                + max(0, req.remaining) * self.est_step_s)
+
+    def deadline(self, req: Request) -> Optional[float]:
+        """Absolute completion deadline of ``req`` on the scheduler clock,
+        or ``None`` for a request without an SLO."""
+        if req.slo_ms is None or req.submit_t is None:
+            return None
+        return req.submit_t + req.slo_ms / 1e3
+
+    def slack_s(self, req: Request, now: Optional[float] = None) -> float:
+        """Deadline slack of ``req`` at time ``now``: seconds to spare if
+        its remaining service started immediately (+inf without an SLO;
+        negative means the SLO is already unattainable)."""
+        dl = self.deadline(req)
+        if dl is None:
+            return math.inf
+        if now is None:
+            now = self.clock()
+        return dl - now - self.est_service_s(req)
 
     # -------------------------------------------------------------- submit
     def submit(self, req: Request) -> Request:
-        # a request must fit its context + at least one generated token
+        """Queue ``req`` for admission (validates that its context plus at
+        least one generated token fits ``max_seq``) and stamp its
+        submission time. Returns the same request."""
         if len(req.context) + 1 > self.max_seq:
             raise ValueError(
                 f"request {req.rid}: context {len(req.context)} + 1 token "
                 f"exceeds max_seq={self.max_seq}")
+        if req.submit_t is None:
+            req.submit_t = self.clock()
         self.pending.append(req)
         return req
 
     # ---------------------------------------------------------- admissions
     def free_slots(self) -> List[int]:
+        """Slot indices not currently bound to a live request."""
         return [s for s in range(self.max_slots) if s not in self.active]
 
+    def admission_order(self) -> List[Request]:
+        """Pending requests in admission-policy order: earliest deadline
+        first for SLO'd requests, then no-SLO requests in FIFO order (the
+        sort is stable, so with no SLOs anywhere this *is* FIFO — and an
+        evicted request re-queued at the front keeps its priority)."""
+        return sorted(self.pending,
+                      key=lambda r: (self.deadline(r) is None,
+                                     self.deadline(r) or 0.0))
+
     def admissions(self) -> List[Tuple[int, Request]]:
-        """Pair waiting requests with free slots (FIFO). The caller performs
-        the actual prefill, then the request is live in its slot."""
+        """Pair waiting requests with free slots in policy order. The
+        caller performs the actual prefill, then each request is live in
+        its slot."""
         pairs = []
-        for slot in self.free_slots():
-            if not self.pending:
-                break
-            req = self.pending.popleft()
+        for slot, req in zip(self.free_slots(), self.admission_order()):
             req.slot = slot
             req.pos = 0
             self.active[slot] = req
             pairs.append((slot, req))
+        if pairs:
+            admitted = {req.rid for _, req in pairs}
+            self.pending = deque(r for r in self.pending
+                                 if r.rid not in admitted)
         return pairs
 
     # -------------------------------------------------------------- decode
     def on_prefill(self, req: Request, first_token: int) -> None:
-        """Record the prefill result: cache holds the context, plus the
-        first generated token sampled from the prefill logits."""
+        """Record ``req``'s prefill result: the cache holds its context,
+        plus ``first_token`` sampled from the prefill logits."""
         req.pos = len(req.context)
         req.generated.append(int(first_token))
         self._maybe_retire(req)
 
     def on_decode(self, tokens: Dict[int, int]) -> List[Request]:
-        """Advance every live slot by its sampled token; returns the
-        requests that finished this step (their slots are free again)."""
+        """Advance every live slot by its sampled token (``tokens`` maps
+        slot -> token id); returns the requests that finished this step
+        (their slots are free again)."""
         done = []
         for slot, tok in tokens.items():
             req = self.active.get(slot)
@@ -128,25 +237,85 @@ class Scheduler:
             if req.slot in self.active:
                 del self.active[req.slot]
             req.slot = None
+            req.finish_t = self.clock()
+            if req.slo_ms is not None and req.submit_t is not None:
+                req.slo_met = ((req.finish_t - req.submit_t) * 1e3
+                               <= req.slo_ms)
+                if req.slo_met:
+                    self.slo_met_count += 1
+                else:
+                    self.slo_missed_count += 1
             self.finished.append(req)
             return True
         return False
 
     # --------------------------------------------------------------- evict
     def evict(self, slot: int) -> Request:
-        """Preempt a live request back to the head of the pending queue.
-        Re-admission re-prefills prompt + generated, continuing seamlessly."""
+        """Preempt the live request in ``slot`` back to the head of the
+        pending queue. Re-admission re-prefills prompt + generated, so the
+        request continues seamlessly."""
         req = self.active.pop(slot)
         req.slot = None
         req.pos = 0
         self.pending.appendleft(req)
         return req
 
+    def eviction_candidate(self, now: Optional[float] = None
+                           ) -> Optional[int]:
+        """The slot whose request best survives a re-queue at time ``now``:
+        largest post-requeue slack (re-prefilling its full context plus its
+        remaining decode budget still beats its deadline).  No-SLO requests
+        have infinite slack, so they are preferred victims.  Ties prefer
+        the request with the least generated progress (least re-prefill
+        waste). ``None`` when nothing is active."""
+        if not self.active:
+            return None
+        if now is None:
+            now = self.clock()
+        return max(self.active,
+                   key=lambda s: (self.slack_s(self.active[s], now),
+                                  -len(self.active[s].generated)))
+
+    def maybe_preempt(self, now: Optional[float] = None) -> Optional[int]:
+        """Decide whether evicting one live request would rescue an
+        at-risk pending one; returns the victim slot or ``None``.
+
+        Preempts only when (measured at time ``now``): every slot is busy;
+        the most urgent pending request meets its SLO if admitted
+        immediately but not after waiting for the earliest natural slot
+        release; and the victim still meets its own SLO after the re-queue.
+        """
+        if not self.pending or len(self.active) < self.max_slots:
+            return None
+        if now is None:
+            now = self.clock()
+        # most urgent among the still-savable: a request whose deadline is
+        # already unattainable (slack < 0) must not shadow one a preemption
+        # could actually rescue
+        urgent = min((r for r in self.pending
+                      if self.deadline(r) is not None
+                      and self.slack_s(r, now) >= 0.0),
+                     key=lambda r: self.slack_s(r, now), default=None)
+        if urgent is None:
+            return None
+        est_wait = min((max(0, r.remaining) * self.est_step_s
+                        for r in self.active.values()), default=0.0)
+        if self.slack_s(urgent, now) >= est_wait:
+            return None                       # not at risk: waiting is fine
+        victim = self.eviction_candidate(now)
+        if victim is None:
+            return None
+        if self.slack_s(self.active[victim], now) < 0.0:
+            return None                       # re-queue would break its SLO
+        return victim
+
     # --------------------------------------------------------------- state
     @property
     def has_work(self) -> bool:
+        """True while anything is pending or live."""
         return bool(self.pending or self.active)
 
     @property
     def occupancy(self) -> float:
+        """Fraction of decode-batch slots currently live."""
         return len(self.active) / self.max_slots

@@ -11,8 +11,9 @@ import pytest
 from repro.configs.registry import get_config
 from repro.models.common import init_params
 from repro.models.registry import get_api
-from repro.serve import (Request, Scheduler, ServeEngine, reset_slot,
-                         slot_slice, slot_update, state_zeros)
+from repro.serve import (PrefixTrie, Request, Scheduler, ServeEngine,
+                         reset_slot, slot_slice, slot_update, state_zeros,
+                         supports_prefix)
 from repro.serve.engine import auto_page_size, _buckets
 
 jax.config.update("jax_enable_x64", False)
@@ -404,6 +405,312 @@ def test_engine_compile_excluded_from_timings():
     second = eng.stats_summary()
     assert first["decode_s"] < 50 * max(second["decode_s"], 1e-9)
     assert first["prefill_s"] < 50 * max(second["prefill_s"], 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: trie + engine reuse
+# ---------------------------------------------------------------------------
+
+def test_prefix_trie_insert_extend_match_remove():
+    t = PrefixTrie()
+    assert t.longest_match([1, 2, 3]) == (0, -1)
+    t.insert(0, [1, 2, 3, 4])
+    t.insert(1, [1, 2, 9])
+    assert t.longest_match([1, 2, 3, 4, 5]) == (4, 0)
+    assert t.longest_match([1, 2, 9, 9]) == (3, 1)
+    # ties at a shared span report the smallest slot deterministically
+    assert t.longest_match([1, 2]) == (2, 0)
+    t.extend(1, 7)
+    assert t.tokens(1) == [1, 2, 9, 7]
+    assert t.longest_match([1, 2, 9, 7]) == (4, 1)
+    assert t.remove(0)
+    assert not t.remove(0)                  # already gone
+    assert t.longest_match([1, 2, 3, 4]) == (2, 1)   # only slot1's span left
+    t.remove(1)
+    assert len(t) == 0 and t.longest_match([1]) == (0, -1)
+    # the trie is fully pruned: re-inserting starts from an empty root
+    t.insert(2, [5])
+    assert t.longest_match([5, 6]) == (1, 2)
+
+
+def test_supports_prefix_gates_families():
+    gqa = _cfg("llama3.2-3b")
+    mla = _cfg("minicpm3-4b")
+    ssm = _cfg("falcon-mamba-7b")
+    hyb = _cfg("zamba2-1.2b")
+    for cfg, ok in ((gqa, True), (mla, True), (ssm, False), (hyb, False)):
+        specs = get_api(cfg).decode_state_specs(cfg, 2, 16)
+        assert supports_prefix(specs) == ok, cfg.arch_id
+    # engine wires the gate through: SSM engines never build a trie
+    api, params = _params(ssm)
+    eng = ServeEngine(ssm, params, max_slots=1, max_seq=16, prefill_chunk=8)
+    assert eng.prefix is None
+
+
+def test_engine_prefix_reuse_matches_cold_prefill():
+    """A request extending a retired request's prompt skips prefill for
+    the shared span (pages copied / kept) and still generates the same
+    greedy tokens as a cold engine."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    MAX = 48
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, cfg.vocab, (12,)).tolist()
+    tails = [rng.integers(0, cfg.vocab, (4,)).tolist() for _ in range(3)]
+    prompts = [system + t for t in tails]
+
+    cold_tokens = []
+    for p in prompts:
+        eng = ServeEngine(cfg, params, max_slots=2, max_seq=MAX,
+                          prefill_chunk=8, prefix_cache=False)
+        req = eng.submit(p, 5)
+        eng.run()
+        cold_tokens.append(req.generated)
+
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=MAX,
+                      prefill_chunk=8, min_prefix=8)
+    reqs = [eng.submit(p, 5) for p in prompts]
+    eng.run()
+    st = eng.stats_summary()
+    assert st["prefix_hits"] >= 2, st
+    assert st["prefix_reused_tokens"] >= 2 * len(system), st
+    assert st["prefix_hit_rate"] > 0
+    for req, ref in zip(reqs, cold_tokens):
+        assert req.generated == ref, (req.generated, ref)
+
+
+def test_engine_prefix_reuse_after_retire_same_slot():
+    """Recently-retired reuse: with one slot, the second request matches
+    the first request's pages even though that request is finished."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(9)
+    base = rng.integers(0, cfg.vocab, (10,)).tolist()
+    eng = ServeEngine(cfg, params, max_slots=1, max_seq=32,
+                      prefill_chunk=8, min_prefix=8)
+    r1 = eng.submit(base, 3)
+    eng.run()
+    r2 = eng.submit(base + rng.integers(0, cfg.vocab, (3,)).tolist(), 3)
+    eng.run()
+    st = eng.stats_summary()
+    assert st["prefix_hits"] == 1 and st["prefix_reused_tokens"] >= 10
+    # equivalence vs a cold engine
+    cold = ServeEngine(cfg, params, max_slots=1, max_seq=32,
+                       prefill_chunk=8, prefix_cache=False)
+    c2 = cold.submit(list(r2.prompt), 3)
+    cold.run()
+    assert r2.generated == c2.generated
+
+
+def test_prefix_insert_invalidates_overwritten_slot():
+    """Admitting into a slot drops that slot's stale trie entry (the
+    pages are overwritten) — counted as a prefix eviction."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(11)
+    p1 = rng.integers(0, cfg.vocab, (9,)).tolist()
+    p2 = rng.integers(0, cfg.vocab, (9,)).tolist()
+    eng = ServeEngine(cfg, params, max_slots=1, max_seq=32,
+                      prefill_chunk=8, min_prefix=8)
+    eng.submit(p1, 2)
+    eng.run()
+    eng.submit(p2, 2)            # unrelated prompt: overwrites slot 0
+    eng.run()
+    st = eng.stats_summary()
+    assert st["prefix_evictions"] == 1
+    # p1's span is no longer matchable
+    assert eng.prefix.longest_match(p1)[0] < 8
+
+
+def test_engine_prefix_reuse_survives_idle_decode_steps():
+    """A retired slot's trie entry stays VALID while other slots keep
+    decoding: the idle lane still runs in every batched decode dispatch and
+    writes its (discarded) token's KV, so the engine must aim that write at
+    the first un-indexed cache position — not position 0, which would
+    silently corrupt the retired pages a later prefix hit copies."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(13)
+    a = rng.integers(0, cfg.vocab, (16,)).tolist()   # retires early
+    b = rng.integers(0, cfg.vocab, (16,)).tolist()   # keeps decoding
+    c = a[:12] + rng.integers(0, cfg.vocab, (4,)).tolist()
+
+    def run(prefix_cache):
+        eng = ServeEngine(cfg, params, max_slots=2, max_seq=48,
+                          prefill_chunk=8, min_prefix=8,
+                          prefix_cache=prefix_cache)
+        ra = eng.submit(a, 2)
+        eng.submit(b, 20)
+        while not ra.done:                 # drain until a's slot idles
+            eng.step()
+        for _ in range(6):                 # idle lane writes happen here
+            eng.step()
+        rc = eng.submit(c, 6)
+        eng.run()
+        return rc.generated, eng
+
+    cold, _ = run(False)
+    warm, eng = run(True)
+    assert eng.stats["prefix_hits"] >= 1, eng.stats
+    assert warm == cold, (warm, cold)
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission / eviction policy (pure host logic, fake clock)
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    """Manually advanced monotonic clock for deterministic policy tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _slo_sched(max_slots=2, max_seq=64, chunk=8):
+    clk = _Clock()
+    sched = Scheduler(max_slots, max_seq, prefill_chunk=chunk, clock=clk)
+    sched.update_cost_model(chunk_s=0.1, step_s=0.01)
+    return sched, clk
+
+
+def test_admission_order_is_edf_then_fifo():
+    sched, clk = _slo_sched(max_slots=1)
+    loose = sched.submit(Request(prompt=[1] * 4, max_new=2, slo_ms=10_000))
+    none1 = sched.submit(Request(prompt=[2] * 4, max_new=2))
+    tight = sched.submit(Request(prompt=[3] * 4, max_new=2, slo_ms=500))
+    none2 = sched.submit(Request(prompt=[4] * 4, max_new=2))
+    order = sched.admission_order()
+    assert order == [tight, loose, none1, none2]
+    # the earliest-deadline request takes the only slot
+    (slot, req), = sched.admissions()
+    assert req is tight and slot == 0
+
+
+def test_admissions_stay_fifo_without_slos():
+    sched, _ = _slo_sched(max_slots=2)
+    reqs = [sched.submit(Request(prompt=[i] * 3, max_new=2))
+            for i in range(3)]
+    pairs = sched.admissions()
+    assert [r for _, r in pairs] == reqs[:2]
+
+
+def test_slack_and_service_estimates():
+    sched, clk = _slo_sched()
+    req = sched.submit(Request(prompt=[1] * 20, max_new=10, slo_ms=1000))
+    # 20 tokens / 8-chunk -> 3 chunks * 0.1s + 10 steps * 0.01s = 0.4s
+    assert sched.est_service_s(req) == pytest.approx(0.4)
+    assert sched.slack_s(req, now=0.0) == pytest.approx(1.0 - 0.4)
+    clk.t = 0.9
+    assert sched.slack_s(req) == pytest.approx(0.1 - 0.4)
+    # no-SLO requests never constrain the policy
+    free = sched.submit(Request(prompt=[1] * 4, max_new=2))
+    assert sched.slack_s(free) == float("inf")
+
+
+def test_eviction_candidate_prefers_surviving_requeue():
+    sched, clk = _slo_sched(max_slots=2)
+    tight = sched.submit(Request(prompt=[1] * 8, max_new=4, slo_ms=600))
+    loose = sched.submit(Request(prompt=[2] * 8, max_new=4, slo_ms=60_000))
+    sched.admissions()
+    sched.on_prefill(tight, 5)
+    sched.on_prefill(loose, 5)
+    # loose has far more post-requeue slack -> preferred victim
+    assert sched.eviction_candidate() == loose.slot
+    # a no-SLO request beats even a loose SLO (infinite slack)
+    sched2, _ = _slo_sched(max_slots=2)
+    a = sched2.submit(Request(prompt=[1] * 8, max_new=4, slo_ms=60_000))
+    b = sched2.submit(Request(prompt=[2] * 8, max_new=4))
+    sched2.admissions()
+    sched2.on_prefill(a, 5)
+    sched2.on_prefill(b, 5)
+    assert sched2.eviction_candidate() == b.slot
+
+
+def test_maybe_preempt_rescues_at_risk_request():
+    sched, clk = _slo_sched(max_slots=1)
+    # long-running no-SLO request occupies the slot
+    bg = sched.submit(Request(prompt=[1] * 8, max_new=50))
+    sched.admissions()
+    sched.on_prefill(bg, 5)
+    # urgent request: service ~ 1 chunk * 0.1 + 2 * 0.01 = 0.12s,
+    # deadline 0.2s away -> meets if admitted now; waiting for bg's 49
+    # remaining steps (0.49s) would blow it
+    urgent = sched.submit(Request(prompt=[2] * 4, max_new=2, slo_ms=200))
+    victim = sched.maybe_preempt()
+    assert victim == bg.slot
+    # no preemption when the pending request has no deadline pressure
+    sched2, _ = _slo_sched(max_slots=1)
+    bg2 = sched2.submit(Request(prompt=[1] * 8, max_new=50))
+    sched2.admissions()
+    sched2.on_prefill(bg2, 5)
+    sched2.submit(Request(prompt=[2] * 4, max_new=2, slo_ms=60_000))
+    assert sched2.maybe_preempt() is None
+    # no preemption when the urgent request is already past saving
+    sched3, clk3 = _slo_sched(max_slots=1)
+    bg3 = sched3.submit(Request(prompt=[1] * 8, max_new=50))
+    sched3.admissions()
+    sched3.on_prefill(bg3, 5)
+    late = sched3.submit(Request(prompt=[2] * 4, max_new=2, slo_ms=100))
+    clk3.t = 10.0
+    assert sched3.maybe_preempt() is None
+
+
+def test_maybe_preempt_ignores_hopeless_pending():
+    """A pending request whose deadline is already unattainable must not
+    shadow a still-savable one: urgency is ranked among requests with
+    non-negative slack only."""
+    sched, clk = _slo_sched(max_slots=1)
+    bg = sched.submit(Request(prompt=[1] * 8, max_new=50))
+    sched.admissions()
+    sched.on_prefill(bg, 5)
+    hopeless = sched.submit(Request(prompt=[2] * 4, max_new=2, slo_ms=50))
+    clk.t = 1.0                            # hopeless is now past its deadline
+    savable = sched.submit(Request(prompt=[3] * 4, max_new=2, slo_ms=200))
+    assert sched.slack_s(hopeless) < 0 <= sched.slack_s(savable)
+    assert sched.maybe_preempt() == bg.slot
+
+
+def test_slo_accounting_on_retire():
+    sched, clk = _slo_sched(max_slots=1)
+    met = sched.submit(Request(prompt=[1, 2], max_new=1, slo_ms=1000))
+    sched.admissions()
+    clk.t = 0.5
+    sched.on_prefill(met, 5)                # retires at 0.5s, within 1s SLO
+    assert met.slo_met is True and sched.slo_met_count == 1
+    missed = sched.submit(Request(prompt=[1, 2], max_new=1, slo_ms=100))
+    sched.admissions()
+    clk.t = 5.0
+    sched.on_prefill(missed, 5)
+    assert missed.slo_met is False and sched.slo_missed_count == 1
+
+
+def test_engine_preemption_end_to_end():
+    """An urgent SLO'd request preempts a no-SLO request mid-decode; both
+    still finish with their full budgets (the victim resumes).  The
+    scheduler clock is frozen after warmup so the policy decision is
+    deterministic (the cost model itself stays engine-fed)."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_slots=1, max_seq=64, prefill_chunk=8)
+    rng = np.random.default_rng(13)
+    bg = eng.submit(rng.integers(0, cfg.vocab, (6,)).tolist(), 30)
+    eng.step()          # admit + first decode: cost model now warm
+    eng.step()
+    sched = eng.scheduler
+    sched.clock = lambda: 0.0           # freeze policy time
+    urgent = eng.submit(rng.integers(0, cfg.vocab, (4,)).tolist(), 2)
+    # deadline: met if admitted now, missed after bg's remaining decode
+    est_wait = bg.remaining * sched.est_step_s
+    urgent.slo_ms = (sched.est_service_s(urgent) + 0.5 * est_wait) * 1e3
+    eng.run()
+    assert len(bg.generated) == 30
+    assert len(urgent.generated) == 2
+    st = eng.stats_summary()
+    assert st["preemptions"] >= 1
+    assert st["slo_met"] == 1           # frozen clock: finishes at t=0
 
 
 # ---------------------------------------------------------------------------
