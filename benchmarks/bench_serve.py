@@ -13,14 +13,22 @@ the answer for the reduced config on CPU:
 * shared-prefix workload: requests extending one system prompt, served
   cold (prefix cache off) and warm (on) — the warm run skips chunked
   prefill for every resident prefix span, and the uplift in *effective*
-  prefill tok/s (reused tokens count as served) is the prefix-cache win.
+  prefill tok/s (reused tokens count as served) is the prefix-cache win;
+* paged allocation: the same shared-prefix traffic served by the
+  contiguous copy_slot engine vs the paged engine (page tables + refcounts
+  + boundary-page copy-on-write) — identical hit rates by construction, so
+  the recorded delta is admission latency, bytes copied, and pages shared
+  per hit path (the PR 4 zero-copy win).
 
 Emits ``results/BENCH_serve.json`` with prefill/decode tok/s for both
-paths, the prefill speedup, decode batch occupancy, and the prefix-cache
-hit/miss/reuse counters — the perf trajectory baseline for later serving
-PRs.  See ``docs/serving.md`` for what each metric excludes.
+paths, the prefill speedup, decode batch occupancy, the prefix-cache
+hit/miss/reuse counters, and the ``paged`` comparison — the perf
+trajectory baseline for later serving PRs.  See ``docs/serving.md`` for
+what each metric excludes.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,13 +56,20 @@ SHARED_PREFIX = 96
 TAIL = 8
 
 
-def _prefix_workload(cfg, params, prompts, *, prefix_cache: bool) -> dict:
+def _prefix_workload(cfg, params, prompts, *, prefix_cache: bool,
+                     paged: Optional[bool] = None,
+                     max_seq: Optional[int] = None,
+                     page_size: Optional[int] = None) -> dict:
     """Serve the shared-prefix request list and return prefill-side stats
-    (``prefix_cache`` toggles reuse; greedy decode, warmed AOT engine)."""
-    max_seq = max(16, -(-(max(len(p) for p in prompts) + GEN) // 16) * 16)
+    (``prefix_cache`` toggles reuse; ``paged`` selects the allocator —
+    None = engine auto; ``max_seq`` / ``page_size`` override the cache
+    shape; greedy decode, warmed AOT engine)."""
+    if max_seq is None:
+        max_seq = max(16, -(-(max(len(p) for p in prompts) + GEN) // 16) * 16)
     eng = ServeEngine(cfg, params, max_slots=SLOTS, max_seq=max_seq,
-                      prefill_chunk=PREFILL_CHUNK,
-                      prefix_cache=prefix_cache, min_prefix=8)
+                      prefill_chunk=PREFILL_CHUNK, page_size=page_size,
+                      prefix_cache=prefix_cache, min_prefix=8,
+                      paged_kv=paged)
     reqs = [eng.submit(p, GEN) for p in prompts]
     eng.warmup()
     eng.run()
@@ -69,6 +84,12 @@ def _prefix_workload(cfg, params, prompts, *, prefix_cache: bool) -> dict:
         "prefix_misses": st["prefix_misses"],
         "prefix_hit_rate": st["prefix_hit_rate"],
         "prefix_reused_tokens": st["prefix_reused_tokens"],
+        "prefix_bytes_copied": st["prefix_bytes_copied"],
+        "pages_shared": st["pages_shared"],
+        "pages_cow": st["pages_cow"],
+        "hit_admit_s_mean": st["hit_admit_s_mean"],
+        "cold_admit_s_mean": st["cold_admit_s_mean"],
+        "paged": eng.paged,
         "tokens": [r.generated for r in reqs],
     }
 
@@ -156,6 +177,46 @@ def run() -> dict:
     cold.pop("tokens")
     warm.pop("tokens")
 
+    # ---- paged allocation: zero-copy page sharing vs the copy_slot path.
+    # Page-aligned capacity + 16-token pages so the 96-token shared prefix
+    # spans whole pages; both engines run the identical split-K decode
+    # math, so greedy tokens must agree bit-for-bit.
+    pg_seq, pg_page = 128, 16
+    section(f"paged allocation: same shared-prefix traffic, copy_slot vs "
+            f"page tables (max_seq {pg_seq}, page {pg_page})")
+    by_copy = _prefix_workload(cfg, params, shared_prompts,
+                               prefix_cache=True, paged=False,
+                               max_seq=pg_seq, page_size=pg_page)
+    by_page = _prefix_workload(cfg, params, shared_prompts,
+                               prefix_cache=True, paged=True,
+                               max_seq=pg_seq, page_size=pg_page)
+    assert by_page["tokens"] == by_copy["tokens"], (
+        "paged allocation changed greedy outputs")
+    assert by_page["prefix_hits"] == by_copy["prefix_hits"] > 0, (
+        "hit rates diverged between allocators")
+    bytes_reduction = 1.0 - (by_page["prefix_bytes_copied"]
+                             / max(by_copy["prefix_bytes_copied"], 1))
+    assert bytes_reduction >= 0.9, (
+        f"paged admission copied only {bytes_reduction:.0%} fewer bytes "
+        f"than copy_slot (acceptance floor: 90%)")
+    print_rows([
+        {"path": "copy_slot", "bytes_copied": by_copy["prefix_bytes_copied"],
+         "pages_shared": by_copy["pages_shared"],
+         "hit_admit_ms": by_copy["hit_admit_s_mean"] * 1e3,
+         "hit_rate": by_copy["prefix_hit_rate"]},
+        {"path": "page_table", "bytes_copied": by_page["prefix_bytes_copied"],
+         "pages_shared": by_page["pages_shared"],
+         "hit_admit_ms": by_page["hit_admit_s_mean"] * 1e3,
+         "hit_rate": by_page["prefix_hit_rate"]},
+    ])
+    admit_speedup = (by_copy["hit_admit_s_mean"]
+                     / max(by_page["hit_admit_s_mean"], 1e-9))
+    print(f"\npaged prefix-hit admission: {bytes_reduction:.0%} fewer bytes "
+          f"copied, {by_page['pages_shared']:.0f} pages shared by "
+          f"reference, {admit_speedup:.2f}x hit-admission latency")
+    by_copy.pop("tokens")
+    by_page.pop("tokens")
+
     return {
         "arch": cfg.arch_id,
         "requests": N_REQUESTS,
@@ -182,6 +243,14 @@ def run() -> dict:
             "cold": cold,
             "reuse": warm,
             "prefill_uplift": prefix_uplift,
+        },
+        "paged": {
+            "max_seq": pg_seq,
+            "page_size": pg_page,
+            "copy": by_copy,
+            "paged": by_page,
+            "bytes_copied_reduction": bytes_reduction,
+            "hit_admit_speedup": admit_speedup,
         },
         "compile_excluded": True,
     }

@@ -62,8 +62,10 @@ def main(argv=None) -> int:
     assert len(outs[0]) == gens[0]
     print(f"engine output {tag} per-token loop for request 0  -> serve_lm OK")
 
-    # second wave: one shared system prefix + sampled continuations; the
-    # prefix cache turns every admission after the first into a page copy
+    # second wave: one shared system prefix + sampled continuations; on an
+    # attention arch the paged allocator serves every admission after the
+    # first by sharing pages by reference (full pages) plus at most one
+    # boundary-page copy-on-write
     system = rng.integers(0, cfg.vocab, (12,)).tolist()
     shared = [system + rng.integers(0, cfg.vocab, (4,)).tolist()
               for _ in range(args.slots + 1)]
@@ -73,7 +75,9 @@ def main(argv=None) -> int:
                              prefill_chunk=16, sampling=sampled)
     print(f"shared-prefix wave: {st2['prefix_hits']:.0f} prefix hits, "
           f"{st2['prefix_reused_tokens']:.0f} tokens reused "
-          f"(hit rate {st2['prefix_hit_rate']:.0%})")
+          f"(hit rate {st2['prefix_hit_rate']:.0%}; "
+          f"{st2['pages_shared']:.0f} pages shared by reference, "
+          f"{st2['prefix_bytes_copied']:.0f} bytes copied)")
     for i, o in enumerate(outs2):
         print(f"  sampled req {i} (seed={100 + i}): {o}")
     return 0

@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Bench-JSON schema check: perf-trajectory files can't silently rot.
+
+Every ``results/BENCH_*.json`` must parse and carry the base keys
+(``bench``, ``elapsed_s``); benches with a declared schema additionally
+require their metric key *paths* (dot-separated, e.g.
+``paged.bytes_copied_reduction``).  A benchmark refactor that silently
+drops a recorded metric — the exact failure mode that would invalidate
+cross-PR perf comparisons — fails tier-1 here with one line per missing
+key.
+
+Exit status 0 when everything resolves; 1 otherwise.  Run from anywhere:
+paths are anchored at the repo root (parent of this script's directory),
+or pass an explicit results directory as the first argument (used by the
+tests to exercise the checker against fixtures).  Wired into
+``scripts/tier1.sh`` after the benchmark smokes.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: keys every BENCH_*.json must have (written by benchmarks/run.py)
+BASE_KEYS = ("bench", "elapsed_s")
+
+#: per-bench required metric paths (dot-separated). Only the perf
+#: trajectories later PRs compare against are pinned; purely illustrative
+#: benches keep just the base keys.
+REQUIRED = {
+    "serve": [
+        "arch", "page_size", "compile_excluded",
+        "per_token.prefill_tok_s", "per_token.decode_tok_s",
+        "engine.prefill_tok_s", "engine.decode_tok_s",
+        "engine.mean_occupancy",
+        "prefill_speedup", "decode_speedup",
+        "prefix.shared_prefix", "prefix.cold.prefill_tok_s",
+        "prefix.reuse.effective_prefill_tok_s",
+        "prefix.reuse.prefix_hit_rate", "prefix.prefill_uplift",
+        "paged.page_size", "paged.copy.prefix_bytes_copied",
+        "paged.paged.prefix_bytes_copied", "paged.paged.pages_shared",
+        "paged.paged.hit_admit_s_mean", "paged.bytes_copied_reduction",
+        "paged.hit_admit_speedup",
+    ],
+    "collectives": [
+        "rows", "stage_plan", "kernel_timings", "dryrun_collectives",
+    ],
+    "carry_tables": ["table_1a", "table_1b", "table_1c", "table_2",
+                     "cells_checked"],
+}
+
+
+def _lookup(data, path: str) -> bool:
+    """True when the dot-separated ``path`` resolves in nested dicts of
+    ``data``."""
+    node = data
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return False
+        node = node[part]
+    return True
+
+
+def check_file(path: Path) -> list:
+    """All schema violations in one BENCH_*.json, as strings."""
+    name = path.stem[len("BENCH_"):]
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        return [f"{path.name}: unreadable/invalid JSON ({e})"]
+    errors = [f"{path.name}: missing base key {k!r}"
+              for k in BASE_KEYS if k not in data]
+    for key_path in REQUIRED.get(name, ()):
+        if not _lookup(data, key_path):
+            errors.append(f"{path.name}: missing metric {key_path!r}")
+    return errors
+
+
+def main(argv=None) -> int:
+    """Check every BENCH_*.json under results/ (or under ``argv[0]`` when
+    given); prints one line per violation, returns 0/1."""
+    results = Path(argv[0]).resolve() if argv else ROOT / "results"
+    files = sorted(results.glob("BENCH_*.json"))
+    if not files:
+        print(f"check_bench_schema: no BENCH_*.json under {results}",
+              file=sys.stderr)
+        return 1
+    missing = [n for n in REQUIRED
+               if not (results / f"BENCH_{n}.json").exists()]
+    errors = [f"BENCH_{n}.json: file missing entirely" for n in missing]
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(f"check_bench_schema: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_bench_schema: {len(files)} files OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -22,8 +22,13 @@ python -m pytest -q tests/test_docs.py
 # Benchmark smoke: the carry-table bench exercises the theory layer end to
 # end and is fast enough for CI; collectives and serve emit the
 # perf-trajectory JSONs (serve also dry-runs the chunked-prefill
-# continuous-batching engine — sampling, prefix cache, SLO admission —
-# on a fresh checkout).
+# continuous-batching engine — sampling, prefix cache, SLO admission,
+# paged KV allocation — on a fresh checkout).
 python -m benchmarks.run --only carry_tables
 python -m benchmarks.run --only collectives
 python -m benchmarks.run --only serve
+
+# Perf-trajectory schema: every results/BENCH_*.json must keep its
+# required metric keys (a refactor that silently drops one fails here,
+# not three PRs later when someone tries to compare against it).
+python scripts/check_bench_schema.py

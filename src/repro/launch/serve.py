@@ -87,7 +87,8 @@ def generate(cfg, params, prompts: np.ndarray, gen: int,
 def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
                 max_seq: int = 0, prefill_chunk: int = 32,
                 page_size=None, sampling=None, slo_ms=None,
-                prefix_cache: bool = True):
+                prefix_cache: bool = True, paged_kv=None,
+                pool_pages=None):
     """Run a list of requests through the engine; returns (outputs, stats).
 
     Args:
@@ -103,6 +104,10 @@ def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
       slo_ms: per-request completion-latency SLO in ms (scalar or list;
         None = no SLO).
       prefix_cache: enable prefix-cache reuse across requests.
+      paged_kv: paged KV allocation (page tables + refcounted zero-copy
+        prefix sharing); None = engine auto, False = contiguous slots.
+      pool_pages: physical page-pool size when paged (None = one full
+        row per slot; smaller overcommits and defers on exhaustion).
 
     Returns:
       (outputs, stats): per-request generated-token lists in submission
@@ -120,7 +125,8 @@ def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
         max_seq = max(16, -(-max_seq // 16) * 16)        # pad to 16
     eng = ServeEngine(cfg, params, max_slots=slots, max_seq=max_seq,
                       prefill_chunk=prefill_chunk, page_size=page_size,
-                      prefix_cache=prefix_cache)
+                      prefix_cache=prefix_cache, paged_kv=paged_kv,
+                      pool_pages=pool_pages)
     # warm up BEFORE submitting: the SLO clock starts at submission, and
     # AOT compile / first-execution setup is engine bring-up, not request
     # latency (same reason the throughput timers exclude it)
@@ -157,6 +163,12 @@ def main(argv=None) -> int:
                          "(enables deadline-aware admission)")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable prefix-cache reuse across requests")
+    ap.add_argument("--no-paged-kv", action="store_true",
+                    help="force contiguous slot allocation (default: "
+                         "paged page-table allocation when supported)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical page-pool size for paged allocation "
+                         "(default: one full row per slot)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -197,7 +209,9 @@ def main(argv=None) -> int:
                               prefill_chunk=args.prefill_chunk,
                               page_size=args.page,
                               sampling=sampling, slo_ms=args.slo_ms,
-                              prefix_cache=not args.no_prefix_cache)
+                              prefix_cache=not args.no_prefix_cache,
+                              paged_kv=False if args.no_paged_kv else None,
+                              pool_pages=args.pool_pages)
     print(f"[engine] arch={cfg.arch_id} requests={args.requests} "
           f"slots={args.slots} gen={args.gen} "
           f"prompt_lens={lens} sampling={sampling}")
@@ -208,7 +222,9 @@ def main(argv=None) -> int:
           f"occupancy {stats['mean_occupancy']:.0%}")
     print(f"prefix cache: {stats['prefix_hits']:.0f} hits / "
           f"{stats['prefix_misses']:.0f} misses "
-          f"({stats['prefix_reused_tokens']:.0f} tokens reused)")
+          f"({stats['prefix_reused_tokens']:.0f} tokens reused, "
+          f"{stats['pages_shared']:.0f} pages shared by reference, "
+          f"{stats['prefix_bytes_copied']:.0f} bytes copied)")
     if args.slo_ms is not None:
         print(f"SLO {args.slo_ms:.0f}ms: {stats['slo_met']:.0f} met / "
               f"{stats['slo_missed']:.0f} missed  "

@@ -23,7 +23,8 @@ from repro.models.common import (ParamSpec, apply_rope, constrain,
 from repro.models.common import scan as mscan
 
 __all__ = ["gqa_param_specs", "gqa_train", "gqa_decode", "gqa_decode_paged",
-           "decode_positions", "batched_cache_write", "causal_valid"]
+           "gqa_decode_pages", "decode_positions", "batched_cache_write",
+           "causal_valid"]
 
 NEG_INF = -1e30
 
@@ -338,20 +339,28 @@ def splitk_ok(cfg: ModelConfig, mesh, batch: int, smax: int) -> bool:
     return smax % mesh.shape["model"] == 0 and batch % dp == 0
 
 
+def _decode_qkv_new(x, p, cfg, cur):
+    """Project + rope the C new tokens of a decode/prefill call.
+
+    Returns ``(q, k_new, v_new, pos)`` with q/k roped at the per-token
+    positions ``pos`` (``(C,)`` for a scalar ``cur``, ``(B, C)`` for a
+    per-slot vector)."""
+    c = x.shape[1]
+    q, k_new, v_new = _project_qkv(x, p, cfg)
+    pos = decode_positions(cur, c)                   # (C,) or (B, C)
+    sin, cos = _rope_tables(pos, cfg.hd, cfg.rope_theta)
+    return apply_rope(q, sin, cos), apply_rope(k_new, sin, cos), v_new, pos
+
+
 def _decode_qkv_cache(x, p, cfg, cache_k, cache_v, cur_index):
     """Shared decode front-end: project + rope the C new tokens, write them
     into the cache at per-slot offsets, return (q, caches, valid mask).
 
     ``valid`` is (B or 1, 1, C, Smax): key position s is attendable by
     query c of sequence b iff s <= position(b, c)."""
-    b, c, _ = x.shape
     smax = cache_k.shape[1]
     cur = jnp.asarray(cur_index, jnp.int32)
-    q, k_new, v_new = _project_qkv(x, p, cfg)
-    pos = decode_positions(cur, c)                   # (C,) or (B, C)
-    sin, cos = _rope_tables(pos, cfg.hd, cfg.rope_theta)
-    q = apply_rope(q, sin, cos)
-    k_new = apply_rope(k_new, sin, cos)
+    q, k_new, v_new, pos = _decode_qkv_new(x, p, cfg, cur)
     cache_k = batched_cache_write(cache_k, k_new, cur)
     cache_v = batched_cache_write(cache_v, v_new, cur)
     cache_k = constrain(cache_k, ("batch", "kv_seq", None, None))
@@ -394,42 +403,37 @@ def gqa_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     return out @ p["wo"].astype(x.dtype), cache_k, cache_v
 
 
-def gqa_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
-                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
-                     cur_index: jnp.ndarray, page: int
-                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Paged split-K decode: the serve-engine hot path as the fourth
-    consumer of the shared reduction engine.
+def _splitk_attend(q: jnp.ndarray, k_view: jnp.ndarray, v_view: jnp.ndarray,
+                   valid: jnp.ndarray, cfg: ModelConfig, page: int
+                   ) -> jnp.ndarray:
+    """Split-K attention over fixed-size KV pages (the shared core of
+    :func:`gqa_decode_paged` and :func:`gqa_decode_pages`).
 
-    The KV cache is viewed as ``n_pages`` fixed-size pages along the
-    sequence axis. Each page contributes a partial (sum-exp, PV) accumulator
-    under the global row max, and the page-axis combine is an explicit
-    N-operand reduction routed through the same radix-4 tree plan
+    q: (B, C, H, hd) roped queries; k_view/v_view: (B, Smax, Hkv, hd)
+    contiguous *views* of the cache (dense slot rows or gathered pages —
+    identical math either way); ``valid`` masks attendable positions.
+    Each page contributes a partial (sum-exp, PV) accumulator under the
+    global row max, and the page-axis combine is an explicit N-operand
+    reduction routed through the same radix-4 tree plan
     (:func:`repro.dist.plan.make_reduction_plan`) that shapes the
     in-register, in-VMEM, and cross-device tiers — on TPU via the fused
-    Pallas reduce, elsewhere via the identical in-register tree. Identical
-    math to :func:`gqa_decode` up to fp reassociation of the page sums.
-    """
+    Pallas reduce, elsewhere via the identical in-register tree.
+    Returns (B, C, n_heads * hd)."""
     import repro.dist.plan as dist_plan
     from repro.kernels import ops as kops
     from repro.kernels.moa_reduce import radix4_tree_sum
 
-    b, c, d = x.shape
-    smax = cache_k.shape[1]
-    if smax % page:
-        raise ValueError(f"page={page} must divide max_seq={smax}")
+    b, c = q.shape[0], q.shape[1]
+    smax = k_view.shape[1]
     n_pages = smax // page
-    q, cache_k, cache_v, valid = _decode_qkv_cache(
-        x, p, cfg, cache_k, cache_v, cur_index)
-
     pad = tp_head_pad(cfg)
     hq = cfg.n_heads + pad
     q = _pad_heads(q, pad, cfg.n_kv_heads)
     n_rep = hq // cfg.n_kv_heads
-    k = _repeat_kv(cache_k.astype(x.dtype), n_rep)
-    v = _repeat_kv(cache_v.astype(x.dtype), n_rep)
+    k = _repeat_kv(k_view.astype(q.dtype), n_rep)
+    v = _repeat_kv(v_view.astype(q.dtype), n_rep)
     scores = jnp.einsum("bchd,bshd->bhcs", q, k) / jnp.sqrt(
-        jnp.asarray(cfg.hd, jnp.float32)).astype(x.dtype)
+        jnp.asarray(cfg.hd, jnp.float32)).astype(q.dtype)
     scores = jnp.where(valid, scores.astype(jnp.float32), NEG_INF)
 
     # split-K over pages: global row max, then per-page partial accumulators
@@ -439,7 +443,7 @@ def gqa_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     l_pages = jnp.moveaxis(pp.sum(axis=-1), -1, 0)           # (n_pages,b,h,C)
     vp = jnp.moveaxis(v.reshape(b, n_pages, page, hq, cfg.hd), 1, 0)
     o_pages = jnp.einsum("bhcns,nbshd->nbhcd",
-                         pp.astype(x.dtype), vp)             # (n_pages,...)
+                         pp.astype(q.dtype), vp)             # (n_pages,...)
 
     plan = dist_plan.make_reduction_plan(n_pages)
     if kops.on_tpu():
@@ -449,8 +453,66 @@ def gqa_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     else:
         l = radix4_tree_sum(l_pages, plan)
         o = radix4_tree_sum(o_pages.astype(jnp.float32), plan)
-    out = (o / l[..., None]).astype(x.dtype)                 # (b,h,C,hd)
+    out = (o / l[..., None]).astype(q.dtype)                 # (b,h,C,hd)
     out = jnp.moveaxis(out, 1, 2)                            # (b,C,h,hd)
     out = _unpad_heads(out, pad, cfg.n_kv_heads)
-    out = out.reshape(b, c, cfg.n_heads * cfg.hd)
+    return out.reshape(b, c, cfg.n_heads * cfg.hd)
+
+
+def gqa_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     cur_index: jnp.ndarray, page: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged split-K decode over a *dense* per-slot cache: the serve
+    engine's hot path as the fourth consumer of the shared reduction
+    engine.
+
+    The KV cache is viewed as ``n_pages`` fixed-size pages along the
+    sequence axis; the page-axis combine runs through the shared radix-4
+    :class:`~repro.dist.plan.ReductionPlan` (see :func:`_splitk_attend`).
+    Identical math to :func:`gqa_decode` up to fp reassociation of the
+    page sums.
+    """
+    smax = cache_k.shape[1]
+    if smax % page:
+        raise ValueError(f"page={page} must divide max_seq={smax}")
+    q, cache_k, cache_v, valid = _decode_qkv_cache(
+        x, p, cfg, cache_k, cache_v, cur_index)
+    out = _splitk_attend(q, cache_k, cache_v, valid, cfg, page)
     return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def gqa_decode_pages(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                     pool_k: jnp.ndarray, pool_v: jnp.ndarray,
+                     cur_index: jnp.ndarray, pages: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged-*allocation* split-K decode: :func:`gqa_decode_paged`
+    generalized to take a page-index vector per slot.
+
+    pool_k/pool_v: ``(num_pages, page_size, Hkv, hd)`` physical page pools
+    (this layer's slice of the serve tier's pooled state tree); ``pages``:
+    ``(B, n_pages)`` int32 page table mapping each slot's logical pages to
+    physical ones.  The slot views are *gathered* from the pool
+    (:func:`repro.models.paging.gather_pages`) — non-contiguous, possibly
+    refcount-shared pages — then attended with exactly the same split-K
+    page combine as the dense path, so tokens are bit-exact with a
+    contiguous engine.  The ``C`` new KV rows are scattered back through
+    the table; shared pages are never rewritten (the serve engine
+    copy-on-writes the boundary page before any write can land there).
+    """
+    from repro.models import paging
+
+    b, c, _ = x.shape
+    page = pool_k.shape[1]
+    smax = pages.shape[1] * page
+    cur = jnp.asarray(cur_index, jnp.int32)
+    q, k_new, v_new, pos = _decode_qkv_new(x, p, cfg, cur)
+    k_view = batched_cache_write(paging.gather_pages(pool_k, pages),
+                                 k_new, cur)
+    v_view = batched_cache_write(paging.gather_pages(pool_v, pages),
+                                 v_new, cur)
+    out = _splitk_attend(q, k_view, v_view, causal_valid(pos, smax),
+                         cfg, page)
+    pool_k = paging.scatter_token_rows(pool_k, pages, k_new, pos)
+    pool_v = paging.scatter_token_rows(pool_v, pages, v_new, pos)
+    return out @ p["wo"].astype(x.dtype), pool_k, pool_v

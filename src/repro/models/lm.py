@@ -222,9 +222,14 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
     """Run the block stack in cache-attend mode over C new tokens.
 
     batch: {"tokens": (B, C), "index": scalar current length OR a (B,)
-    per-slot length vector (continuous batching)}. Returns the final
-    hidden states (B, C, D) and the updated cache state."""
+    per-slot length vector (continuous batching), optional "pages": a
+    (B, n_pages) int32 page table}. When "pages" is present the state
+    leaves are *physical page pools* (``(layers, num_pages, page_size,
+    ...)``, see ``repro.serve.cache.paged_state_specs``) and every layer
+    attends over gathered pages instead of dense slot rows. Returns the
+    final hidden states (B, C, D) and the updated cache state."""
     cur = batch["index"]
+    pages = batch.get("pages")
     x = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
                              cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
 
@@ -234,7 +239,11 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
         def layer(x, inp):
             bp, ckv, kr = inp
             h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
-            h, ckv, kr = mla.mla_decode(h, bp["attn"], cfg, ckv, kr, cur)
+            if pages is not None:
+                h, ckv, kr = mla.mla_decode_paged(h, bp["attn"], cfg, ckv,
+                                                  kr, cur, pages)
+            else:
+                h, ckv, kr = mla.mla_decode(h, bp["attn"], cfg, ckv, kr, cur)
             x = x + h
             h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
             if cfg.n_experts:
@@ -249,17 +258,20 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
         caches = (state["k"], state["v"])
         # splitk's shard_map assumes one shared write offset; paged split-K
         # is the single-host analogue keyed off the shared reduction plan.
-        use_splitk = (jnp.ndim(cur) == 0 and
+        use_splitk = (pages is None and jnp.ndim(cur) == 0 and
                       attention.splitk_ok(cfg, mesh, caches[0].shape[1],
                                           caches[0].shape[2]))
         page = cfg.decode_page_size
-        use_paged = (not use_splitk and page > 0
+        use_paged = (pages is None and not use_splitk and page > 0
                      and caches[0].shape[2] % page == 0)
 
         def layer(x, inp):
             bp, ck, cv = inp
             h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
-            if use_splitk:
+            if pages is not None:
+                h, ck, cv = attention.gqa_decode_pages(
+                    h, bp["attn"], cfg, ck, cv, cur, pages)
+            elif use_splitk:
                 h, ck, cv = attention.gqa_decode_splitk(
                     h, bp["attn"], cfg, ck, cv, cur, mesh)
             elif use_paged:
@@ -286,7 +298,8 @@ def decode_step(params: dict, state: Dict[str, jnp.ndarray],
                 mesh: Optional[Mesh] = None
                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """One new token for every sequence. batch: {"tokens": (B, 1),
-    "index": scalar current length or (B,) per-slot lengths}.
+    "index": scalar current length or (B,) per-slot lengths, optional
+    "pages": (B, n_pages) page table for pooled (paged-allocation) state}.
     Returns (logits (B, V), new state).
 
     Shape conventions the serve tier relies on: a ``(B,)`` index vector
@@ -308,7 +321,8 @@ def prefill_chunk(params: dict, state: Dict[str, jnp.ndarray],
 
     batch: {"tokens": (B, C), "index": scalar chunk start offset,
     "nvalid": scalar count of real tokens in the chunk (<= C; trailing
-    bucket padding beyond it only writes masked-off cache positions)}.
+    bucket padding beyond it only writes masked-off cache positions),
+    optional "pages": (B, n_pages) page table for pooled state}.
     Returns (logits (B, V) at the last valid position, new state); logits
     are float32 (same guarantee as :func:`decode_step`, so the first
     sampled token of a request draws from the same numerics either way).

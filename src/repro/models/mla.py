@@ -17,7 +17,7 @@ from repro.models.common import (ParamSpec, apply_rope, constrain,
                                  rms_norm, rope_angles)
 from repro.models.common import scan as mscan
 
-__all__ = ["mla_param_specs", "mla_train", "mla_decode"]
+__all__ = ["mla_param_specs", "mla_train", "mla_decode", "mla_decode_paged"]
 
 NEG_INF = -1e30
 
@@ -109,6 +109,33 @@ def mla_train(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     return out @ p["wo"].astype(x.dtype)
 
 
+def _absorbed_attend(x_dtype, p, cfg, q_nope, q_rope, ckv_view, kr_view,
+                     valid) -> jnp.ndarray:
+    """Absorbed-formulation attention over latent KV *views* (the shared
+    core of :func:`mla_decode` and :func:`mla_decode_paged`).
+
+    q_nope/q_rope: (B, C, H, dn/dr); ckv_view: (B, Smax, rkv); kr_view:
+    (B, Smax, dr); ``valid`` masks attendable positions.  Score/PV
+    contractions run in latent space.  Returns (B, C, H * dv)."""
+    b, c = q_nope.shape[0], q_nope.shape[1]
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rkv = cfg.kv_lora_rank
+    # absorb wk_b into the query: q_lat (B,C,H,rkv)
+    wk_b = p["wk_b"].astype(x_dtype).reshape(rkv, h, dn)
+    q_lat = jnp.einsum("bchd,rhd->bchr", q_nope, wk_b)
+    ckv = ckv_view.astype(x_dtype)
+    scores = (jnp.einsum("bchr,bsr->bhcs", q_lat, ckv) +
+              jnp.einsum("bchd,bsd->bhcs", q_rope,
+                         kr_view.astype(x_dtype)))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(float(dn + dr))
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x_dtype)
+    ctx_lat = jnp.einsum("bhcs,bsr->bchr", probs, ckv)   # (B,C,H,rkv)
+    wv_b = p["wv_b"].astype(x_dtype).reshape(rkv, h, dv)
+    ctx = jnp.einsum("bchr,rhd->bchd", ctx_lat, wv_b)
+    return ctx.reshape(b, c, h * dv)
+
+
 def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
                cur_index: jnp.ndarray
@@ -122,8 +149,6 @@ def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                                         decode_positions)
 
     b, c, _ = x.shape
-    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
-    rkv = cfg.kv_lora_rank
     smax = cache_ckv.shape[1]
     cur = jnp.asarray(cur_index, jnp.int32)
     pos = decode_positions(cur, c)                   # (C,) or (B, C)
@@ -134,18 +159,43 @@ def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     cache_ckv = constrain(cache_ckv, ("batch", "kv_seq", None))
     cache_krope = constrain(cache_krope, ("batch", "kv_seq", None))
 
-    # absorb wk_b into the query: q_lat (B,C,H,rkv)
-    wk_b = p["wk_b"].astype(x.dtype).reshape(rkv, h, dn)
-    q_lat = jnp.einsum("bchd,rhd->bchr", q_nope, wk_b)
-    ckv = cache_ckv.astype(x.dtype)
-    scores = (jnp.einsum("bchr,bsr->bhcs", q_lat, ckv) +
-              jnp.einsum("bchd,bsd->bhcs", q_rope,
-                         cache_krope.astype(x.dtype)))
-    scores = scores.astype(jnp.float32) / jnp.sqrt(float(dn + dr))
-    scores = jnp.where(causal_valid(pos, smax), scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    ctx_lat = jnp.einsum("bhcs,bsr->bchr", probs, ckv)   # (B,C,H,rkv)
-    wv_b = p["wv_b"].astype(x.dtype).reshape(rkv, h, dv)
-    ctx = jnp.einsum("bchr,rhd->bchd", ctx_lat, wv_b)
-    out = ctx.reshape(b, c, h * dv) @ p["wo"].astype(x.dtype)
-    return out, cache_ckv, cache_krope
+    out = _absorbed_attend(x.dtype, p, cfg, q_nope, q_rope, cache_ckv,
+                           cache_krope, causal_valid(pos, smax))
+    return out @ p["wo"].astype(x.dtype), cache_ckv, cache_krope
+
+
+def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
+                     pool_ckv: jnp.ndarray, pool_krope: jnp.ndarray,
+                     cur_index: jnp.ndarray, pages: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged-allocation absorbed decode: :func:`mla_decode` generalized to
+    take a page-index vector per slot.
+
+    pool_ckv: ``(num_pages, page_size, rkv)`` and pool_krope:
+    ``(num_pages, page_size, dr)`` physical page pools; ``pages``:
+    ``(B, n_pages)`` int32 page table.  The latent slot views are gathered
+    from the pool (:func:`repro.models.paging.gather_pages`) and attended
+    with exactly the same absorbed math as the dense path — bit-exact with
+    a contiguous engine — then the ``C`` new latent rows are scattered back
+    through the table (shared pages are never rewritten; the serve engine
+    copy-on-writes the boundary page)."""
+    from repro.models import paging
+    from repro.models.attention import (batched_cache_write, causal_valid,
+                                        decode_positions)
+
+    b, c, _ = x.shape
+    page = pool_ckv.shape[1]
+    smax = pages.shape[1] * page
+    cur = jnp.asarray(cur_index, jnp.int32)
+    pos = decode_positions(cur, c)                   # (C,) or (B, C)
+    q_nope, q_rope = _queries(x, p, cfg, pos)
+    c_new, kr_new = _latent_kv(x, p, cfg, pos)
+    ckv_view = batched_cache_write(paging.gather_pages(pool_ckv, pages),
+                                   c_new, cur)
+    kr_view = batched_cache_write(paging.gather_pages(pool_krope, pages),
+                                  kr_new, cur)
+    out = _absorbed_attend(x.dtype, p, cfg, q_nope, q_rope, ckv_view,
+                           kr_view, causal_valid(pos, smax))
+    pool_ckv = paging.scatter_token_rows(pool_ckv, pages, c_new, pos)
+    pool_krope = paging.scatter_token_rows(pool_krope, pages, kr_new, pos)
+    return out @ p["wo"].astype(x.dtype), pool_ckv, pool_krope

@@ -1,0 +1,75 @@
+"""Jax-traceable paged-KV primitives: gather a slot view, scatter new rows.
+
+The serve tier's paged allocator (:mod:`repro.serve.cache`) stores every
+positional state leaf as a *physical page pool* — shape
+``(num_pages, page_size, ...)`` per layer — plus a per-slot ``(max_pages,)``
+int32 page-index vector (the page table).  The model layer consumes that
+layout through exactly two primitives:
+
+* :func:`gather_pages` — materialize the contiguous ``(B, S, ...)`` view a
+  decode/prefill step attends over, by gathering each slot's pages.  The
+  gathered view is *bit-identical* to the dense cache at every attendable
+  position, so the attention math downstream is unchanged.
+* :func:`scatter_token_rows` — write the step's ``C`` freshly-computed rows
+  per slot back into the pool at their physical ``(page, offset)``
+  coordinates, computed in-graph from the page table.  Only the written
+  rows move; untouched (possibly *shared*, refcounted) pages are never
+  rewritten, which is what makes zero-copy prefix sharing safe: a slot can
+  read a page it does not own, but its writes always land in pages the
+  serve engine allocated (or copy-on-write'd) for that slot alone.
+
+Physical page 0 is reserved by the allocator as a scratch page: idle decode
+lanes point their whole table row at it, so their unconditional (discarded)
+KV writes can never corrupt a retired-but-reusable slot's pages.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gather_pages", "scatter_token_rows"]
+
+
+def gather_pages(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
+    """Gather per-slot pages into a contiguous sequence view.
+
+    Args:
+      pool: one state leaf's physical pool, ``(num_pages, page_size, ...)``.
+      pages: ``(B, n_pages)`` int32 page table — row ``b`` lists the
+        physical page backing each of slot ``b``'s logical pages.
+
+    Returns:
+      ``(B, n_pages * page_size, ...)`` view; position ``s`` of slot ``b``
+      reads ``pool[pages[b, s // page_size], s % page_size]``.
+    """
+    v = jnp.take(pool, pages, axis=0)        # (B, n_pages, page, ...)
+    return v.reshape((v.shape[0], v.shape[1] * v.shape[2]) + v.shape[3:])
+
+
+def scatter_token_rows(pool: jnp.ndarray, pages: jnp.ndarray,
+                       rows: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Write ``C`` new rows per slot into the pool through the page table.
+
+    Args:
+      pool: one state leaf's physical pool, ``(num_pages, page_size, ...)``.
+      pages: ``(B, n_pages)`` int32 page table.
+      rows: ``(B, C, ...)`` rows to write (cast to the pool dtype).
+      pos: int32 sequence positions of the rows — ``(B, C)`` per-slot, or
+        ``(C,)`` shared across slots (broadcast, mirroring
+        ``batched_cache_write``'s scalar/vector contract); each maps to
+        physical coordinates ``(pages[b, pos // page_size],
+        pos % page_size)``.
+
+    Returns:
+      The pool with exactly the ``B * C`` addressed rows replaced.  The
+      caller (the serve engine) guarantees no two *live* slots address the
+      same physical page, so duplicate scatter targets only arise on the
+      shared scratch page, whose contents are never read.
+    """
+    page = pool.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None], rows.shape[:2])
+    lp = pos // page                                      # (B, C)
+    off = pos % page
+    phys = jnp.take_along_axis(pages, lp, axis=1)         # (B, C)
+    return pool.at[phys, off].set(rows.astype(pool.dtype))

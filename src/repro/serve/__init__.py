@@ -1,9 +1,10 @@
 """Serving subsystem: chunked prefill + continuous batching + in-graph
 sampling + prefix-cache reuse + SLO-aware admission over the shared decode
 state (see :mod:`repro.serve.engine` and ``docs/serving.md``)."""
-from repro.serve.cache import (PrefixTrie, copy_slot, reset_slot, slot_slice,
-                               slot_update, state_bytes, state_zeros,
-                               supports_prefix)
+from repro.serve.cache import (PagePool, PrefixTrie, copy_page, copy_slot,
+                               pageable, paged_state_specs, reset_slot,
+                               slot_slice, slot_update, state_bytes,
+                               state_zeros, supports_prefix)
 from repro.serve.engine import ServeEngine, auto_page_size
 from repro.serve.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serve.scheduler import Request, Scheduler
@@ -12,5 +13,6 @@ __all__ = [
     "ServeEngine", "auto_page_size", "Request", "Scheduler",
     "SamplingParams", "GREEDY", "sample_tokens",
     "PrefixTrie", "supports_prefix", "copy_slot",
+    "PagePool", "pageable", "paged_state_specs", "copy_page",
     "state_zeros", "slot_slice", "slot_update", "reset_slot", "state_bytes",
 ]

@@ -26,6 +26,18 @@ Prefix reuse is only sound for state trees whose every leaf is positional
 on tokens ``[0..i]``, so a copied prefix equals a recomputed one.  SSM /
 hybrid conv+state leaves summarize the *whole* sequence in O(1) state, so
 :func:`supports_prefix` gates those families off (every lookup misses).
+
+**Paged allocation** (the zero-copy upgrade of the hit path): instead of
+per-slot contiguous regions, positional leaves can be allocated as a
+*physical page pool* — :func:`paged_state_specs` rewrites each leaf's
+``(batch, kv_seq)`` axis pair into ``(phys_page, page_seq)`` — with a
+host-side refcounting allocator (:class:`PagePool`) and per-slot
+``(max_pages,)`` page-index vectors.  A prefix-cache hit then shares full
+pages **by reference** (refcount bump, zero bytes moved) and copies at most
+the one partial boundary page (:func:`copy_page`) instead of the whole
+prefix, so hit admission cost is O(1 page) rather than O(prefix).  The
+model layer reads/writes this layout through
+:mod:`repro.models.paging`.
 """
 from __future__ import annotations
 
@@ -33,11 +45,13 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.common import ParamSpec
 
 __all__ = ["state_zeros", "batch_axis", "slot_slice", "slot_update",
            "reset_slot", "copy_slot", "state_bytes", "supports_prefix",
+           "pageable", "paged_state_specs", "copy_page", "PagePool",
            "PrefixTrie"]
 
 
@@ -146,6 +160,155 @@ def supports_prefix(specs: Any) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# paged allocation: physical page pool + pooled state layout
+# ---------------------------------------------------------------------------
+
+def pageable(specs: Any, page_size: int) -> bool:
+    """True when the ``specs`` tree can be allocated as a physical page
+    pool of ``page_size``-token pages: every leaf is positional with an
+    adjacent ``(batch, kv_seq)`` axis pair and a ``kv_seq`` extent
+    divisible by ``page_size``.
+
+    Attention families (dense GQA, MLA) qualify; SSM / hybrid trees carry
+    non-positional leaves and do not (they fall back to contiguous slot
+    allocation)."""
+    if page_size <= 0:
+        return False
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    if not leaves:
+        return False
+    for s in leaves:
+        if "batch" not in s.axes or "kv_seq" not in s.axes:
+            return False
+        bax, sax = s.axes.index("batch"), s.axes.index("kv_seq")
+        if sax != bax + 1 or s.shape[sax] % page_size:
+            return False
+    return True
+
+
+def paged_state_specs(specs: Any, page_size: int, num_pages: int) -> Any:
+    """Rewrite a contiguous decode-state ``specs`` tree into its pooled
+    (paged-allocation) layout.
+
+    Every leaf's adjacent ``(batch, kv_seq)`` axis pair becomes
+    ``(phys_page, page_seq)`` with extents ``(num_pages, page_size)`` —
+    the physical page pool the serve engine allocates slots' pages from at
+    arbitrary offsets.  Raises ``ValueError`` for trees that
+    :func:`pageable` rejects."""
+    if not pageable(specs, page_size):
+        raise ValueError(
+            f"state tree is not pageable at page_size={page_size}: every "
+            "leaf needs an adjacent (batch, kv_seq) axis pair with "
+            "kv_seq divisible by the page size")
+
+    def conv(s: ParamSpec) -> ParamSpec:
+        bax = s.axes.index("batch")
+        shape = s.shape[:bax] + (num_pages, page_size) + s.shape[bax + 2:]
+        axes = s.axes[:bax] + ("phys_page", "page_seq") + s.axes[bax + 2:]
+        return ParamSpec(shape, axes, dtype=s.dtype, init=s.init,
+                         scale=s.scale)
+
+    return jax.tree.map(conv, specs, is_leaf=_is_spec)
+
+
+def _leaf_page_copy(leaf: jnp.ndarray, spec: ParamSpec, src, dst
+                    ) -> jnp.ndarray:
+    ax = spec.axes.index("phys_page")
+    starts = [jnp.asarray(0, jnp.int32)] * leaf.ndim
+    starts[ax] = jnp.asarray(src, jnp.int32)
+    sizes = list(leaf.shape)
+    sizes[ax] = 1
+    page = jax.lax.dynamic_slice(leaf, starts, sizes)
+    starts[ax] = jnp.asarray(dst, jnp.int32)
+    return jax.lax.dynamic_update_slice(leaf, page, starts)
+
+
+def copy_page(state: Any, pspecs: Any, src, dst) -> Any:
+    """Copy ONE physical page ``src`` over physical page ``dst`` in every
+    leaf of the pooled ``state`` (jit-traceable; ``pspecs`` names each
+    leaf's ``phys_page`` axis).
+
+    This is the copy-on-write step of a prefix-cache hit: only the partial
+    *boundary* page is copied — every fully-covered page is shared by
+    reference — so the bytes moved per hit are O(page), not O(prefix)."""
+    return jax.tree.map(
+        lambda leaf, s: _leaf_page_copy(leaf, s, src, dst), state, pspecs,
+        is_leaf=lambda x: _is_spec(x))
+
+
+class PagePool:
+    """Host-side physical-page allocator with reference counts.
+
+    Physical page 0 is reserved as the **scratch page**: it is never
+    allocated, unallocated page-table entries point at it, and idle decode
+    lanes aim their whole table row at it so their unconditional
+    (discarded) writes can never touch a real page.  Pages ``1 ..
+    num_pages-1`` are allocatable.
+
+    Refcounts count the page-table rows referencing a page: an owning
+    writer holds exactly one reference; a prefix-sharing slot bumps it.
+    A page returns to the free list only when its count reaches zero —
+    which is how a shared page outlives the slot it was first written by.
+    The count can never go negative: :meth:`deref` raises instead of
+    corrupting the free list."""
+
+    def __init__(self, num_pages: int):
+        """Create a pool of ``num_pages`` physical pages (page 0 is the
+        reserved scratch page, so at least 2 are required)."""
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (one is scratch), "
+                             f"got {num_pages}")
+        self.num_pages = num_pages
+        self.refcount = np.zeros(num_pages, np.int32)
+        self.refcount[0] = 1                      # scratch: pinned forever
+        self._free = list(range(num_pages - 1, 0, -1))   # pop() -> 1, 2, ...
+        self.allocs = 0
+        self.oom_events = 0
+
+    @property
+    def free_count(self) -> int:
+        """Number of allocatable pages currently on the free list."""
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        """Number of non-scratch pages currently allocated."""
+        return self.num_pages - 1 - len(self._free)
+
+    def alloc(self) -> int:
+        """Take one free page (refcount 1). Returns its index, or ``-1``
+        when the pool is exhausted (the caller defers/reclaims — an OOM is
+        counted, never an exception, because admission handles it)."""
+        if not self._free:
+            self.oom_events += 1
+            return -1
+        p = self._free.pop()
+        self.refcount[p] = 1
+        self.allocs += 1
+        return p
+
+    def ref(self, page: int) -> None:
+        """Add one reference to an allocated ``page`` (prefix sharing)."""
+        if page <= 0 or page >= self.num_pages or self.refcount[page] <= 0:
+            raise ValueError(f"ref of unallocated/scratch page {page}")
+        self.refcount[page] += 1
+
+    def deref(self, page: int) -> bool:
+        """Drop one reference to ``page``; frees it at zero. Returns True
+        when the page was actually freed. Raises on scratch or on a page
+        whose count is already zero (refcount underflow)."""
+        if page <= 0 or page >= self.num_pages:
+            raise ValueError(f"deref of scratch/out-of-range page {page}")
+        if self.refcount[page] <= 0:
+            raise ValueError(f"refcount underflow on page {page}")
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+
+# ---------------------------------------------------------------------------
 # host-side prefix cache (radix trie over resident slot pages)
 # ---------------------------------------------------------------------------
 
@@ -173,11 +336,35 @@ class PrefixTrie:
 
     :meth:`longest_match` answers admission's question: how many leading
     tokens of a new prompt are already materialized in some slot's pages.
+
+    The index is optionally **capacity-bounded**: with ``capacity`` set,
+    inserting beyond it evicts the least-recently-used entries (recency is
+    touched by inserts, extends, and successful matches) and
+    :attr:`evictions` counts them — so an engine can keep a small, hot
+    reuse set instead of pinning every retired slot's pages forever.
     """
 
-    def __init__(self):
+    def __init__(self, capacity: Optional[int] = None):
+        """Create an empty trie; ``capacity`` bounds the number of indexed
+        slots (``None`` = unbounded), evicting least-recently-used entries
+        on insert overflow."""
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
         self._root = _TrieNode()
         self._slot_tokens: Dict[int, List[int]] = {}
+        self.capacity = capacity
+        self.evictions = 0
+        self._clock = 0
+        self._last_used: Dict[int, int] = {}
+
+    def _touch(self, slot: int) -> None:
+        self._clock += 1
+        self._last_used[slot] = self._clock
+
+    def lru_slots(self) -> List[int]:
+        """Indexed slots ordered least-recently-used first (the order the
+        capacity bound — or a memory-pressure reclaim — evicts in)."""
+        return sorted(self._slot_tokens, key=lambda s: self._last_used[s])
 
     def __len__(self) -> int:
         """Number of slots with a resident (matchable) entry."""
@@ -194,15 +381,27 @@ class PrefixTrie:
         toks = self._slot_tokens.get(slot)
         return None if toks is None else len(toks)
 
-    def insert(self, slot: int, tokens: Sequence[int]) -> None:
+    def insert(self, slot: int, tokens: Sequence[int]) -> List[int]:
         """Index ``tokens`` as the resident content of ``slot``'s pages
-        (replaces any previous entry for that slot)."""
+        (replaces any previous entry for that slot).
+
+        Returns the slots evicted to honor ``capacity`` (LRU first; never
+        the slot just inserted) — the caller releases their pages."""
         self.remove(slot)
         node = self._root
         for t in tokens:
             node = node.children.setdefault(int(t), _TrieNode())
             node.slots.add(slot)
         self._slot_tokens[slot] = [int(t) for t in tokens]
+        self._touch(slot)
+        evicted: List[int] = []
+        if self.capacity is not None:
+            while len(self._slot_tokens) > self.capacity:
+                victim = next(s for s in self.lru_slots() if s != slot)
+                self.remove(victim)
+                self.evictions += 1
+                evicted.append(victim)
+        return evicted
 
     def extend(self, slot: int, token: int) -> None:
         """Append one ``token`` to ``slot``'s entry (decode wrote one more
@@ -216,6 +415,7 @@ class PrefixTrie:
         node = node.children.setdefault(int(token), _TrieNode())
         node.slots.add(slot)
         toks.append(int(token))
+        self._touch(slot)
 
     def remove(self, slot: int) -> bool:
         """Drop ``slot``'s entry (its pages are being overwritten), pruning
@@ -224,6 +424,7 @@ class PrefixTrie:
         toks = self._slot_tokens.pop(slot, None)
         if toks is None:
             return False
+        self._last_used.pop(slot, None)
         node, path = self._root, []
         for t in toks:
             path.append((node, t))
@@ -235,12 +436,16 @@ class PrefixTrie:
                 del parent.children[t]
         return True
 
-    def longest_match(self, tokens: Sequence[int]) -> Tuple[int, int]:
+    def longest_match(self, tokens: Sequence[int],
+                      touch: bool = True) -> Tuple[int, int]:
         """Longest resident prefix of ``tokens``.
 
         Returns ``(length, slot)``: the deepest trie walk along ``tokens``
         and a slot whose pages hold that whole prefix (the smallest slot id
-        on ties, for determinism). ``(0, -1)`` when nothing matches."""
+        on ties, for determinism). ``(0, -1)`` when nothing matches.
+        A successful match refreshes the matched slot's LRU recency unless
+        ``touch`` is False (cost-model *probes* must not promote entries
+        they are only estimating against)."""
         node, depth, slot = self._root, 0, -1
         for t in tokens:
             nxt = node.children.get(int(t))
@@ -248,4 +453,6 @@ class PrefixTrie:
                 break
             node, depth = nxt, depth + 1
             slot = min(nxt.slots)
+        if touch and slot >= 0:
+            self._touch(slot)
         return depth, slot

@@ -27,6 +27,16 @@ The production serve-loop shape the seed repo was missing:
 * **Paged slot state** — per-request KV/SSM state lives in slot pages of one
   shared batched tree (:mod:`repro.serve.cache`); admission resets exactly
   one slot, never the whole batch.
+* **Paged allocation** (``paged_kv``, auto-on for positional state trees) —
+  positional leaves live in a physical page pool with per-slot page-index
+  vectors; a prefix-cache hit shares full pages *by reference* (refcount
+  bump, zero bytes copied) and copy-on-writes at most the partial boundary
+  page, so hit admission cost is O(1 page) instead of O(prefix).  Pages
+  are allocated lazily as writes reach them; pool exhaustion defers
+  admissions (never drops them) and reclaims the least-recently-used
+  retired entries first.  Idle decode lanes aim their writes at the
+  reserved scratch page, so retired-but-reusable pages can never be
+  corrupted by the shared dispatch.
 * **Shared reduction engine** — with ``page_size`` set, decode attention
   runs the paged split-K path: per-page partial accumulators combined by
   the same radix-4 :class:`~repro.dist.plan.ReductionPlan` tree that shapes
@@ -96,20 +106,40 @@ class ServeEngine:
       min_prefix: smallest resident-prefix match worth reusing; shorter
         matches run the full cold prefill (a 1-token copy saves nothing
         and incidental matches would perturb greedy equivalence tests).
+      paged_kv: allocate positional state in a physical page pool with
+        per-slot page tables (zero-copy prefix sharing + boundary-page
+        copy-on-write). ``None`` = auto: on whenever ``page_size > 0`` and
+        the state tree is pageable (:func:`repro.serve.cache.pageable`);
+        ``True`` raises a clear error when those preconditions fail
+        (e.g. ``auto_page_size`` resolved to 0 for this ``max_seq``);
+        ``False`` forces the contiguous copy_slot engine.
+      pool_pages: physical (non-scratch) pages in the pool. ``None`` =
+        ``max_slots * max_seq // page_size`` — enough for every slot to
+        hold a full private row, so sharing can only create headroom.
+        Smaller values overcommit: exhausted-pool admissions are deferred
+        (and LRU retired entries reclaimed), never dropped.
+      trie_capacity: LRU bound on prefix-trie entries (``None`` =
+        unbounded); evicted entries free their pages once retired.
     """
 
     def __init__(self, cfg, params, *, max_slots: int = 4,
                  max_seq: int = 128, prefill_chunk: int = 32,
                  page_size: Optional[int] = None,
-                 prefix_cache: bool = True, min_prefix: int = 8):
+                 prefix_cache: bool = True, min_prefix: int = 8,
+                 paged_kv: Optional[bool] = None,
+                 pool_pages: Optional[int] = None,
+                 trie_capacity: Optional[int] = None):
         api = get_api(cfg)
         if api.decode_step is None or api.prefill_chunk is None:
             raise ValueError(f"{cfg.arch_id} has no decode path")
         if page_size is None:
             page_size = auto_page_size(max_seq)
         if page_size and max_seq % page_size:
-            raise ValueError(f"page_size={page_size} must divide "
-                             f"max_seq={max_seq}")
+            raise ValueError(
+                f"page_size={page_size} must divide max_seq={max_seq} "
+                f"(the cache is allocated in whole pages; pick a page size "
+                f"that divides the capacity, or pass page_size=None to let "
+                f"auto_page_size choose one)")
         self.cfg = dataclasses.replace(cfg, decode_page_size=page_size)
         self.api = api
         self.params = params
@@ -122,15 +152,58 @@ class ServeEngine:
         self.scheduler = Scheduler(max_slots, max_seq,
                                    prefill_chunk=prefill_chunk)
         self.specs = api.decode_state_specs(self.cfg, max_slots, max_seq)
-        self.state = cache.state_zeros(self.specs)
-        self.prefix = (cache.PrefixTrie()
+        if paged_kv is None:
+            paged_kv = cache.pageable(self.specs, page_size)
+        elif paged_kv:
+            if not page_size:
+                raise ValueError(
+                    f"paged_kv=True needs page_size > 0, but it resolved "
+                    f"to 0 (auto_page_size found no power-of-two page in "
+                    f"[16, 128] dividing max_seq={max_seq} into >= 2 "
+                    f"pages); pass an explicit page_size")
+            if not cache.pageable(self.specs, page_size):
+                raise ValueError(
+                    f"paged_kv=True: {cfg.arch_id}'s decode state is not "
+                    f"pageable at page_size={page_size} (every leaf needs "
+                    f"an adjacent (batch, kv_seq) axis pair — SSM/hybrid "
+                    f"families are not)")
+        self.paged = bool(paged_kv)
+        if self.paged:
+            self.max_pages = max_seq // page_size
+            if pool_pages is None:
+                pool_pages = max_slots * self.max_pages
+            self.pool = cache.PagePool(pool_pages + 1)   # +1: scratch
+            self.pspecs = cache.paged_state_specs(
+                self.specs, page_size, pool_pages + 1)
+            self.state = cache.state_zeros(self.pspecs)
+            # per-slot page tables; 0 = the scratch page (unallocated)
+            self.table = np.zeros((max_slots, self.max_pages), np.int32)
+            self.page_bytes = cache.state_bytes(self.pspecs) // (
+                pool_pages + 1)
+        else:
+            self.state = cache.state_zeros(self.specs)
+        #: bytes one contiguous copy_slot moves (the PR 3 hit path cost)
+        self.slot_bytes = cache.state_bytes(self.specs) // max_slots
+        self.prefix = (cache.PrefixTrie(capacity=trie_capacity)
                        if prefix_cache and cache.supports_prefix(self.specs)
                        else None)
+        if self.prefix is not None:
+            # the scheduler's cost model prices resident prefixes at ~0,
+            # so eviction/preemption decisions consult the shared pages
+            # (probe only: must not refresh trie recency)
+            self.scheduler.reuse_probe = self._probe_reuse
         self._exe: Dict[Any, Any] = {}
         self._warm: set = set()
         self._chunk_ewma: Optional[float] = None
         self._step_ewma: Optional[float] = None
         self.reset_stats()
+
+    def _probe_reuse(self, ctx) -> int:
+        """Cost-model probe: resident-prefix length of ``ctx`` if it were
+        admitted now (0 below the ``min_prefix`` reuse threshold)."""
+        n = self.prefix.longest_match(ctx, touch=False)[0]
+        n = min(n, max(0, len(ctx) - 1))
+        return n if n >= self.min_prefix else 0
 
     # ------------------------------------------------------------ stats
     def reset_stats(self) -> None:
@@ -143,13 +216,18 @@ class ServeEngine:
             "admissions": 0, "evictions": 0, "preemptions": 0,
             "prefix_hits": 0, "prefix_misses": 0,
             "prefix_reused_tokens": 0, "prefix_evictions": 0,
+            # paged-allocation counters (all 0 on contiguous engines
+            # except bytes_copied, which prices the copy_slot hit path)
+            "prefix_bytes_copied": 0, "pages_shared": 0, "pages_cow": 0,
+            "oom_deferred": 0, "hit_admit_s": 0.0, "cold_admit_s": 0.0,
         }
 
     def stats_summary(self) -> Dict[str, float]:
         """Derived view of the counters: tok/s rates, mean occupancy,
         prefix-cache hit rate, *effective* prefill tok/s (reused tokens
-        count as served — the uplift a cold engine cannot reach), and the
-        scheduler's SLO met/missed tallies."""
+        count as served — the uplift a cold engine cannot reach), mean
+        hit/cold admission latency, paged-pool usage, trie evictions, and
+        the scheduler's SLO met/missed tallies."""
         s = dict(self.stats)
         s["prefill_tok_s"] = s["prefill_tokens"] / max(s["prefill_s"], 1e-9)
         s["decode_tok_s"] = s["decode_tokens"] / max(s["decode_s"], 1e-9)
@@ -160,6 +238,14 @@ class ServeEngine:
         s["effective_prefill_tok_s"] = (
             (s["prefill_tokens"] + s["prefix_reused_tokens"])
             / max(s["prefill_s"], 1e-9))
+        s["hit_admit_s_mean"] = (s["hit_admit_s"] / s["prefix_hits"]
+                                 if s["prefix_hits"] else 0.0)
+        s["cold_admit_s_mean"] = (s["cold_admit_s"] / s["prefix_misses"]
+                                  if s["prefix_misses"] else 0.0)
+        s["trie_evictions"] = (self.prefix.evictions
+                               if self.prefix is not None else 0)
+        s["pages_in_use"] = self.pool.used_count if self.paged else 0
+        s["pool_pages"] = self.pool.num_pages - 1 if self.paged else 0
         s["slo_met"] = self.scheduler.slo_met_count
         s["slo_missed"] = self.scheduler.slo_missed_count
         return s
@@ -199,43 +285,84 @@ class ServeEngine:
             "copy", copy, shape_structs(self.specs),
             jax.ShapeDtypeStruct((), i32), jax.ShapeDtypeStruct((), i32))
 
+    def _page_copy_exe(self):
+        """Boundary-page copy-on-write: one physical page, every leaf."""
+        def copy(state, src, dst):
+            return cache.copy_page(state, self.pspecs, src, dst)
+        i32 = jnp.int32
+        return self._get(
+            "page_copy", copy, shape_structs(self.pspecs),
+            jax.ShapeDtypeStruct((), i32), jax.ShapeDtypeStruct((), i32))
+
+    def _state_structs(self):
+        return shape_structs(self.pspecs if self.paged else self.specs)
+
     def _prefill_exe(self, cb: int):
-        def prefill(params, state, tokens, slot, start, nvalid,
-                    temp, top_k, top_p, seed, sidx):
-            slot_state = cache.slot_slice(state, self.specs, slot)
-            logits, new_slot = self.api.prefill_chunk(
-                params, slot_state,
-                {"tokens": tokens, "index": start, "nvalid": nvalid},
-                self.cfg)
-            state = cache.slot_update(state, self.specs, slot, new_slot)
-            nxt = sample_tokens(logits, temp[None], top_k[None],
-                                top_p[None], seed[None], sidx[None])
-            return nxt, logits, state
+        if self.paged:
+            def prefill(params, state, tokens, pages, start, nvalid,
+                        temp, top_k, top_p, seed, sidx):
+                logits, state = self.api.prefill_chunk(
+                    params, state,
+                    {"tokens": tokens, "index": start, "nvalid": nvalid,
+                     "pages": pages[None]},
+                    self.cfg)
+                nxt = sample_tokens(logits, temp[None], top_k[None],
+                                    top_p[None], seed[None], sidx[None])
+                return nxt, logits, state
+            extra = jax.ShapeDtypeStruct((self.max_pages,), jnp.int32)
+        else:
+            def prefill(params, state, tokens, slot, start, nvalid,
+                        temp, top_k, top_p, seed, sidx):
+                slot_state = cache.slot_slice(state, self.specs, slot)
+                logits, new_slot = self.api.prefill_chunk(
+                    params, slot_state,
+                    {"tokens": tokens, "index": start, "nvalid": nvalid},
+                    self.cfg)
+                state = cache.slot_update(state, self.specs, slot, new_slot)
+                nxt = sample_tokens(logits, temp[None], top_k[None],
+                                    top_p[None], seed[None], sidx[None])
+                return nxt, logits, state
+            extra = jax.ShapeDtypeStruct((), jnp.int32)
         i32, f32 = jnp.int32, jnp.float32
         sc = jax.ShapeDtypeStruct((), i32)
         sf = jax.ShapeDtypeStruct((), f32)
         return self._get(
             ("prefill", cb), prefill, self._params_structs(),
-            shape_structs(self.specs),
+            self._state_structs(),
             jax.ShapeDtypeStruct((1, cb), i32),
-            sc, sc, sc, sf, sc, sf, sc, sc)
+            extra, sc, sc, sf, sc, sf, sc, sc)
 
     def _decode_exe(self):
-        def decode(params, state, tokens, positions,
-                   temps, top_ks, top_ps, seeds, idxs):
-            logits, state = self.api.decode_step(
-                params, state, {"tokens": tokens, "index": positions},
-                self.cfg)
-            nxt = sample_tokens(logits, temps, top_ks, top_ps, seeds, idxs)
-            return nxt, logits, state
+        if self.paged:
+            def decode(params, state, tokens, positions, pages,
+                       temps, top_ks, top_ps, seeds, idxs):
+                logits, state = self.api.decode_step(
+                    params, state,
+                    {"tokens": tokens, "index": positions, "pages": pages},
+                    self.cfg)
+                nxt = sample_tokens(logits, temps, top_ks, top_ps, seeds,
+                                    idxs)
+                return nxt, logits, state
+            extra = (jax.ShapeDtypeStruct(
+                (self.max_slots, self.max_pages), jnp.int32),)
+        else:
+            def decode(params, state, tokens, positions,
+                       temps, top_ks, top_ps, seeds, idxs):
+                logits, state = self.api.decode_step(
+                    params, state, {"tokens": tokens, "index": positions},
+                    self.cfg)
+                nxt = sample_tokens(logits, temps, top_ks, top_ps, seeds,
+                                    idxs)
+                return nxt, logits, state
+            extra = ()
         i32, f32 = jnp.int32, jnp.float32
         b = self.max_slots
         lane_i = jax.ShapeDtypeStruct((b,), i32)
         lane_f = jax.ShapeDtypeStruct((b,), f32)
         return self._get(
             "decode", decode, self._params_structs(),
-            shape_structs(self.specs),
-            jax.ShapeDtypeStruct((b, 1), i32), lane_i,
+            self._state_structs(),
+            jax.ShapeDtypeStruct((b, 1), i32), lane_i, *extra,
             lane_f, lane_i, lane_f, lane_i, lane_i)
 
     def _greedy_lanes(self, b: int):
@@ -243,23 +370,35 @@ class ServeEngine:
 
     def warmup(self) -> None:
         """Force every compilation AND first execution up front (optional;
-        the engine also warms lazily, still outside the timed regions)."""
+        the engine also warms lazily, still outside the timed regions).
+        Paged engines warm with all-scratch page tables, so the warmup
+        writes land only on the reserved scratch page."""
         i32, f32 = jnp.int32, jnp.float32
         z = jnp.asarray(0, i32)
         zf = jnp.asarray(0.0, f32)
         onef = jnp.asarray(1.0, f32)
-        self._ensure_warm("reset", self._reset_exe(), self.state, z)
-        if self.prefix is not None:
-            self._ensure_warm("copy", self._copy_exe(), self.state, z, z)
+        if self.paged:
+            if self.prefix is not None:
+                self._ensure_warm("page_copy", self._page_copy_exe(),
+                                  self.state, z, z)
+            prefill_extra = jnp.zeros((self.max_pages,), i32)
+            decode_extra = (jnp.zeros((self.max_slots, self.max_pages),
+                                      i32),)
+        else:
+            self._ensure_warm("reset", self._reset_exe(), self.state, z)
+            if self.prefix is not None:
+                self._ensure_warm("copy", self._copy_exe(), self.state, z, z)
+            prefill_extra = z
+            decode_extra = ()
         self._ensure_warm(
             "decode", self._decode_exe(), self.params, self.state,
             jnp.zeros((self.max_slots, 1), i32),
-            jnp.zeros((self.max_slots,), i32),
+            jnp.zeros((self.max_slots,), i32), *decode_extra,
             *self._greedy_lanes(self.max_slots))
         for cb in self.chunk_buckets:
             self._ensure_warm(
                 ("prefill", cb), self._prefill_exe(cb), self.params,
-                self.state, jnp.zeros((1, cb), i32), z, z,
+                self.state, jnp.zeros((1, cb), i32), prefill_extra, z,
                 jnp.asarray(cb, i32), zf, z, onef, z, z)
 
     # ----------------------------------------------------------- submit
@@ -285,9 +424,120 @@ class ServeEngine:
 
     def evict(self, slot: int) -> Request:
         """Preempt the live request in ``slot`` back to the pending queue
-        (its re-admission re-prefills, or prefix-reuses, its context)."""
+        (its re-admission re-prefills, or prefix-reuses, its context).
+        On a paged engine the slot's pages are released immediately when
+        nothing can reuse them (no prefix cache, or the slot's trie entry
+        was already LRU-evicted while it was live)."""
         self.stats["evictions"] += 1
-        return self.scheduler.evict(slot)
+        req = self.scheduler.evict(slot)
+        if self.paged and not self._row_reusable(slot):
+            self._release_row(slot)
+        return req
+
+    def _row_reusable(self, slot: int) -> bool:
+        """True while ``slot``'s pages are worth keeping after its request
+        leaves: a trie entry still indexes them for prefix reuse.  Without
+        one the row would be invisible to LRU reclaim (which scans trie
+        entries) and its pages would strand until the slot is reused."""
+        return self.prefix is not None and \
+            self.prefix.length(slot) is not None
+
+    # ----------------------------------------------- page-table management
+    def _release_row(self, slot: int) -> None:
+        """Drop slot's page-table row: deref every mapped page (a page
+        shared with another row survives — its refcount stays positive)
+        and drop the now-stale trie entry."""
+        if self.prefix is not None:
+            self.prefix.remove(slot)
+        row = self.table[slot]
+        for lp in range(self.max_pages):
+            if row[lp]:
+                self.pool.deref(int(row[lp]))
+        self.table[slot] = 0
+
+    def _release_trie_evicted(self, slots) -> None:
+        """Release the rows of LRU-evicted trie ``slots`` that are not
+        live (their pages were only being kept for reuse)."""
+        for s in slots:
+            if s not in self.scheduler.active:
+                self._release_row(s)
+
+    def _reclaim_pages(self, needed: int) -> None:
+        """Free pages under pool pressure by dropping retired trie entries,
+        least-recently-used first, until ``needed`` pages are free (or
+        nothing reclaimable remains). Live slots are never touched."""
+        if self.prefix is None:
+            return
+        for s in list(self.prefix.lru_slots()):
+            if self.pool.free_count >= needed:
+                break
+            if s in self.scheduler.active:
+                continue
+            self._release_row(s)
+            self.prefix.evictions += 1
+
+    def _ensure_pages(self, slot: int, start: int, end: int) -> bool:
+        """Lazily allocate physical pages covering positions ``[start,
+        end)`` of ``slot``'s row (reclaiming LRU retired entries under
+        pressure). Returns False when the pool is exhausted."""
+        first = start // self.page_size
+        last = min(-(-end // self.page_size), self.max_pages)
+        need = [lp for lp in range(first, last)
+                if self.table[slot, lp] == 0]
+        if len(need) > self.pool.free_count:
+            self._reclaim_pages(len(need))
+        for lp in need:
+            p = self.pool.alloc()
+            if p < 0:
+                return False
+            self.table[slot, lp] = p
+        return True
+
+    def _bind_pages(self, slot: int, src: int, reuse: int, end: int
+                    ) -> Tuple[bool, Optional[Tuple[int, int]]]:
+        """Build ``slot``'s page-table row for an admission reusing the
+        first ``reuse`` tokens of ``src``'s row, with writable pages
+        through position ``end``: full prefix pages are shared by
+        *reference* (refcount bump — zero bytes), the partial boundary
+        page gets a fresh destination for copy-on-write, and the prefill
+        span is allocated lazily.
+
+        Returns ``(ok, cow)`` — ``cow`` is the ``(src_phys, dst_phys)``
+        boundary copy the caller must dispatch (or None), and ``ok`` is
+        False when the pool is exhausted (the row is rolled back and the
+        admission should be deferred)."""
+        ps = self.page_size
+        cow = None
+        nfull = 0
+        if reuse and src != slot:
+            self._release_row(slot)
+            nfull = reuse // ps
+            for lp in range(nfull):
+                p = int(self.table[src, lp])
+                self.pool.ref(p)
+                self.table[slot, lp] = p
+            if reuse % ps:
+                # snapshot the source boundary page BEFORE any reclaim can
+                # release src's row; even if reclaim frees it, its bytes
+                # stay intact until the CoW copy (the first device write
+                # of this admission) has read them
+                src_b = int(self.table[src, nfull])
+                if self.pool.free_count < 1:
+                    self._reclaim_pages(1)
+                p = self.pool.alloc()
+                if p < 0:
+                    self._release_row(slot)
+                    return False, None
+                self.table[slot, nfull] = p
+                cow = (src_b, p)
+        elif not reuse:
+            self._release_row(slot)
+        # (reuse with src == slot: the row is already in place)
+        if not self._ensure_pages(slot, reuse, end):
+            self._release_row(slot)
+            return False, None
+        self.stats["pages_shared"] += nfull
+        return True, cow
 
     # ------------------------------------------------------------ admit
     def _feed_cost_model(self, chunk_s: Optional[float] = None,
@@ -305,29 +555,33 @@ class ServeEngine:
         self.scheduler.update_cost_model(self._chunk_ewma, self._step_ewma)
 
     def _admit(self, slot: int, req: Request) -> List[Request]:
-        """Admit ``req`` into ``slot``: prefix-cache lookup, page copy or
-        slot reset, then chunked prefill of the (remaining) context; samples
-        the request's first token from the prefill logits."""
+        """Admit ``req`` into ``slot``: prefix-cache lookup, then zero-copy
+        page sharing + boundary copy-on-write (paged) or page copy / slot
+        reset (contiguous), then chunked prefill of the (remaining)
+        context; samples the request's first token from the prefill
+        logits.  A paged admission that finds the pool exhausted — even
+        after reclaiming LRU retired entries — is *deferred*: re-queued at
+        the head of the pending queue, never dropped."""
         sp = req.sampling or GREEDY
         ctx = req.context
         slot32 = jnp.asarray(slot, jnp.int32)
 
         # ---- prefix-cache lookup: reuse the longest resident prefix
-        reuse, src = 0, -1
+        reuse, src, removed = 0, -1, False
         if self.prefix is not None:
             match_len, match_slot = self.prefix.longest_match(ctx)
             match_len = min(match_len, len(ctx) - 1)   # keep >= 1 token to
             if match_len >= self.min_prefix:           # prefill for logits
                 reuse, src = match_len, match_slot
-                self.stats["prefix_hits"] += 1
-                self.stats["prefix_reused_tokens"] += reuse
-            else:
-                self.stats["prefix_misses"] += 1
-            if self.prefix.remove(slot) and src != slot:
-                self.stats["prefix_evictions"] += 1
+            # the slot's pages are about to be overwritten: its old entry
+            # must stop matching NOW (later admissions in this same step
+            # would otherwise copy half-overwritten pages)
+            removed = self.prefix.remove(slot)
 
+        # ---- plan the prefill pieces over the remaining context
         pieces = []
         pos = reuse
+        prefill_end = reuse
         while pos < len(ctx):
             piece = ctx[pos:pos + self.prefill_chunk]
             cb = next(b for b in self.chunk_buckets if b >= len(piece))
@@ -340,23 +594,59 @@ class ServeEngine:
             cb = min(cb, self.max_seq - pos)
             toks = np.zeros((1, cb), np.int32)
             toks[0, :len(piece)] = piece
-            exe = self._prefill_exe(cb)
-            self._ensure_warm(("prefill", cb), exe, self.params, self.state,
-                              jnp.asarray(toks), slot32,
-                              jnp.asarray(pos, jnp.int32),
-                              jnp.asarray(len(piece), jnp.int32),
+            pieces.append((pos, len(piece), cb, jnp.asarray(toks)))
+            prefill_end = max(prefill_end, pos + cb)
+            pos += len(piece)
+
+        # ---- bind physical pages (paged) — may defer on pool exhaustion
+        cow = None
+        if self.paged:
+            ok, cow = self._bind_pages(slot, src, reuse, prefill_end)
+            if not ok:
+                if removed and src != slot:    # the entry is gone even
+                    self.stats["prefix_evictions"] += 1   # on deferral
+                self.stats["oom_deferred"] += 1
+                self.scheduler.evict(slot)     # head of queue: deferred,
+                if not self.scheduler.active and not self.pool.used_count:
+                    raise RuntimeError(        # not dropped
+                        f"page pool ({self.pool.num_pages - 1} pages of "
+                        f"{self.page_size} tokens) cannot hold a single "
+                        f"request of {len(ctx)} context tokens")
+                return []
+
+        # ---- admission committed: account the lookup + bytes moved
+        if self.prefix is not None:
+            if reuse:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_reused_tokens"] += reuse
+            else:
+                self.stats["prefix_misses"] += 1
+            if removed and src != slot:
+                self.stats["prefix_evictions"] += 1
+
+        row = jnp.asarray(self.table[slot]) if self.paged else None
+        for start, nvalid, cb, toks in pieces:
+            self._ensure_warm(("prefill", cb), self._prefill_exe(cb),
+                              self.params, self.state, toks,
+                              row if self.paged else slot32,
+                              jnp.asarray(start, jnp.int32),
+                              jnp.asarray(nvalid, jnp.int32),
                               jnp.asarray(0.0, jnp.float32),
                               jnp.asarray(0, jnp.int32),
                               jnp.asarray(1.0, jnp.float32),
                               jnp.asarray(0, jnp.int32),
                               jnp.asarray(0, jnp.int32))
-            pieces.append((pos, len(piece), exe, jnp.asarray(toks)))
-            pos += len(piece)
-        reset = self._reset_exe()
-        self._ensure_warm("reset", reset, self.state, slot32)
-        if reuse and src != slot:
-            copy = self._copy_exe()
-            self._ensure_warm("copy", copy, self.state, slot32, slot32)
+        if self.paged:
+            if cow is not None:
+                page_copy = self._page_copy_exe()
+                self._ensure_warm("page_copy", page_copy, self.state,
+                                  slot32, slot32)
+        else:
+            reset = self._reset_exe()
+            self._ensure_warm("reset", reset, self.state, slot32)
+            if reuse and src != slot:
+                copy = self._copy_exe()
+                self._ensure_warm("copy", copy, self.state, slot32, slot32)
         # the first prefill token continues the request's sample stream
         temp = jnp.asarray(sp.temperature, jnp.float32)
         top_k = jnp.asarray(sp.top_k, jnp.int32)
@@ -365,16 +655,27 @@ class ServeEngine:
         sidx = jnp.asarray(len(req.generated), jnp.int32)
 
         t0 = time.perf_counter()
-        if reuse and src != slot:
+        if self.paged:
+            if cow is not None:
+                # copy-on-write: ONE boundary page, not the whole prefix
+                self.state = page_copy(self.state,
+                                       jnp.asarray(cow[0], jnp.int32),
+                                       jnp.asarray(cow[1], jnp.int32))
+                self.stats["prefix_bytes_copied"] += self.page_bytes
+                self.stats["pages_cow"] += 1
+        elif reuse and src != slot:
             self.state = copy(self.state, jnp.asarray(src, jnp.int32),
                               slot32)
+            self.stats["prefix_bytes_copied"] += self.slot_bytes
         elif not reuse:
             self.state = reset(self.state, slot32)
-        # (reuse with src == slot: the pages are already in place)
+        # (contiguous reuse with src == slot: the pages are already there;
+        #  paged cold / shared-full-pages: zero bytes move at admission)
         nxt = None
-        for start, nvalid, exe, toks in pieces:
-            nxt, _, self.state = exe(
-                self.params, self.state, toks, slot32,
+        for start, nvalid, cb, toks in pieces:
+            nxt, _, self.state = self._prefill_exe(cb)(
+                self.params, self.state, toks,
+                row if self.paged else slot32,
                 jnp.asarray(start, jnp.int32), jnp.asarray(nvalid, jnp.int32),
                 temp, top_k, top_p, seed, sidx)
         nxt.block_until_ready()
@@ -382,6 +683,8 @@ class ServeEngine:
         self.stats["prefill_s"] += dt
         self.stats["prefill_tokens"] += len(ctx) - reuse
         self.stats["admissions"] += 1
+        if self.prefix is not None:
+            self.stats["hit_admit_s" if reuse else "cold_admit_s"] += dt
         if not reuse:
             # prefix-hit admissions time a page copy plus (at most) a tiny
             # tail chunk — feeding that into the model would make a "chunk"
@@ -392,13 +695,30 @@ class ServeEngine:
         if self.prefix is not None:
             # the slot's pages now hold exactly ctx (the sampled first
             # token is not written until the next decode step feeds it)
-            self.prefix.insert(slot, ctx)
-        return [req] if req.slot is None else []
+            evicted = self.prefix.insert(slot, ctx)
+            if self.paged:
+                self._release_trie_evicted(evicted)
+        if req.slot is None:                   # retired on its first token
+            if self.paged and not self._row_reusable(slot):
+                self._release_row(slot)
+            return [req]
+        return []
 
     # ------------------------------------------------------------- step
     def _decode_once(self) -> List[Request]:
         """One batched decode step over every live slot (idle slots run the
         greedy lane and their outputs are discarded)."""
+        pages_extra = ()
+        if self.paged:
+            # lazily allocate each live slot's write page for this step; a
+            # slot that cannot get one even after reclaim is preempted
+            # back to the queue (deferred, not dropped)
+            for slot, req in list(self.scheduler.active.items()):
+                if not self._ensure_pages(slot, req.pos, req.pos + 1):
+                    self.evict(slot)
+                    self.stats["oom_deferred"] += 1
+            if not self.scheduler.active:
+                return []
         tokens = np.zeros((self.max_slots, 1), np.int32)
         positions = np.zeros((self.max_slots,), np.int32)
         sps = [GREEDY] * self.max_slots
@@ -408,7 +728,15 @@ class ServeEngine:
             positions[slot] = req.pos
             sps[slot] = req.sampling or GREEDY
             sidx[slot] = len(req.generated)
-        if self.prefix is not None:
+        if self.paged:
+            # idle lanes point their whole page-table row at the scratch
+            # page: their unconditional (discarded) writes can never touch
+            # a retired-but-reusable slot's real pages
+            disp = np.zeros((self.max_slots, self.max_pages), np.int32)
+            for slot in self.scheduler.active:
+                disp[slot] = self.table[slot]
+            pages_extra = (jnp.asarray(disp),)
+        elif self.prefix is not None:
             # idle lanes run in the shared dispatch too, and their
             # (discarded) token's KV is written unconditionally at
             # positions[slot]; aim each idle write at the first cache
@@ -430,12 +758,14 @@ class ServeEngine:
         pos_d = jnp.asarray(positions)
         exe = self._decode_exe()
         self._ensure_warm("decode", exe, self.params, self.state,
-                          toks_d, pos_d, temps, top_ks, top_ps, seeds, idxs)
+                          toks_d, pos_d, *pages_extra,
+                          temps, top_ks, top_ps, seeds, idxs)
         occ = self.scheduler.occupancy
         live = list(self.scheduler.active)
 
         t0 = time.perf_counter()
         nxt, _, self.state = exe(self.params, self.state, toks_d, pos_d,
+                                 *pages_extra,
                                  temps, top_ks, top_ps, seeds, idxs)
         nxt = np.asarray(nxt)
         dt = time.perf_counter() - t0
@@ -448,7 +778,17 @@ class ServeEngine:
             # this step wrote each live slot's fed token into its pages
             for slot in live:
                 self.prefix.extend(slot, int(tokens[slot, 0]))
-        return self.scheduler.on_decode({s: int(nxt[s]) for s in live})
+        done = self.scheduler.on_decode({s: int(nxt[s]) for s in live})
+        if self.paged:
+            # free a retiring slot's pages the moment nothing can reuse
+            # them: no prefix cache at all, or its trie entry was LRU-
+            # evicted while the slot was live (keeping the row would
+            # strand it — reclaim only scans trie entries)
+            for slot in live:
+                if slot not in self.scheduler.active and \
+                        not self._row_reusable(slot):
+                    self._release_row(slot)
+        return done
 
     def step(self) -> List[Request]:
         """One engine iteration: SLO preemption check, refill free slots

@@ -105,17 +105,27 @@ class Scheduler:
         cost model to estimate how many chunked-prefill dispatches a
         pending request needs.
       clock: monotonic time source (injectable for deterministic tests).
+      reuse_probe: optional callable mapping a request's context tokens to
+        the number of leading tokens already resident in some slot's
+        (refcounted) pages — the engine wires this to the prefix trie.
+        The cost model then prices only the *non-resident* span of a
+        (re-)prefill, so eviction and preemption decisions consult the
+        page refcounts: a victim whose prefix is shared re-admits almost
+        for free and is preferred over one that would re-prefill from
+        scratch.
     """
 
     def __init__(self, max_slots: int, max_seq: int, *,
                  prefill_chunk: int = 32,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 reuse_probe: Optional[Callable[[Sequence[int]], int]] = None):
         if max_slots < 1:
             raise ValueError("need at least one slot")
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.prefill_chunk = max(1, prefill_chunk)
         self.clock = clock
+        self.reuse_probe = reuse_probe
         self.pending: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}
         self.finished: List[Request] = []
@@ -139,8 +149,16 @@ class Scheduler:
     def est_service_s(self, req: Request) -> float:
         """Estimated remaining service time of ``req`` if admitted now:
         chunked prefill of its context plus its remaining decode budget,
-        under the current cost model (0 while the model is cold)."""
-        chunks = math.ceil(max(1, len(req.context)) / self.prefill_chunk)
+        under the current cost model (0 while the model is cold).
+
+        With a ``reuse_probe`` configured, the resident prefix of the
+        context is priced at zero — a prefix-cache hit shares those pages
+        by reference instead of prefilling them."""
+        ctx_len = max(1, len(req.context))
+        to_prefill = ctx_len
+        if self.reuse_probe is not None:
+            to_prefill = max(1, ctx_len - int(self.reuse_probe(req.context)))
+        chunks = math.ceil(to_prefill / self.prefill_chunk)
         return (chunks * self.est_chunk_s
                 + max(0, req.remaining) * self.est_step_s)
 

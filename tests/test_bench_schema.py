@@ -1,0 +1,82 @@
+"""Guard-the-guard tests for the bench-JSON schema checker
+(``scripts/check_bench_schema.py``): it must flag dropped metrics,
+missing files, and unparseable JSON, and accept a complete fixture."""
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _checker():
+    sys.path.insert(0, str(ROOT / "scripts"))
+    try:
+        import check_bench_schema
+        return check_bench_schema
+    finally:
+        sys.path.pop(0)
+
+
+def _write(d: Path, name: str, payload) -> None:
+    (d / f"BENCH_{name}.json").write_text(json.dumps(payload))
+
+
+def _full_carry(base=True):
+    out = {"table_1a": 1, "table_1b": 1, "table_1c": 1, "table_2": 1,
+           "cells_checked": 9}
+    if base:
+        out.update({"bench": "carry_tables", "elapsed_s": 0.1})
+    return out
+
+
+def test_checker_accepts_complete_fixture(tmp_path):
+    cbs = _checker()
+    # only files with declared schemas need their metric paths; others
+    # need just the base keys — but every declared bench must exist
+    _write(tmp_path, "carry_tables", _full_carry())
+    for name in ("serve", "collectives"):
+        payload = {"bench": name, "elapsed_s": 0.1}
+        for path in cbs.REQUIRED[name]:
+            node = payload
+            parts = path.split(".")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = 1
+        _write(tmp_path, name, payload)
+    _write(tmp_path, "extra", {"bench": "extra", "elapsed_s": 0.0})
+    assert cbs.main([str(tmp_path)]) == 0
+
+
+def test_checker_flags_dropped_metric(tmp_path):
+    cbs = _checker()
+    payload = _full_carry()
+    del payload["table_2"]                     # a silently-dropped metric
+    _write(tmp_path, "carry_tables", payload)
+    errors = cbs.check_file(tmp_path / "BENCH_carry_tables.json")
+    assert any("table_2" in e for e in errors)
+    assert cbs.main([str(tmp_path)]) == 1
+
+
+def test_checker_flags_missing_base_keys_and_bad_json(tmp_path):
+    cbs = _checker()
+    _write(tmp_path, "whatever", {"rows": []})         # no bench/elapsed_s
+    errors = cbs.check_file(tmp_path / "BENCH_whatever.json")
+    assert len(errors) == 2
+    (tmp_path / "BENCH_broken.json").write_text("{not json")
+    errors = cbs.check_file(tmp_path / "BENCH_broken.json")
+    assert errors and "invalid JSON" in errors[0]
+
+
+def test_checker_flags_missing_declared_bench(tmp_path):
+    cbs = _checker()
+    _write(tmp_path, "carry_tables", _full_carry())    # serve/collectives
+    assert cbs.main([str(tmp_path)]) == 1              # absent entirely
+
+
+def test_repo_required_schema_matches_bench_output():
+    """The committed results/BENCH_serve.json (refreshed by tier-1 right
+    before the checker runs) satisfies the declared serve schema."""
+    cbs = _checker()
+    path = ROOT / "results" / "BENCH_serve.json"
+    assert path.exists(), "tier-1 runs the serve bench before this check"
+    assert cbs.check_file(path) == []

@@ -1,0 +1,408 @@
+"""Paged KV allocation tests: page-pool invariants, zero-copy prefix
+sharing, copy-on-write isolation, OOM deferral, trie LRU eviction, and
+bit-exact equivalence of the paged engine against the contiguous one."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import paging
+from repro.models.common import ParamSpec, init_params
+from repro.models.registry import get_api
+from repro.serve import (PagePool, PrefixTrie, Request, Scheduler,
+                         ServeEngine, pageable, paged_state_specs,
+                         state_zeros)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _cfg(arch_id="llama3.2-3b", **over):
+    return get_config(arch_id).reduced(dtype=jnp.float32, **over)
+
+
+def _params(cfg, seed=0):
+    api = get_api(cfg)
+    return api, init_params(api.param_specs(cfg), jax.random.key(seed))
+
+
+# ---------------------------------------------------------------------------
+# page pool (pure host logic)
+# ---------------------------------------------------------------------------
+
+def test_page_pool_alloc_ref_deref():
+    pool = PagePool(4)                       # pages 1..3 allocatable
+    assert pool.free_count == 3 and pool.used_count == 0
+    a = pool.alloc()
+    b = pool.alloc()
+    assert a == 1 and b == 2 and pool.used_count == 2
+    pool.ref(a)                              # shared: refcount 2
+    assert not pool.deref(a)                 # still referenced elsewhere
+    assert pool.deref(a)                     # now actually freed
+    assert pool.free_count == 2
+    # freed pages are reused
+    c = pool.alloc()
+    assert c in (1, 3)
+
+
+def test_page_pool_refcount_never_negative():
+    pool = PagePool(3)
+    p = pool.alloc()
+    pool.deref(p)
+    with pytest.raises(ValueError):
+        pool.deref(p)                        # underflow
+    with pytest.raises(ValueError):
+        pool.deref(0)                        # scratch is pinned
+    with pytest.raises(ValueError):
+        pool.ref(0)                          # scratch cannot be shared
+    with pytest.raises(ValueError):
+        pool.ref(2)                          # never allocated
+
+
+def test_page_pool_exhaustion_returns_sentinel():
+    pool = PagePool(2)
+    assert pool.alloc() == 1
+    assert pool.alloc() == -1                # OOM: sentinel, not exception
+    assert pool.oom_events == 1
+    with pytest.raises(ValueError):
+        PagePool(1)                          # scratch-only pool is useless
+
+
+# ---------------------------------------------------------------------------
+# pooled layout + gather/scatter primitives
+# ---------------------------------------------------------------------------
+
+def test_paged_state_specs_layout_and_gating():
+    for arch in ("llama3.2-3b", "minicpm3-4b"):
+        cfg = _cfg(arch)
+        specs = get_api(cfg).decode_state_specs(cfg, 2, 32)
+        assert pageable(specs, 16)
+        pspecs = paged_state_specs(specs, 16, 5)
+        for s in jax.tree.leaves(pspecs,
+                                 is_leaf=lambda x: isinstance(x, ParamSpec)):
+            pp = s.axes.index("phys_page")
+            assert s.axes[pp + 1] == "page_seq"
+            assert s.shape[pp] == 5 and s.shape[pp + 1] == 16
+            assert "batch" not in s.axes and "kv_seq" not in s.axes
+    for arch in ("falcon-mamba-7b", "zamba2-1.2b"):
+        cfg = _cfg(arch)
+        specs = get_api(cfg).decode_state_specs(cfg, 2, 32)
+        assert not pageable(specs, 16)
+        with pytest.raises(ValueError):
+            paged_state_specs(specs, 16, 5)
+    # page size must divide the capacity
+    cfg = _cfg()
+    specs = get_api(cfg).decode_state_specs(cfg, 2, 24)
+    assert not pageable(specs, 16)
+
+
+def test_gather_scatter_roundtrip():
+    rng = np.random.default_rng(0)
+    pool = jnp.asarray(rng.normal(size=(5, 4, 3)), jnp.float32)
+    pages = jnp.asarray([[2, 4], [1, 3]], jnp.int32)     # 2 slots, 2 pages
+    view = paging.gather_pages(pool, pages)
+    assert view.shape == (2, 8, 3)
+    np.testing.assert_array_equal(np.asarray(view[0, :4]),
+                                  np.asarray(pool[2]))
+    np.testing.assert_array_equal(np.asarray(view[1, 4:]),
+                                  np.asarray(pool[3]))
+    # scatter one row per slot at positions crossing the page boundary
+    rows = jnp.asarray(rng.normal(size=(2, 1, 3)), jnp.float32)
+    pos = jnp.asarray([[5], [2]], jnp.int32)   # slot0 -> page 4 off 1
+    out = paging.scatter_token_rows(pool, pages, rows, pos)
+    np.testing.assert_array_equal(np.asarray(out[4, 1]),
+                                  np.asarray(rows[0, 0]))
+    np.testing.assert_array_equal(np.asarray(out[1, 2]),
+                                  np.asarray(rows[1, 0]))
+    # every other element untouched
+    mask = np.ones((5, 4), bool)
+    mask[4, 1] = mask[1, 2] = False
+    np.testing.assert_array_equal(np.asarray(out)[mask],
+                                  np.asarray(pool)[mask])
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence: paged allocation == contiguous, bit-exact tokens
+# ---------------------------------------------------------------------------
+
+PAGED_ARCHS = ["llama3.2-3b", "minicpm3-4b"]     # GQA + MLA families
+
+
+def _run_engine(cfg, params, prompts, gens, **kw):
+    eng = ServeEngine(cfg, params, **kw)
+    reqs = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    eng.run()
+    return eng, [r.generated for r in reqs]
+
+
+@pytest.mark.parametrize("arch_id", PAGED_ARCHS)
+def test_paged_engine_tokens_bitexact_vs_contiguous(arch_id):
+    """Staggered continuous-batching workload (with slot refill) decodes
+    the very same greedy tokens under paged allocation as under the
+    contiguous copy_slot engine."""
+    cfg = _cfg(arch_id)
+    api, params = _params(cfg)
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab, (n,)).tolist()
+               for n in (7, 12, 3, 9)]
+    gens = [5, 4, 8, 6]
+    kw = dict(max_slots=2, max_seq=32, prefill_chunk=8, min_prefix=8)
+    contig, tok_c = _run_engine(cfg, params, prompts, gens,
+                                paged_kv=False, **kw)
+    paged, tok_p = _run_engine(cfg, params, prompts, gens,
+                               paged_kv=True, **kw)
+    assert not contig.paged and paged.paged
+    assert tok_p == tok_c
+    assert paged.stats["admissions"] == len(prompts)
+
+
+@pytest.mark.parametrize("arch_id", PAGED_ARCHS)
+def test_paged_prefix_hit_shares_pages_zero_copy(arch_id):
+    """Shared-prefix workload: hits share whole pages by reference (only
+    the partial boundary page is copied) and still decode the same greedy
+    tokens as both the contiguous engine and a cold one."""
+    cfg = _cfg(arch_id)
+    api, params = _params(cfg)
+    rng = np.random.default_rng(22)
+    system = rng.integers(0, cfg.vocab, (16,)).tolist()   # exactly 1 page
+    prompts = [system + rng.integers(0, cfg.vocab, (4,)).tolist()
+               for _ in range(3)]
+    gens = [4] * len(prompts)
+    kw = dict(max_slots=2, max_seq=48, prefill_chunk=8, min_prefix=8)
+    cold, tok_cold = _run_engine(cfg, params, prompts, gens,
+                                 prefix_cache=False, **kw)
+    contig, tok_c = _run_engine(cfg, params, prompts, gens,
+                                paged_kv=False, **kw)
+    paged, tok_p = _run_engine(cfg, params, prompts, gens,
+                               paged_kv=True, **kw)
+    assert tok_p == tok_c == tok_cold
+    sc, sp = contig.stats_summary(), paged.stats_summary()
+    assert sp["prefix_hits"] == sc["prefix_hits"] >= 2
+    # a page-aligned prefix is shared by pure reference: ZERO bytes copied
+    # (a cross-slot hit shares >= 1 page; a same-slot hit keeps its row)
+    assert sp["pages_shared"] >= 1 and sp["pages_cow"] == 0
+    assert sp["prefix_bytes_copied"] == 0
+    # the contiguous engine copied whole slots for its cross-slot hits
+    assert sc["prefix_bytes_copied"] > 0
+
+
+def test_cow_isolates_boundary_page():
+    """A sharer's writes land in its own copy-on-write boundary page: the
+    source entry stays reusable and produces cold-identical tokens for a
+    third request."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(23)
+    system = rng.integers(0, cfg.vocab, (12,)).tolist()   # < one page
+    tail_a = rng.integers(0, cfg.vocab, (4,)).tolist()
+    tail_b = rng.integers(0, cfg.vocab, (4,)).tolist()
+
+    def cold(prompt, gen=6):
+        _, toks = _run_engine(cfg, params, [prompt], [gen],
+                              prefix_cache=False, max_slots=2, max_seq=48,
+                              prefill_chunk=8)
+        return toks[0]
+
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=48,
+                      prefill_chunk=8, min_prefix=8, paged_kv=True)
+    r1 = eng.submit(system, 20)               # slot 0, stays live
+    eng.step()
+    eng.step()
+    r2 = eng.submit(system + tail_a, 6)       # slot 1: cross-slot hit,
+    while not r2.done:                        # CoW of page 0 only
+        eng.step()
+    assert eng.stats["pages_cow"] == 1
+    r3 = eng.submit(system + tail_b, 6)       # slot 1 again: source slot 0
+    eng.run()                                 # is STILL decoding into its
+    assert eng.stats["pages_cow"] == 2        # own boundary page
+    assert eng.stats["pages_shared"] == 0     # no full page in a 12-token
+    assert r1.generated == cold(system, 20)   # prefix
+    assert r2.generated == cold(system + tail_a)
+    assert r3.generated == cold(system + tail_b)
+
+
+def test_evicting_source_slot_preserves_sharer():
+    """Overwriting the slot that first wrote a shared page must not free
+    it while a sharer still references it: the sharer's remaining decode
+    is bit-exact vs a cold prefill."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(24)
+    system = rng.integers(0, cfg.vocab, (20,)).tolist()   # crosses page 0
+    tail = rng.integers(0, cfg.vocab, (4,)).tolist()
+    other = rng.integers(0, cfg.vocab, (9,)).tolist()
+
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=48,
+                      prefill_chunk=8, min_prefix=8, paged_kv=True)
+    r1 = eng.submit(system, 10)               # slot 0, stays live a while
+    eng.step()
+    eng.step()
+    shared_page = int(eng.table[0, 0])
+    assert shared_page > 0
+    r2 = eng.submit(system + tail, 16)        # slot 1: shares r1's page 0
+    eng.step()                                # by reference
+    assert r2.slot == 1
+    assert int(eng.pool.refcount[shared_page]) == 2
+    assert int(eng.table[1, 0]) == shared_page
+    while not r1.done:                        # r1 retires; its row (and
+        eng.step()                            # trie entry) keep the ref
+    assert int(eng.pool.refcount[shared_page]) == 2
+    r3 = eng.submit(other, 2)                 # overwrites slot 0 while r2
+    eng.step()                                # is still decoding
+    assert r3.generated and not r2.done
+    # the page outlived its original slot: r2's reference keeps it alive
+    assert int(eng.pool.refcount[shared_page]) == 1
+    eng.run()
+    _, toks = _run_engine(cfg, params, [system + tail], [16],
+                          prefix_cache=False, max_slots=2, max_seq=48,
+                          prefill_chunk=8)
+    assert r2.generated == toks[0]
+
+
+def test_refcounts_conserved_after_mixed_workload():
+    """After draining a mixed share/evict workload, every allocated page's
+    refcount equals the number of table rows mapping it."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(25)
+    system = rng.integers(0, cfg.vocab, (20,)).tolist()
+    prompts = ([system + rng.integers(0, cfg.vocab, (4,)).tolist()
+                for _ in range(3)]
+               + [rng.integers(0, cfg.vocab, (10,)).tolist()])
+    eng, _ = _run_engine(cfg, params, prompts, [4] * 4, paged_kv=True,
+                         max_slots=2, max_seq=48, prefill_chunk=8,
+                         min_prefix=8)
+    counts = np.zeros(eng.pool.num_pages, np.int64)
+    for slot in range(eng.max_slots):
+        for lp in range(eng.max_pages):
+            counts[int(eng.table[slot, lp])] += 1
+    for p in range(1, eng.pool.num_pages):
+        assert int(eng.pool.refcount[p]) == counts[p], p
+    assert eng.pool.used_count == int((counts[1:] > 0).sum())
+
+
+def test_oom_admissions_deferred_not_dropped():
+    """A pool too small for two concurrent requests defers the second
+    admission until the first one's pages are reclaimed — both requests
+    finish with full budgets and cold-identical tokens."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(26)
+    prompts = [rng.integers(0, cfg.vocab, (18,)).tolist() for _ in range(2)]
+    for prefix_cache in (True, False):
+        eng = ServeEngine(cfg, params, max_slots=2, max_seq=32,
+                          prefill_chunk=8, paged_kv=True, pool_pages=2,
+                          prefix_cache=prefix_cache)
+        reqs = [eng.submit(p, 4) for p in prompts]
+        eng.run(max_steps=200)
+        assert all(len(r.generated) == 4 for r in reqs), prefix_cache
+        assert eng.stats["oom_deferred"] >= 1
+        for r in reqs:
+            _, toks = _run_engine(cfg, params, [list(r.prompt)], [4],
+                                  prefix_cache=False, max_slots=1,
+                                  max_seq=32, prefill_chunk=8)
+            assert r.generated == toks[0]
+
+
+def test_pool_too_small_for_one_request_raises():
+    cfg = _cfg()
+    api, params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_slots=1, max_seq=32,
+                      prefill_chunk=8, paged_kv=True, pool_pages=1)
+    eng.submit(list(range(18)), 2)            # needs 2 pages, pool has 1
+    with pytest.raises(RuntimeError):
+        eng.run(max_steps=10)
+
+
+# ---------------------------------------------------------------------------
+# trie LRU capacity + engine validation + scheduler probe
+# ---------------------------------------------------------------------------
+
+def test_prefix_trie_lru_capacity():
+    t = PrefixTrie(capacity=2)
+    t.insert(0, [1, 2, 3])
+    t.insert(1, [4, 5])
+    t.longest_match([1, 2])                   # touches slot 0
+    t.insert(2, [6, 7])                       # evicts LRU -> slot 1
+    assert t.evictions == 1
+    assert t.tokens(1) is None and t.tokens(0) == [1, 2, 3]
+    # probes must not promote entries
+    t.longest_match([1, 2], touch=False)
+    t.insert(3, [8])                          # LRU is now slot 0
+    assert t.tokens(0) is None and t.evictions == 2
+    with pytest.raises(ValueError):
+        PrefixTrie(capacity=0)
+
+
+def test_engine_trie_capacity_reports_evictions():
+    cfg = _cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(27)
+    prompts = [rng.integers(0, cfg.vocab, (10,)).tolist() for _ in range(3)]
+    eng, _ = _run_engine(cfg, params, prompts, [2] * 3, max_slots=3,
+                         max_seq=32, prefill_chunk=8, trie_capacity=1)
+    st = eng.stats_summary()
+    assert st["trie_evictions"] >= 2
+    assert len(eng.prefix) <= 1
+
+
+def test_live_slot_trie_eviction_does_not_strand_pages():
+    """Capacity-evicting a LIVE slot's trie entry must not leak its pages
+    forever: the entry is gone (so LRU reclaim will never see the slot),
+    so its row must be released the moment the request retires."""
+    cfg = _cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(28)
+    p1 = rng.integers(0, cfg.vocab, (18,)).tolist()       # 2 pages
+    p2 = rng.integers(0, cfg.vocab, (18,)).tolist()
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=32,
+                      prefill_chunk=8, paged_kv=True, trie_capacity=1)
+    r1 = eng.submit(p1, 12)                   # slot 0, stays live
+    eng.step()
+    eng.step()
+    r2 = eng.submit(p2, 2)                    # slot 1: its insert LRU-
+    eng.step()                                # evicts slot 0's LIVE entry
+    assert eng.prefix.length(0) is None
+    assert 0 in eng.scheduler.active          # ...which must not release
+    assert int(eng.table[0, 0]) > 0           # the live row
+    eng.run()
+    assert len(r1.generated) == 12
+    # r1 retired with no trie entry: its pages were released, not stranded
+    assert not eng.table[0].any()
+    # r2's row is still indexed (the one capacity slot) and so retained
+    assert eng.prefix.length(1) is not None and eng.table[1].any()
+
+
+def test_engine_paged_validation_errors():
+    cfg = _cfg()
+    api, params = _params(cfg)
+    with pytest.raises(ValueError, match="divide"):
+        ServeEngine(cfg, params, max_seq=32, page_size=12)
+    with pytest.raises(ValueError, match="page_size > 0"):
+        ServeEngine(cfg, params, max_seq=24, paged_kv=True)
+    ssm = _cfg("falcon-mamba-7b")
+    _, sparams = _params(ssm)
+    with pytest.raises(ValueError, match="not pageable"):
+        ServeEngine(ssm, sparams, max_seq=32, paged_kv=True)
+    # auto mode degrades gracefully instead of raising
+    eng = ServeEngine(ssm, sparams, max_seq=32)
+    assert not eng.paged
+
+
+def test_scheduler_reuse_probe_discounts_resident_prefix():
+    """The cost model prices a resident prefix at ~0, so the eviction
+    candidate prefers the victim whose pages are shared (cheap requeue)."""
+    clk = lambda: 0.0
+    sched = Scheduler(2, 64, prefill_chunk=8, clock=clk,
+                      reuse_probe=lambda ctx: 16 if ctx[0] == 1 else 0)
+    sched.update_cost_model(chunk_s=0.1, step_s=0.01)
+    shared = sched.submit(Request(prompt=[1] * 16, max_new=4, slo_ms=5000))
+    private = sched.submit(Request(prompt=[2] * 16, max_new=4, slo_ms=5000))
+    # shared re-prefills 1 minimum chunk; private re-prefills 2 chunks
+    assert sched.est_service_s(shared) < sched.est_service_s(private)
+    sched.admissions()
+    sched.on_prefill(shared, 9)
+    sched.on_prefill(private, 9)
+    assert sched.eviction_candidate() == shared.slot
