@@ -35,14 +35,22 @@ REQUIRED = {
         "per_token.prefill_tok_s", "per_token.decode_tok_s",
         "engine.prefill_tok_s", "engine.decode_tok_s",
         "engine.mean_occupancy",
+        "engine.decode_step_p50_s", "engine.decode_step_p99_s",
         "prefill_speedup", "decode_speedup",
         "prefix.shared_prefix", "prefix.cold.prefill_tok_s",
         "prefix.reuse.effective_prefill_tok_s",
         "prefix.reuse.prefix_hit_rate", "prefix.prefill_uplift",
         "paged.page_size", "paged.copy.prefix_bytes_copied",
         "paged.paged.prefix_bytes_copied", "paged.paged.pages_shared",
-        "paged.paged.hit_admit_s_mean", "paged.bytes_copied_reduction",
+        "paged.paged.hit_admit_s_mean", "paged.paged.hit_admit_s_p50",
+        "paged.bytes_copied_reduction",
         "paged.hit_admit_speedup",
+        "spec.k", "spec.accept_rate", "spec.tokens_per_step",
+        "spec.decode_speedup",
+        "spec.sequential.decode_tok_s", "spec.spec.decode_tok_s",
+        "spec.decode_step_p50_s", "spec.decode_step_p99_s",
+        "spec.sequential.decode_step_p50_s",
+        "spec.sequential.decode_step_p99_s",
     ],
     "collectives": [
         "rows", "stage_plan", "kernel_timings", "dryrun_collectives",

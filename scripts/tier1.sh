@@ -10,7 +10,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -q
+# UserWarnings raised from repro.* modules are FAILURES, not log lines:
+# the PR-2 int64->int32 truncation class of bug surfaced exactly this way
+# and sat in the logs until someone read them.  (Scoped to our modules —
+# jax/numpy internals may warn on their own schedule.)  NB: this must be
+# the ini-style filterwarnings option, NOT -W — pytest regex-escapes -W
+# module patterns into an exact match ("repro\Z"), which silently skips
+# every repro.* submodule.
+python -m pytest -q -o 'filterwarnings=error::UserWarning:repro(\..*)?'
 
 # Docs tier: every docs/*.md cross-reference (markdown links, repo paths,
 # repro.* dotted refs) must resolve, and the public serve API keeps full
@@ -23,10 +30,16 @@ python -m pytest -q tests/test_docs.py
 # end and is fast enough for CI; collectives and serve emit the
 # perf-trajectory JSONs (serve also dry-runs the chunked-prefill
 # continuous-batching engine — sampling, prefix cache, SLO admission,
-# paged KV allocation — on a fresh checkout).
+# paged KV allocation, speculative decode — on a fresh checkout).
 python -m benchmarks.run --only carry_tables
 python -m benchmarks.run --only collectives
 python -m benchmarks.run --only serve
+
+# Speculative-decode smoke: drive the engine end to end through the CLI
+# at a reduced config (drafting, K+1-wide verification, rollback), so the
+# spec path cannot silently rot between benchmark refreshes.
+python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
+    --slots 2 --prompt-len 12 --gen 12 --spec-k 3
 
 # Perf-trajectory schema: every results/BENCH_*.json must keep its
 # required metric keys (a refactor that silently drops one fails here,

@@ -9,10 +9,12 @@ ingested by shape-bucketed chunked prefill (one jitted dispatch per prompt
 block, shared prompt prefixes reused from resident slot pages), decode is
 continuously batched — short and long requests share every decode step at
 per-slot positions, finished slots are refilled mid-flight — and tokens are
-sampled in-graph per slot (``--temperature 0`` = greedy).  ``--per-token``
-instead runs :func:`generate`, the legacy one-dispatch-per-token loop kept
-as the measurement baseline.  See ``docs/serving.md`` for the full request
-lifecycle and knob reference.
+sampled in-graph per slot (``--temperature 0`` = greedy).  Decode steps
+are speculative by default (``--spec-k`` prompt-lookup drafts verified in
+one K+1-wide dispatch, bit-exact vs sequential decode; ``--no-spec``
+disables).  ``--per-token`` instead runs :func:`generate`, the legacy
+one-dispatch-per-token loop kept as the measurement baseline.  See
+``docs/serving.md`` for the full request lifecycle and knob reference.
 """
 from __future__ import annotations
 
@@ -88,7 +90,7 @@ def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
                 max_seq: int = 0, prefill_chunk: int = 32,
                 page_size=None, sampling=None, slo_ms=None,
                 prefix_cache: bool = True, paged_kv=None,
-                pool_pages=None):
+                pool_pages=None, spec_k: int = 0):
     """Run a list of requests through the engine; returns (outputs, stats).
 
     Args:
@@ -108,6 +110,8 @@ def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
         prefix sharing); None = engine auto, False = contiguous slots.
       pool_pages: physical page-pool size when paged (None = one full
         row per slot; smaller overcommits and defers on exhaustion).
+      spec_k: speculative-decode draft budget per slot per step (0 =
+        sequential decode; auto-off for SSM/hybrid families).
 
     Returns:
       (outputs, stats): per-request generated-token lists in submission
@@ -126,7 +130,7 @@ def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
     eng = ServeEngine(cfg, params, max_slots=slots, max_seq=max_seq,
                       prefill_chunk=prefill_chunk, page_size=page_size,
                       prefix_cache=prefix_cache, paged_kv=paged_kv,
-                      pool_pages=pool_pages)
+                      pool_pages=pool_pages, spec_k=spec_k)
     # warm up BEFORE submitting: the SLO clock starts at submission, and
     # AOT compile / first-execution setup is engine bring-up, not request
     # latency (same reason the throughput timers exclude it)
@@ -169,6 +173,13 @@ def main(argv=None) -> int:
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="physical page-pool size for paged allocation "
                          "(default: one full row per slot)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative-decode draft budget per slot per "
+                         "step (prompt-lookup drafting + one K+1-wide "
+                         "verify dispatch; auto-off for SSM/hybrid)")
+    ap.add_argument("--no-spec", action="store_true",
+                    help="disable speculative decode (sequential "
+                         "one-token decode steps)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -211,7 +222,8 @@ def main(argv=None) -> int:
                               sampling=sampling, slo_ms=args.slo_ms,
                               prefix_cache=not args.no_prefix_cache,
                               paged_kv=False if args.no_paged_kv else None,
-                              pool_pages=args.pool_pages)
+                              pool_pages=args.pool_pages,
+                              spec_k=0 if args.no_spec else args.spec_k)
     print(f"[engine] arch={cfg.arch_id} requests={args.requests} "
           f"slots={args.slots} gen={args.gen} "
           f"prompt_lens={lens} sampling={sampling}")
@@ -225,6 +237,13 @@ def main(argv=None) -> int:
           f"({stats['prefix_reused_tokens']:.0f} tokens reused, "
           f"{stats['pages_shared']:.0f} pages shared by reference, "
           f"{stats['prefix_bytes_copied']:.0f} bytes copied)")
+    if stats["spec_k"]:
+        print(f"speculative decode (k={stats['spec_k']:.0f}): "
+              f"{stats['tokens_per_step']:.2f} tokens/step, "
+              f"accept rate {stats['spec_accept_rate']:.0%}, "
+              f"draft hit rate {stats['spec_draft_hit_rate']:.0%}, "
+              f"decode step p50 {stats['decode_step_p50_s'] * 1e3:.2f}ms / "
+              f"p99 {stats['decode_step_p99_s'] * 1e3:.2f}ms")
     if args.slo_ms is not None:
         print(f"SLO {args.slo_ms:.0f}ms: {stats['slo_met']:.0f} met / "
               f"{stats['slo_missed']:.0f} missed  "

@@ -24,7 +24,7 @@ from repro.models.common import scan as mscan
 
 __all__ = ["gqa_param_specs", "gqa_train", "gqa_decode", "gqa_decode_paged",
            "gqa_decode_pages", "decode_positions", "batched_cache_write",
-           "causal_valid"]
+           "masked_cache_write", "causal_valid"]
 
 NEG_INF = -1e30
 
@@ -75,6 +75,30 @@ def batched_cache_write(cache: jnp.ndarray, new: jnp.ndarray,
     return jax.vmap(
         lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i,) + zeros)
     )(cache, new, cur_index)
+
+
+def masked_cache_write(cache: jnp.ndarray, new: jnp.ndarray,
+                       pos: jnp.ndarray, nvalid: jnp.ndarray) -> jnp.ndarray:
+    """Row-masked variant of :func:`batched_cache_write` for speculative
+    verification: write row ``j`` of slot ``b`` at position ``pos[b, j]``
+    only when ``j < nvalid[b]`` and the position is inside the cache.
+
+    Invalid rows (draft lanes beyond a slot's proposed length, idle decode
+    lanes with ``nvalid == 0``, or positions at/past capacity) are dropped
+    outright — unlike ``dynamic_update_slice``, whose start clamping would
+    silently overwrite *earlier* valid positions for near-capacity slots.
+    """
+    smax = cache.shape[1]
+    new = new.astype(cache.dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None], new.shape[:2])
+    c = new.shape[1]
+    valid = (jnp.arange(c, dtype=jnp.int32)[None] <
+             jnp.asarray(nvalid, jnp.int32)[:, None]) & (pos < smax)
+    tgt = jnp.where(valid, pos, smax)          # smax is out of range ...
+    b_idx = jnp.arange(cache.shape[0], dtype=jnp.int32)[:, None]
+    return cache.at[b_idx, tgt].set(new, mode="drop")   # ... -> dropped
 
 
 def gqa_param_specs(cfg: ModelConfig, prefix_layers: bool = True) -> dict:
@@ -352,17 +376,23 @@ def _decode_qkv_new(x, p, cfg, cur):
     return apply_rope(q, sin, cos), apply_rope(k_new, sin, cos), v_new, pos
 
 
-def _decode_qkv_cache(x, p, cfg, cache_k, cache_v, cur_index):
+def _decode_qkv_cache(x, p, cfg, cache_k, cache_v, cur_index, nvalid=None):
     """Shared decode front-end: project + rope the C new tokens, write them
     into the cache at per-slot offsets, return (q, caches, valid mask).
 
     ``valid`` is (B or 1, 1, C, Smax): key position s is attendable by
-    query c of sequence b iff s <= position(b, c)."""
+    query c of sequence b iff s <= position(b, c).  With ``nvalid`` (a
+    per-slot ``(B,)`` valid-row count — speculative verification), the
+    cache writes are row-masked instead (:func:`masked_cache_write`)."""
     smax = cache_k.shape[1]
     cur = jnp.asarray(cur_index, jnp.int32)
     q, k_new, v_new, pos = _decode_qkv_new(x, p, cfg, cur)
-    cache_k = batched_cache_write(cache_k, k_new, cur)
-    cache_v = batched_cache_write(cache_v, v_new, cur)
+    if nvalid is None:
+        cache_k = batched_cache_write(cache_k, k_new, cur)
+        cache_v = batched_cache_write(cache_v, v_new, cur)
+    else:
+        cache_k = masked_cache_write(cache_k, k_new, pos, nvalid)
+        cache_v = masked_cache_write(cache_v, v_new, pos, nvalid)
     cache_k = constrain(cache_k, ("batch", "kv_seq", None, None))
     cache_v = constrain(cache_v, ("batch", "kv_seq", None, None))
     return q, cache_k, cache_v, causal_valid(pos, smax)
@@ -370,13 +400,15 @@ def _decode_qkv_cache(x, p, cfg, cache_k, cache_v, cur_index):
 
 def gqa_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                cache_k: jnp.ndarray, cache_v: jnp.ndarray,
-               cur_index: jnp.ndarray
+               cur_index: jnp.ndarray, nvalid=None
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Cache-attend decode / chunked prefill. x: (B, C, D) — C == 1 is the
     classic one-token step, C > 1 ingests a whole prompt chunk in one call;
     ``cur_index`` is a scalar (lockstep) or (B,) vector (continuous
     batching, every slot at its own length). cache_{k,v}: (B, Smax, Hkv, hd)
-    sharded (batch, kv_seq). Returns (out, new_cache_k, new_cache_v).
+    sharded (batch, kv_seq). ``nvalid``: optional (B,) per-slot valid-row
+    count — rows past it are computed but never written (speculative
+    verification). Returns (out, new_cache_k, new_cache_v).
 
     The softmax over the kv_seq-sharded axis lowers to partial max/sum
     accumulators all-reduced across the model axis — split-K decode as a
@@ -384,7 +416,7 @@ def gqa_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     """
     b, c, d = x.shape
     q, cache_k, cache_v, valid = _decode_qkv_cache(
-        x, p, cfg, cache_k, cache_v, cur_index)
+        x, p, cfg, cache_k, cache_v, cur_index, nvalid)
 
     pad = tp_head_pad(cfg)
     hq = cfg.n_heads + pad
@@ -461,7 +493,7 @@ def _splitk_attend(q: jnp.ndarray, k_view: jnp.ndarray, v_view: jnp.ndarray,
 
 def gqa_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                      cache_k: jnp.ndarray, cache_v: jnp.ndarray,
-                     cur_index: jnp.ndarray, page: int
+                     cur_index: jnp.ndarray, page: int, nvalid=None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Paged split-K decode over a *dense* per-slot cache: the serve
     engine's hot path as the fourth consumer of the shared reduction
@@ -477,14 +509,14 @@ def gqa_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     if smax % page:
         raise ValueError(f"page={page} must divide max_seq={smax}")
     q, cache_k, cache_v, valid = _decode_qkv_cache(
-        x, p, cfg, cache_k, cache_v, cur_index)
+        x, p, cfg, cache_k, cache_v, cur_index, nvalid)
     out = _splitk_attend(q, cache_k, cache_v, valid, cfg, page)
     return out @ p["wo"].astype(x.dtype), cache_k, cache_v
 
 
 def gqa_decode_pages(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                      pool_k: jnp.ndarray, pool_v: jnp.ndarray,
-                     cur_index: jnp.ndarray, pages: jnp.ndarray
+                     cur_index: jnp.ndarray, pages: jnp.ndarray, nvalid=None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Paged-*allocation* split-K decode: :func:`gqa_decode_paged`
     generalized to take a page-index vector per slot.
@@ -499,6 +531,8 @@ def gqa_decode_pages(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     contiguous engine.  The ``C`` new KV rows are scattered back through
     the table; shared pages are never rewritten (the serve engine
     copy-on-writes the boundary page before any write can land there).
+    ``nvalid``: optional (B,) per-slot valid-row count — rows past it are
+    redirected to the scratch page (speculative verification's write mask).
     """
     from repro.models import paging
 
@@ -507,12 +541,22 @@ def gqa_decode_pages(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     smax = pages.shape[1] * page
     cur = jnp.asarray(cur_index, jnp.int32)
     q, k_new, v_new, pos = _decode_qkv_new(x, p, cfg, cur)
-    k_view = batched_cache_write(paging.gather_pages(pool_k, pages),
-                                 k_new, cur)
-    v_view = batched_cache_write(paging.gather_pages(pool_v, pages),
-                                 v_new, cur)
+    if nvalid is None:
+        k_view = batched_cache_write(paging.gather_pages(pool_k, pages),
+                                     k_new, cur)
+        v_view = batched_cache_write(paging.gather_pages(pool_v, pages),
+                                     v_new, cur)
+    else:
+        # row-masked view write: near capacity, a (B, K+1) block can hang
+        # past smax, and dynamic_update_slice's start clamping would shift
+        # the fed rows over *valid* view positions — drop them instead
+        # (their queries are draft padding whose outputs are discarded)
+        k_view = masked_cache_write(paging.gather_pages(pool_k, pages),
+                                    k_new, pos, nvalid)
+        v_view = masked_cache_write(paging.gather_pages(pool_v, pages),
+                                    v_new, pos, nvalid)
     out = _splitk_attend(q, k_view, v_view, causal_valid(pos, smax),
                          cfg, page)
-    pool_k = paging.scatter_token_rows(pool_k, pages, k_new, pos)
-    pool_v = paging.scatter_token_rows(pool_v, pages, v_new, pos)
+    pool_k = paging.scatter_token_rows(pool_k, pages, k_new, pos, nvalid)
+    pool_v = paging.scatter_token_rows(pool_v, pages, v_new, pos, nvalid)
     return out @ p["wo"].astype(x.dtype), pool_k, pool_v

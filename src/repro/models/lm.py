@@ -25,7 +25,7 @@ from repro.models.common import scan as mscan
 __all__ = [
     "param_specs", "block_specs", "stack_specs",
     "forward", "train_loss", "decode_state_specs", "decode_step",
-    "prefill_chunk",
+    "prefill_chunk", "verify_chunk",
 ]
 
 
@@ -223,13 +223,17 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
 
     batch: {"tokens": (B, C), "index": scalar current length OR a (B,)
     per-slot length vector (continuous batching), optional "pages": a
-    (B, n_pages) int32 page table}. When "pages" is present the state
-    leaves are *physical page pools* (``(layers, num_pages, page_size,
-    ...)``, see ``repro.serve.cache.paged_state_specs``) and every layer
-    attends over gathered pages instead of dense slot rows. Returns the
-    final hidden states (B, C, D) and the updated cache state."""
+    (B, n_pages) int32 page table, optional "nspec": a (B,) per-slot
+    valid-row count (speculative verification — cache writes for rows at
+    or past it are masked off / redirected to the scratch page)}. When
+    "pages" is present the state leaves are *physical page pools*
+    (``(layers, num_pages, page_size, ...)``, see
+    ``repro.serve.cache.paged_state_specs``) and every layer attends over
+    gathered pages instead of dense slot rows. Returns the final hidden
+    states (B, C, D) and the updated cache state."""
     cur = batch["index"]
     pages = batch.get("pages")
+    nspec = batch.get("nspec")
     x = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
                              cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
 
@@ -241,9 +245,10 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
             h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
             if pages is not None:
                 h, ckv, kr = mla.mla_decode_paged(h, bp["attn"], cfg, ckv,
-                                                  kr, cur, pages)
+                                                  kr, cur, pages, nspec)
             else:
-                h, ckv, kr = mla.mla_decode(h, bp["attn"], cfg, ckv, kr, cur)
+                h, ckv, kr = mla.mla_decode(h, bp["attn"], cfg, ckv, kr,
+                                            cur, nspec)
             x = x + h
             h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
             if cfg.n_experts:
@@ -258,7 +263,8 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
         caches = (state["k"], state["v"])
         # splitk's shard_map assumes one shared write offset; paged split-K
         # is the single-host analogue keyed off the shared reduction plan.
-        use_splitk = (pages is None and jnp.ndim(cur) == 0 and
+        use_splitk = (pages is None and nspec is None and
+                      jnp.ndim(cur) == 0 and
                       attention.splitk_ok(cfg, mesh, caches[0].shape[1],
                                           caches[0].shape[2]))
         page = cfg.decode_page_size
@@ -270,16 +276,16 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
             h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
             if pages is not None:
                 h, ck, cv = attention.gqa_decode_pages(
-                    h, bp["attn"], cfg, ck, cv, cur, pages)
+                    h, bp["attn"], cfg, ck, cv, cur, pages, nspec)
             elif use_splitk:
                 h, ck, cv = attention.gqa_decode_splitk(
                     h, bp["attn"], cfg, ck, cv, cur, mesh)
             elif use_paged:
                 h, ck, cv = attention.gqa_decode_paged(
-                    h, bp["attn"], cfg, ck, cv, cur, page)
+                    h, bp["attn"], cfg, ck, cv, cur, page, nspec)
             else:
                 h, ck, cv = attention.gqa_decode(h, bp["attn"], cfg, ck, cv,
-                                                 cur)
+                                                 cur, nspec)
             x = x + h
             h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
             if cfg.n_experts:
@@ -334,4 +340,34 @@ def prefill_chunk(params: dict, state: Dict[str, jnp.ndarray],
     x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
     x_last = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
     logits = (x_last @ params["lm_head"].astype(x_last.dtype))[:, 0]
+    return logits.astype(jnp.float32), new_state
+
+
+def verify_chunk(params: dict, state: Dict[str, jnp.ndarray],
+                 batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                 mesh: Optional[Mesh] = None
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Score a (B, K+1) speculative token block in ONE dispatch.
+
+    The serve tier's multi-token decode: each slot feeds its last sampled
+    token plus up to K host-drafted candidates, and this call returns the
+    next-token logits at **every** fed position — the wide parallel step
+    that replaces K+1 sequential ``decode_step`` dispatches (the paper's
+    sequential-to-combinatorial tilt applied to generation).
+
+    batch: {"tokens": (B, K+1) fed tokens, "index": (B,) per-slot cache
+    lengths, "nspec": (B,) per-slot count of *valid* fed rows (1 = no
+    drafts; 0 = idle lane — every cache write masked off), optional
+    "pages": (B, n_pages) page table for pooled state}.  KV rows for all
+    valid fed positions are written through the cache/page table; rows at
+    or past ``nspec`` (draft padding, idle lanes) are dropped or land on
+    the scratch page, and the serve engine rewinds per-slot lengths (and
+    releases any page advanced past the accepted point) after rejection.
+    Returns (logits (B, K+1, V) float32, new state): ``logits[:, j]`` is
+    the next-token distribution after fed token ``j``, same numerics
+    guarantee as :func:`decode_step`.
+    """
+    x, new_state = _decode_blocks(params, state, batch, cfg, mesh)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
     return logits.astype(jnp.float32), new_state

@@ -138,15 +138,17 @@ def _absorbed_attend(x_dtype, p, cfg, q_nope, q_rope, ckv_view, kr_view,
 
 def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
-               cur_index: jnp.ndarray
+               cur_index: jnp.ndarray, nvalid=None
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Absorbed decode / chunked prefill. x: (B, C, D) — C new tokens per
     sequence; ``cur_index`` scalar (lockstep) or (B,) (per-slot lengths).
     cache_ckv: (B, Smax, rkv); cache_krope: (B, Smax, dr); both sharded
-    (batch, kv_seq). Score/PV contractions run in latent space.
+    (batch, kv_seq). ``nvalid``: optional (B,) per-slot valid-row count —
+    rows past it are computed but never written (speculative
+    verification). Score/PV contractions run in latent space.
     """
     from repro.models.attention import (batched_cache_write, causal_valid,
-                                        decode_positions)
+                                        decode_positions, masked_cache_write)
 
     b, c, _ = x.shape
     smax = cache_ckv.shape[1]
@@ -154,8 +156,12 @@ def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     pos = decode_positions(cur, c)                   # (C,) or (B, C)
     q_nope, q_rope = _queries(x, p, cfg, pos)        # (B,C,H,dn),(B,C,H,dr)
     c_new, kr_new = _latent_kv(x, p, cfg, pos)       # (B,C,rkv),(B,C,dr)
-    cache_ckv = batched_cache_write(cache_ckv, c_new, cur)
-    cache_krope = batched_cache_write(cache_krope, kr_new, cur)
+    if nvalid is None:
+        cache_ckv = batched_cache_write(cache_ckv, c_new, cur)
+        cache_krope = batched_cache_write(cache_krope, kr_new, cur)
+    else:
+        cache_ckv = masked_cache_write(cache_ckv, c_new, pos, nvalid)
+        cache_krope = masked_cache_write(cache_krope, kr_new, pos, nvalid)
     cache_ckv = constrain(cache_ckv, ("batch", "kv_seq", None))
     cache_krope = constrain(cache_krope, ("batch", "kv_seq", None))
 
@@ -166,7 +172,7 @@ def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
 
 def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                      pool_ckv: jnp.ndarray, pool_krope: jnp.ndarray,
-                     cur_index: jnp.ndarray, pages: jnp.ndarray
+                     cur_index: jnp.ndarray, pages: jnp.ndarray, nvalid=None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Paged-allocation absorbed decode: :func:`mla_decode` generalized to
     take a page-index vector per slot.
@@ -178,10 +184,12 @@ def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     with exactly the same absorbed math as the dense path — bit-exact with
     a contiguous engine — then the ``C`` new latent rows are scattered back
     through the table (shared pages are never rewritten; the serve engine
-    copy-on-writes the boundary page)."""
+    copy-on-writes the boundary page).  ``nvalid``: optional (B,) per-slot
+    valid-row count — rows past it land on the scratch page (speculative
+    verification's write mask)."""
     from repro.models import paging
     from repro.models.attention import (batched_cache_write, causal_valid,
-                                        decode_positions)
+                                        decode_positions, masked_cache_write)
 
     b, c, _ = x.shape
     page = pool_ckv.shape[1]
@@ -190,12 +198,21 @@ def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     pos = decode_positions(cur, c)                   # (C,) or (B, C)
     q_nope, q_rope = _queries(x, p, cfg, pos)
     c_new, kr_new = _latent_kv(x, p, cfg, pos)
-    ckv_view = batched_cache_write(paging.gather_pages(pool_ckv, pages),
-                                   c_new, cur)
-    kr_view = batched_cache_write(paging.gather_pages(pool_krope, pages),
-                                  kr_new, cur)
+    if nvalid is None:
+        ckv_view = batched_cache_write(paging.gather_pages(pool_ckv, pages),
+                                       c_new, cur)
+        kr_view = batched_cache_write(
+            paging.gather_pages(pool_krope, pages), kr_new, cur)
+    else:
+        # see gqa_decode_pages: near capacity dynamic_update_slice would
+        # clamp-shift the fed rows over valid view positions — mask instead
+        ckv_view = masked_cache_write(paging.gather_pages(pool_ckv, pages),
+                                      c_new, pos, nvalid)
+        kr_view = masked_cache_write(
+            paging.gather_pages(pool_krope, pages), kr_new, pos, nvalid)
     out = _absorbed_attend(x.dtype, p, cfg, q_nope, q_rope, ckv_view,
                            kr_view, causal_valid(pos, smax))
-    pool_ckv = paging.scatter_token_rows(pool_ckv, pages, c_new, pos)
-    pool_krope = paging.scatter_token_rows(pool_krope, pages, kr_new, pos)
+    pool_ckv = paging.scatter_token_rows(pool_ckv, pages, c_new, pos, nvalid)
+    pool_krope = paging.scatter_token_rows(pool_krope, pages, kr_new, pos,
+                                           nvalid)
     return out @ p["wo"].astype(x.dtype), pool_ckv, pool_krope

@@ -24,6 +24,8 @@ KV writes can never corrupt a retired-but-reusable slot's pages.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 __all__ = ["gather_pages", "scatter_token_rows"]
@@ -46,7 +48,8 @@ def gather_pages(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
 
 
 def scatter_token_rows(pool: jnp.ndarray, pages: jnp.ndarray,
-                       rows: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+                       rows: jnp.ndarray, pos: jnp.ndarray,
+                       nvalid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Write ``C`` new rows per slot into the pool through the page table.
 
     Args:
@@ -58,18 +61,31 @@ def scatter_token_rows(pool: jnp.ndarray, pages: jnp.ndarray,
         ``batched_cache_write``'s scalar/vector contract); each maps to
         physical coordinates ``(pages[b, pos // page_size],
         pos % page_size)``.
+      nvalid: optional ``(B,)`` int32 per-slot count of valid rows.  Row
+        ``j`` of slot ``b`` is written only when ``j < nvalid[b]`` (and its
+        position lies inside the table); invalid rows are redirected to the
+        reserved scratch page 0, whose contents are never read.  This is
+        the write-masking speculative verification relies on: draft lanes
+        beyond a slot's proposed length must not touch real pages.
 
     Returns:
-      The pool with exactly the ``B * C`` addressed rows replaced.  The
+      The pool with exactly the addressed valid rows replaced.  The
       caller (the serve engine) guarantees no two *live* slots address the
       same physical page, so duplicate scatter targets only arise on the
       shared scratch page, whose contents are never read.
     """
     page = pool.shape[1]
+    n_pages = pages.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 1:
         pos = jnp.broadcast_to(pos[None], rows.shape[:2])
     lp = pos // page                                      # (B, C)
     off = pos % page
-    phys = jnp.take_along_axis(pages, lp, axis=1)         # (B, C)
+    in_range = lp < n_pages
+    phys = jnp.take_along_axis(pages, jnp.minimum(lp, n_pages - 1), axis=1)
+    if nvalid is not None:
+        c = rows.shape[1]
+        in_range &= jnp.arange(c, dtype=jnp.int32)[None] < \
+            jnp.asarray(nvalid, jnp.int32)[:, None]
+    phys = jnp.where(in_range, phys, 0)                   # 0 = scratch
     return pool.at[phys, off].set(rows.astype(pool.dtype))

@@ -21,6 +21,12 @@ class ModelAPI:
     #: Signature matches decode_step with batch keys {tokens, index, nvalid};
     #: returns (logits at the last valid position, new state).
     prefill_chunk: Optional[Callable[..., Any]] = None
+    #: speculative verification: score a (B, K+1) drafted token block in one
+    #: dispatch (batch keys {tokens, index, nspec, [pages]}); returns logits
+    #: at EVERY fed position, (B, K+1, V).  None for families whose decode
+    #: state cannot be rewound position-wise (SSM/hybrid), which keeps
+    #: speculative decode auto-off for them.
+    verify_chunk: Optional[Callable[..., Any]] = None
 
 
 def get_api(cfg: ModelConfig) -> ModelAPI:
@@ -38,5 +44,6 @@ def get_api(cfg: ModelConfig) -> ModelAPI:
     decode_specs = None if cfg.encoder_only else lm.decode_state_specs
     decode_step = None if cfg.encoder_only else lm.decode_step
     prefill = None if cfg.encoder_only else lm.prefill_chunk
+    verify = None if cfg.encoder_only else lm.verify_chunk
     return ModelAPI(lm.param_specs, lm.train_loss, lm.forward,
-                    decode_specs, decode_step, prefill)
+                    decode_specs, decode_step, prefill, verify)

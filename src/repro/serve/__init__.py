@@ -1,6 +1,7 @@
 """Serving subsystem: chunked prefill + continuous batching + in-graph
-sampling + prefix-cache reuse + SLO-aware admission over the shared decode
-state (see :mod:`repro.serve.engine` and ``docs/serving.md``)."""
+sampling + prefix-cache reuse + SLO-aware admission + speculative
+multi-token decode over the shared decode state (see
+:mod:`repro.serve.engine` and ``docs/serving.md``)."""
 from repro.serve.cache import (PagePool, PrefixTrie, copy_page, copy_slot,
                                pageable, paged_state_specs, reset_slot,
                                slot_slice, slot_update, state_bytes,
@@ -8,11 +9,14 @@ from repro.serve.cache import (PagePool, PrefixTrie, copy_page, copy_slot,
 from repro.serve.engine import ServeEngine, auto_page_size
 from repro.serve.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.spec import (PromptLookupDrafter, accept_tokens,
+                              propose_draft)
 
 __all__ = [
     "ServeEngine", "auto_page_size", "Request", "Scheduler",
     "SamplingParams", "GREEDY", "sample_tokens",
     "PrefixTrie", "supports_prefix", "copy_slot",
     "PagePool", "pageable", "paged_state_specs", "copy_page",
+    "PromptLookupDrafter", "propose_draft", "accept_tokens",
     "state_zeros", "slot_slice", "slot_update", "reset_slot", "state_bytes",
 ]

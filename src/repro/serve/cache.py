@@ -287,11 +287,44 @@ class PagePool:
         self.allocs += 1
         return p
 
+    def alloc_many(self, n: int) -> Optional[np.ndarray]:
+        """Take ``n`` free pages at once (each refcount 1), all-or-nothing.
+
+        Returns an ``(n,)`` int32 array of page indices, or ``None`` when
+        fewer than ``n`` pages are free (one OOM event is counted and
+        *nothing* is allocated — the caller defers the admission with no
+        partial state to roll back).  This is the vectorized admission
+        path: one refcount scatter instead of a per-page Python loop."""
+        if n > len(self._free):
+            self.oom_events += 1
+            return None
+        if n == 0:
+            return np.empty(0, np.int32)
+        pages = np.asarray(self._free[len(self._free) - n:][::-1], np.int32)
+        del self._free[len(self._free) - n:]
+        self.refcount[pages] = 1
+        self.allocs += n
+        return pages
+
     def ref(self, page: int) -> None:
         """Add one reference to an allocated ``page`` (prefix sharing)."""
         if page <= 0 or page >= self.num_pages or self.refcount[page] <= 0:
             raise ValueError(f"ref of unallocated/scratch page {page}")
         self.refcount[page] += 1
+
+    def ref_many(self, pages: np.ndarray) -> None:
+        """Add one reference to each of ``pages`` (a full shared-prefix
+        span at once — the vectorized form of :meth:`ref`; duplicates are
+        counted once per occurrence)."""
+        pages = np.asarray(pages, np.int64)
+        if pages.size == 0:
+            return
+        if (pages <= 0).any() or (pages >= self.num_pages).any() or \
+                (self.refcount[pages] <= 0).any():
+            bad = [int(p) for p in pages
+                   if p <= 0 or p >= self.num_pages or self.refcount[p] <= 0]
+            raise ValueError(f"ref of unallocated/scratch page(s) {bad}")
+        np.add.at(self.refcount, pages, 1)
 
     def deref(self, page: int) -> bool:
         """Drop one reference to ``page``; frees it at zero. Returns True
@@ -306,6 +339,29 @@ class PagePool:
             self._free.append(page)
             return True
         return False
+
+    def deref_many(self, pages: np.ndarray) -> int:
+        """Drop one reference from each of ``pages`` (vectorized
+        :meth:`deref` for releasing a whole page-table row); frees the
+        pages that reach zero and returns how many were freed.  Validates
+        *before* mutating, so an underflow raises with every count
+        untouched (duplicates in ``pages`` count as multiple derefs)."""
+        pages = np.asarray(pages, np.int64)
+        if pages.size == 0:
+            return 0
+        if (pages <= 0).any() or (pages >= self.num_pages).any():
+            raise ValueError(
+                f"deref of scratch/out-of-range page(s) "
+                f"{[int(p) for p in pages if p <= 0 or p >= self.num_pages]}")
+        drops = np.bincount(pages, minlength=self.num_pages)
+        if (self.refcount < drops).any():
+            bad = np.flatnonzero(self.refcount < drops)
+            raise ValueError(f"refcount underflow on page(s) "
+                             f"{[int(p) for p in bad]}")
+        self.refcount -= drops.astype(self.refcount.dtype)
+        freed = np.flatnonzero((drops > 0) & (self.refcount == 0))
+        self._free.extend(int(p) for p in freed)
+        return int(freed.size)
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,20 @@ The production serve-loop shape the seed repo was missing:
   retired entries first.  Idle decode lanes aim their writes at the
   reserved scratch page, so retired-but-reusable pages can never be
   corrupted by the shared dispatch.
+* **Speculative multi-token decode** (``spec_k > 0``) — the sequential
+  one-token-per-dispatch decode loop replaced by the paper's wide parallel
+  step: a model-free prompt-lookup drafter
+  (:class:`~repro.serve.spec.PromptLookupDrafter`) proposes up to K
+  candidate tokens per slot from its own history, ONE ``verify_chunk``
+  dispatch scores all K+1 positions, and longest-matching-prefix
+  acceptance (:func:`~repro.serve.spec.accept_tokens`) emits 1..K+1 tokens
+  per slot per step — bit-exact vs sequential decode for greedy *and*
+  stochastic lanes, because every emitted token is the sample the
+  sequential engine would have drawn at that index.  Rejected draft
+  positions are rolled back by rewinding per-slot lengths and releasing
+  any page advanced past the accepted point (refcount-conserving).
+  Auto-off for families whose state cannot be rewound position-wise
+  (SSM/hybrid), like paged allocation.
 * **Shared reduction engine** — with ``page_size`` set, decode attention
   runs the paged split-K path: per-page partial accumulators combined by
   the same radix-4 :class:`~repro.dist.plan.ReductionPlan` tree that shapes
@@ -51,7 +65,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,11 +78,18 @@ from repro.serve import cache
 from repro.serve.sampling import (GREEDY, SamplingParams, sample_tokens,
                                   sampling_lanes)
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.spec import PromptLookupDrafter, accept_tokens
 
 __all__ = ["ServeEngine", "auto_page_size"]
 
 #: EWMA weight for the scheduler cost model's newest timing sample.
 _COST_EWMA = 0.5
+
+#: Sliding-window length for the per-event latency samples behind the
+#: percentile summaries (a long-lived engine must not grow a float per
+#: decode step forever; 4096 recent steps bound both the memory and the
+#: cost of the np.percentile at stats_summary time).
+_LATENCY_WINDOW = 4096
 
 
 def auto_page_size(max_seq: int) -> int:
@@ -120,6 +142,13 @@ class ServeEngine:
         (and LRU retired entries reclaimed), never dropped.
       trie_capacity: LRU bound on prefix-trie entries (``None`` =
         unbounded); evicted entries free their pages once retired.
+      spec_k: speculative-decode draft budget per slot per step (``0`` =
+        classic sequential decode).  When > 0, each decode step drafts up
+        to ``spec_k`` tokens per slot by prompt lookup and verifies all of
+        them in one ``(B, spec_k + 1)``-wide dispatch.  Auto-off (resolves
+        back to 0) for families without a position-wise rewindable decode
+        state (SSM/hybrid) — mirror of the ``paged_kv`` auto gate.
+      spec_ngram: longest history n-gram the drafter anchors on.
     """
 
     def __init__(self, cfg, params, *, max_slots: int = 4,
@@ -128,7 +157,8 @@ class ServeEngine:
                  prefix_cache: bool = True, min_prefix: int = 8,
                  paged_kv: Optional[bool] = None,
                  pool_pages: Optional[int] = None,
-                 trie_capacity: Optional[int] = None):
+                 trie_capacity: Optional[int] = None,
+                 spec_k: int = 0, spec_ngram: int = 3):
         api = get_api(cfg)
         if api.decode_step is None or api.prefill_chunk is None:
             raise ValueError(f"{cfg.arch_id} has no decode path")
@@ -152,6 +182,19 @@ class ServeEngine:
         self.scheduler = Scheduler(max_slots, max_seq,
                                    prefill_chunk=prefill_chunk)
         self.specs = api.decode_state_specs(self.cfg, max_slots, max_seq)
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        # speculative decode needs (a) a verify_chunk entry point and (b) a
+        # position-wise rewindable state tree: rolling back a rejected
+        # draft is just "stop counting those positions" for attention
+        # families, but impossible for O(1) SSM/hybrid state — auto-off,
+        # exactly like the paged_kv gate.
+        if spec_k and (api.verify_chunk is None
+                       or not cache.supports_prefix(self.specs)):
+            spec_k = 0
+        self.spec_k = spec_k
+        self.drafter = (PromptLookupDrafter(ngram_max=spec_ngram)
+                        if spec_k else None)
         if paged_kv is None:
             paged_kv = cache.pageable(self.specs, page_size)
         elif paged_kv:
@@ -196,6 +239,7 @@ class ServeEngine:
         self._warm: set = set()
         self._chunk_ewma: Optional[float] = None
         self._step_ewma: Optional[float] = None
+        self._tps_ewma: Optional[float] = None
         self.reset_stats()
 
     def _probe_reuse(self, ctx) -> int:
@@ -212,7 +256,7 @@ class ServeEngine:
         self.stats: Dict[str, float] = {
             "prefill_s": 0.0, "decode_s": 0.0,
             "prefill_tokens": 0, "decode_tokens": 0,
-            "decode_steps": 0, "occupancy_sum": 0.0,
+            "decode_steps": 0, "decode_lane_steps": 0, "occupancy_sum": 0.0,
             "admissions": 0, "evictions": 0, "preemptions": 0,
             "prefix_hits": 0, "prefix_misses": 0,
             "prefix_reused_tokens": 0, "prefix_evictions": 0,
@@ -220,14 +264,26 @@ class ServeEngine:
             # except bytes_copied, which prices the copy_slot hit path)
             "prefix_bytes_copied": 0, "pages_shared": 0, "pages_cow": 0,
             "oom_deferred": 0, "hit_admit_s": 0.0, "cold_admit_s": 0.0,
+            # speculative-decode counters (all 0 with spec_k == 0)
+            "spec_drafted": 0, "spec_accepted": 0,
+            "spec_lanes_drafted": 0, "spec_lanes_hit": 0,
+            "spec_pages_rolled_back": 0,
         }
+        #: per-event latency samples behind the percentile summaries
+        #: (sliding windows — see _LATENCY_WINDOW)
+        self._step_times: Deque[float] = deque(maxlen=_LATENCY_WINDOW)
+        self._admit_times: Dict[str, Deque[float]] = {
+            "hit": deque(maxlen=_LATENCY_WINDOW),
+            "cold": deque(maxlen=_LATENCY_WINDOW)}
 
     def stats_summary(self) -> Dict[str, float]:
         """Derived view of the counters: tok/s rates, mean occupancy,
         prefix-cache hit rate, *effective* prefill tok/s (reused tokens
-        count as served — the uplift a cold engine cannot reach), mean
-        hit/cold admission latency, paged-pool usage, trie evictions, and
-        the scheduler's SLO met/missed tallies."""
+        count as served — the uplift a cold engine cannot reach), mean and
+        median hit/cold admission latency, decode-step latency percentiles,
+        speculative accept-rate / tokens-per-step / draft-hit rates,
+        paged-pool usage, trie evictions, and the scheduler's SLO
+        met/missed tallies."""
         s = dict(self.stats)
         s["prefill_tok_s"] = s["prefill_tokens"] / max(s["prefill_s"], 1e-9)
         s["decode_tok_s"] = s["decode_tokens"] / max(s["decode_s"], 1e-9)
@@ -242,6 +298,29 @@ class ServeEngine:
                                  if s["prefix_hits"] else 0.0)
         s["cold_admit_s_mean"] = (s["cold_admit_s"] / s["prefix_misses"]
                                   if s["prefix_misses"] else 0.0)
+        # medians resist the multi-ms scheduler hiccups that dominate a
+        # small hit population's mean on a busy host
+        s["hit_admit_s_p50"] = (float(np.median(self._admit_times["hit"]))
+                                if self._admit_times["hit"] else 0.0)
+        s["cold_admit_s_p50"] = (float(np.median(self._admit_times["cold"]))
+                                 if self._admit_times["cold"] else 0.0)
+        # decode-step latency percentiles: speculative decode makes steps
+        # emit 1..K+1 tokens, so mean tok/s alone hides tail latency
+        s["decode_step_p50_s"] = (float(np.percentile(self._step_times, 50))
+                                  if self._step_times else 0.0)
+        s["decode_step_p99_s"] = (float(np.percentile(self._step_times, 99))
+                                  if self._step_times else 0.0)
+        # speculative decode: accepted drafts per proposed draft, emitted
+        # tokens per live lane per step (1.0 for sequential decode), and
+        # the fraction of drafted lanes where >= 1 draft survived
+        s["spec_accept_rate"] = (s["spec_accepted"] / s["spec_drafted"]
+                                 if s["spec_drafted"] else 0.0)
+        s["tokens_per_step"] = (s["decode_tokens"] / s["decode_lane_steps"]
+                                if s["decode_lane_steps"] else 0.0)
+        s["spec_draft_hit_rate"] = (
+            s["spec_lanes_hit"] / s["spec_lanes_drafted"]
+            if s["spec_lanes_drafted"] else 0.0)
+        s["spec_k"] = self.spec_k
         s["trie_evictions"] = (self.prefix.evictions
                                if self.prefix is not None else 0)
         s["pages_in_use"] = self.pool.used_count if self.paged else 0
@@ -365,6 +444,57 @@ class ServeEngine:
             jax.ShapeDtypeStruct((b, 1), i32), lane_i, *extra,
             lane_f, lane_i, lane_f, lane_i, lane_i)
 
+    def _spec_exe(self):
+        """One speculative decode step: verify the (B, K+1) drafted block
+        in a single dispatch and sample a token at EVERY fed position —
+        column ``j`` draws with sample index ``idxs + j``, so each column
+        is exactly the draw sequential decode would make at that index."""
+        kp1 = self.spec_k + 1
+
+        def sample_block(logits, temps, top_ks, top_ps, seeds, idxs):
+            # one flattened (B*(K+1),)-lane sampling pass instead of K+1
+            # per-column passes: column j of slot b draws with sample
+            # index idxs[b] + j — exactly the draw sequential decode
+            # makes at that index, in one vmapped dispatch
+            b, v = logits.shape[0], logits.shape[-1]
+            rep = lambda lane: jnp.repeat(lane, kp1)
+            col_idx = (idxs[:, None]
+                       + jnp.arange(kp1, dtype=jnp.int32)[None]).reshape(-1)
+            toks = sample_tokens(logits.reshape(b * kp1, v), rep(temps),
+                                 rep(top_ks), rep(top_ps), rep(seeds),
+                                 col_idx)
+            return toks.reshape(b, kp1)
+
+        if self.paged:
+            def spec(params, state, tokens, positions, pages, nspec,
+                     temps, top_ks, top_ps, seeds, idxs):
+                logits, state = self.api.verify_chunk(
+                    params, state,
+                    {"tokens": tokens, "index": positions, "pages": pages,
+                     "nspec": nspec}, self.cfg)
+                return (sample_block(logits, temps, top_ks, top_ps, seeds,
+                                     idxs), logits, state)
+            extra = (jax.ShapeDtypeStruct(
+                (self.max_slots, self.max_pages), jnp.int32),)
+        else:
+            def spec(params, state, tokens, positions, nspec,
+                     temps, top_ks, top_ps, seeds, idxs):
+                logits, state = self.api.verify_chunk(
+                    params, state,
+                    {"tokens": tokens, "index": positions, "nspec": nspec},
+                    self.cfg)
+                return (sample_block(logits, temps, top_ks, top_ps, seeds,
+                                     idxs), logits, state)
+            extra = ()
+        i32, f32 = jnp.int32, jnp.float32
+        b = self.max_slots
+        lane_i = jax.ShapeDtypeStruct((b,), i32)
+        lane_f = jax.ShapeDtypeStruct((b,), f32)
+        return self._get(
+            "spec", spec, self._params_structs(), self._state_structs(),
+            jax.ShapeDtypeStruct((b, kp1), i32), lane_i, *extra, lane_i,
+            lane_f, lane_i, lane_f, lane_i, lane_i)
+
     def _greedy_lanes(self, b: int):
         return sampling_lanes([GREEDY] * b, [0] * b)
 
@@ -395,6 +525,14 @@ class ServeEngine:
             jnp.zeros((self.max_slots, 1), i32),
             jnp.zeros((self.max_slots,), i32), *decode_extra,
             *self._greedy_lanes(self.max_slots))
+        if self.spec_k:
+            # all-idle warmup block: nspec = 0 masks every cache write
+            self._ensure_warm(
+                "spec", self._spec_exe(), self.params, self.state,
+                jnp.zeros((self.max_slots, self.spec_k + 1), i32),
+                jnp.zeros((self.max_slots,), i32), *decode_extra,
+                jnp.zeros((self.max_slots,), i32),
+                *self._greedy_lanes(self.max_slots))
         for cb in self.chunk_buckets:
             self._ensure_warm(
                 ("prefill", cb), self._prefill_exe(cb), self.params,
@@ -444,15 +582,13 @@ class ServeEngine:
 
     # ----------------------------------------------- page-table management
     def _release_row(self, slot: int) -> None:
-        """Drop slot's page-table row: deref every mapped page (a page
-        shared with another row survives — its refcount stays positive)
-        and drop the now-stale trie entry."""
+        """Drop slot's page-table row: deref every mapped page in one
+        vectorized call (a page shared with another row survives — its
+        refcount stays positive) and drop the now-stale trie entry."""
         if self.prefix is not None:
             self.prefix.remove(slot)
         row = self.table[slot]
-        for lp in range(self.max_pages):
-            if row[lp]:
-                self.pool.deref(int(row[lp]))
+        self.pool.deref_many(row[row != 0])
         self.table[slot] = 0
 
     def _release_trie_evicted(self, slots) -> None:
@@ -479,19 +615,36 @@ class ServeEngine:
     def _ensure_pages(self, slot: int, start: int, end: int) -> bool:
         """Lazily allocate physical pages covering positions ``[start,
         end)`` of ``slot``'s row (reclaiming LRU retired entries under
-        pressure). Returns False when the pool is exhausted."""
+        pressure). One vectorized all-or-nothing allocation — no per-page
+        Python loop, and nothing to roll back on exhaustion. Returns False
+        when the pool is exhausted."""
         first = start // self.page_size
         last = min(-(-end // self.page_size), self.max_pages)
-        need = [lp for lp in range(first, last)
-                if self.table[slot, lp] == 0]
-        if len(need) > self.pool.free_count:
-            self._reclaim_pages(len(need))
-        for lp in need:
-            p = self.pool.alloc()
-            if p < 0:
+        need = first + np.flatnonzero(self.table[slot, first:last] == 0)
+        if need.size > self.pool.free_count:
+            self._reclaim_pages(int(need.size))
+        if need.size:
+            pages = self.pool.alloc_many(int(need.size))
+            if pages is None:
                 return False
-            self.table[slot, lp] = p
+            self.table[slot, need] = pages
         return True
+
+    def _rollback_pages(self, slot: int, length: int) -> None:
+        """Rewind ``slot``'s row after speculative rejection: release every
+        mapped page wholly past the accepted ``length`` (those pages hold
+        only rejected-draft garbage, never attended because every position
+        at/after ``length`` is causally masked).  Shared prefix pages can
+        never be hit — sharing stops below the slot's write frontier — so
+        each release is the deref of this row's own reference: refcounts
+        stay exactly conserved with the table."""
+        first = -(-length // self.page_size)
+        row = self.table[slot]
+        stale = first + np.flatnonzero(row[first:] != 0)
+        if stale.size:
+            self.pool.deref_many(row[stale])
+            row[stale] = 0
+            self.stats["spec_pages_rolled_back"] += int(stale.size)
 
     def _bind_pages(self, slot: int, src: int, reuse: int, end: int
                     ) -> Tuple[bool, Optional[Tuple[int, int]]]:
@@ -512,10 +665,12 @@ class ServeEngine:
         if reuse and src != slot:
             self._release_row(slot)
             nfull = reuse // ps
-            for lp in range(nfull):
-                p = int(self.table[src, lp])
-                self.pool.ref(p)
-                self.table[slot, lp] = p
+            # share the whole full-page span in two vectorized ops: one
+            # refcount scatter, one row assignment (the hit path must not
+            # pay a per-page Python loop)
+            shared = self.table[src, :nfull]
+            self.pool.ref_many(shared)
+            self.table[slot, :nfull] = shared
             if reuse % ps:
                 # snapshot the source boundary page BEFORE any reclaim can
                 # release src's row; even if reclaim frees it, its bytes
@@ -541,9 +696,11 @@ class ServeEngine:
 
     # ------------------------------------------------------------ admit
     def _feed_cost_model(self, chunk_s: Optional[float] = None,
-                         step_s: Optional[float] = None) -> None:
-        """EWMA the newest measured prefill-chunk / decode-step time into
-        the scheduler's cost model (``chunk_s`` / ``step_s`` in seconds)."""
+                         step_s: Optional[float] = None,
+                         tokens_per_step: Optional[float] = None) -> None:
+        """EWMA the newest measured prefill-chunk / decode-step time (and
+        decode tokens-per-step rate — the speculative multiplier the SLO
+        math must price) into the scheduler's cost model."""
         if chunk_s is not None:
             self._chunk_ewma = (chunk_s if self._chunk_ewma is None else
                                 (1 - _COST_EWMA) * self._chunk_ewma
@@ -552,7 +709,12 @@ class ServeEngine:
             self._step_ewma = (step_s if self._step_ewma is None else
                                (1 - _COST_EWMA) * self._step_ewma
                                + _COST_EWMA * step_s)
-        self.scheduler.update_cost_model(self._chunk_ewma, self._step_ewma)
+        if tokens_per_step is not None:
+            self._tps_ewma = (tokens_per_step if self._tps_ewma is None else
+                              (1 - _COST_EWMA) * self._tps_ewma
+                              + _COST_EWMA * tokens_per_step)
+        self.scheduler.update_cost_model(self._chunk_ewma, self._step_ewma,
+                                         self._tps_ewma)
 
     def _admit(self, slot: int, req: Request) -> List[Request]:
         """Admit ``req`` into ``slot``: prefix-cache lookup, then zero-copy
@@ -685,6 +847,7 @@ class ServeEngine:
         self.stats["admissions"] += 1
         if self.prefix is not None:
             self.stats["hit_admit_s" if reuse else "cold_admit_s"] += dt
+            self._admit_times["hit" if reuse else "cold"].append(dt)
         if not reuse:
             # prefix-hit admissions time a page copy plus (at most) a tiny
             # tail chunk — feeding that into the model would make a "chunk"
@@ -772,8 +935,10 @@ class ServeEngine:
         self.stats["decode_s"] += dt
         self.stats["decode_tokens"] += len(live)
         self.stats["decode_steps"] += 1
+        self.stats["decode_lane_steps"] += len(live)
         self.stats["occupancy_sum"] += occ
-        self._feed_cost_model(step_s=dt)
+        self._step_times.append(dt)
+        self._feed_cost_model(step_s=dt, tokens_per_step=1.0)
         if self.prefix is not None:
             # this step wrote each live slot's fed token into its pages
             for slot in live:
@@ -790,11 +955,138 @@ class ServeEngine:
                     self._release_row(slot)
         return done
 
+    # ----------------------------------------------- speculative decode
+    def _truncate_emitted(self, req: Request, emitted: List[int]
+                          ) -> List[int]:
+        """Clip a slot's emitted tokens at its retire point: sequential
+        decode would never sample past ``eos_id`` or the ``max_new``
+        budget, so speculative output must stop at the same token."""
+        out: List[int] = []
+        room = req.remaining
+        for t in emitted:
+            if room <= 0:
+                break
+            out.append(t)
+            room -= 1
+            if req.eos_id is not None and t == req.eos_id:
+                break
+        return out
+
+    def _spec_decode_once(self) -> List[Request]:
+        """One speculative decode step over every live slot: draft up to
+        ``spec_k`` tokens per slot on the host (prompt lookup over its own
+        history), verify all K+1 positions in ONE dispatch, emit each
+        slot's longest sampled-matching draft prefix plus one
+        correction/bonus token, then rewind per-slot lengths and release
+        any page advanced past the accepted point.  Idle lanes run with
+        ``nspec == 0`` — every one of their cache writes is masked off."""
+        k = self.spec_k
+        drafts: Dict[int, List[int]] = {}
+        for slot, req in self.scheduler.active.items():
+            # a draft past the cache capacity or the generation budget
+            # could never be emitted — don't verify (or page) it
+            kd = min(k, self.max_seq - req.pos - 1, req.remaining - 1)
+            drafts[slot] = (self.drafter.propose(req.context, kd)
+                            if kd > 0 else [])
+        if self.paged:
+            for slot, req in list(self.scheduler.active.items()):
+                end = req.pos + 1 + len(drafts[slot])
+                if not self._ensure_pages(slot, req.pos, end):
+                    # not even the draft-free step fits: defer, not drop
+                    drafts[slot] = []
+                    if not self._ensure_pages(slot, req.pos, req.pos + 1):
+                        self.evict(slot)
+                        self.stats["oom_deferred"] += 1
+            if not self.scheduler.active:
+                return []
+        b = self.max_slots
+        tokens = np.zeros((b, k + 1), np.int32)
+        positions = np.zeros((b,), np.int32)
+        nspec = np.zeros((b,), np.int32)     # idle lanes: writes masked
+        sps = [GREEDY] * b
+        sidx = [0] * b
+        for slot, req in self.scheduler.active.items():
+            d = drafts[slot]
+            tokens[slot, 0] = req.generated[-1]
+            if d:
+                tokens[slot, 1:1 + len(d)] = d
+            positions[slot] = req.pos
+            nspec[slot] = 1 + len(d)
+            sps[slot] = req.sampling or GREEDY
+            sidx[slot] = len(req.generated)
+        pages_extra = ()
+        if self.paged:
+            disp = np.zeros((b, self.max_pages), np.int32)
+            for slot in self.scheduler.active:
+                disp[slot] = self.table[slot]
+            pages_extra = (jnp.asarray(disp),)
+        temps, top_ks, top_ps, seeds, idxs = sampling_lanes(sps, sidx)
+        toks_d = jnp.asarray(tokens)
+        pos_d = jnp.asarray(positions)
+        nspec_d = jnp.asarray(nspec)
+        exe = self._spec_exe()
+        self._ensure_warm("spec", exe, self.params, self.state, toks_d,
+                          pos_d, *pages_extra, nspec_d, temps, top_ks,
+                          top_ps, seeds, idxs)
+        occ = self.scheduler.occupancy
+        live = list(self.scheduler.active)
+
+        t0 = time.perf_counter()
+        nxt, _, self.state = exe(self.params, self.state, toks_d, pos_d,
+                                 *pages_extra, nspec_d, temps, top_ks,
+                                 top_ps, seeds, idxs)
+        nxt = np.asarray(nxt)
+        dt = time.perf_counter() - t0
+
+        emitted: Dict[int, List[int]] = {}
+        n_emitted = 0
+        for slot in live:
+            req = self.scheduler.active[slot]
+            d = drafts[slot]
+            toks, accepted = accept_tokens(nxt[slot], d)
+            toks = self._truncate_emitted(req, toks)
+            emitted[slot] = toks
+            n_emitted += len(toks)
+            self.stats["spec_drafted"] += len(d)
+            self.stats["spec_accepted"] += accepted
+            if d:
+                self.stats["spec_lanes_drafted"] += 1
+                if accepted:
+                    self.stats["spec_lanes_hit"] += 1
+        self.stats["decode_s"] += dt
+        self.stats["decode_tokens"] += n_emitted
+        self.stats["decode_steps"] += 1
+        self.stats["decode_lane_steps"] += len(live)
+        self.stats["occupancy_sum"] += occ
+        self._step_times.append(dt)
+        self._feed_cost_model(step_s=dt,
+                              tokens_per_step=n_emitted / len(live))
+        if self.prefix is not None:
+            # the step materialized each slot's fed-and-kept tokens: the
+            # last sampled token plus its accepted draft prefix
+            for slot in live:
+                fed = ([int(tokens[slot, 0])]
+                       + drafts[slot][:len(emitted[slot]) - 1])
+                for t in fed:
+                    self.prefix.extend(slot, t)
+        new_len = {slot: int(positions[slot]) + len(emitted[slot])
+                   for slot in live}
+        done = self.scheduler.on_decode_tokens(emitted)
+        if self.paged:
+            for slot in live:
+                # rewind: rejected-draft pages past the accepted frontier
+                self._rollback_pages(slot, new_len[slot])
+                if slot not in self.scheduler.active and \
+                        not self._row_reusable(slot):
+                    self._release_row(slot)
+        return done
+
     def step(self) -> List[Request]:
         """One engine iteration: SLO preemption check, refill free slots
         (chunked prefill per admission), then one batched decode step shared
-        by ALL live slots. Returns the requests that finished during this
-        iteration."""
+        by ALL live slots — speculative multi-token decode when ``spec_k``
+        is set, the classic sequential step otherwise. Returns the requests
+        that finished during this iteration."""
         finished: List[Request] = []
         victim = self.scheduler.maybe_preempt()
         if victim is not None:
@@ -803,7 +1095,8 @@ class ServeEngine:
         for slot, req in self.scheduler.admissions():
             finished += self._admit(slot, req)
         if self.scheduler.active:
-            finished += self._decode_once()
+            finished += (self._spec_decode_once() if self.spec_k
+                         else self._decode_once())
         return finished
 
     # -------------------------------------------------------------- run

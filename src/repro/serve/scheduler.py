@@ -132,19 +132,39 @@ class Scheduler:
         # engine-fed cost model (EWMA of measured times; 0 = unknown yet)
         self.est_chunk_s: float = 0.0
         self.est_step_s: float = 0.0
+        #: mean tokens a decode step emits per live slot (1.0 for classic
+        #: sequential decode; > 1 under speculative multi-token decode,
+        #: where accepted drafts make one step worth several tokens)
+        self.est_tokens_per_step: float = 1.0
         self.slo_met_count = 0
         self.slo_missed_count = 0
 
     # ----------------------------------------------------------- cost model
     def update_cost_model(self, chunk_s: Optional[float] = None,
-                          step_s: Optional[float] = None) -> None:
+                          step_s: Optional[float] = None,
+                          tokens_per_step: Optional[float] = None) -> None:
         """Feed measured service times: ``chunk_s`` is the engine's current
         estimate of one prefill-chunk dispatch, ``step_s`` of one batched
-        decode step (pass ``None`` to leave either unchanged)."""
+        decode step, ``tokens_per_step`` of how many tokens one step emits
+        per live slot (> 1 under speculative decode — without it, EDF and
+        preemption decisions would overprice every speculative request's
+        remaining decode by the accept rate).  Pass ``None`` to leave any
+        of them unchanged."""
         if chunk_s is not None:
             self.est_chunk_s = float(chunk_s)
         if step_s is not None:
             self.est_step_s = float(step_s)
+        if tokens_per_step is not None:
+            self.est_tokens_per_step = max(1.0, float(tokens_per_step))
+
+    def est_decode_s(self, n_tokens: int) -> float:
+        """Estimated wall time to decode ``n_tokens`` for one request under
+        the current cost model: steps needed at the measured tokens-per-step
+        rate, each costing one batched-step time."""
+        if n_tokens <= 0:
+            return 0.0
+        return math.ceil(n_tokens / self.est_tokens_per_step) \
+            * self.est_step_s
 
     def est_service_s(self, req: Request) -> float:
         """Estimated remaining service time of ``req`` if admitted now:
@@ -159,8 +179,7 @@ class Scheduler:
         if self.reuse_probe is not None:
             to_prefill = max(1, ctx_len - int(self.reuse_probe(req.context)))
         chunks = math.ceil(to_prefill / self.prefill_chunk)
-        return (chunks * self.est_chunk_s
-                + max(0, req.remaining) * self.est_step_s)
+        return chunks * self.est_chunk_s + self.est_decode_s(req.remaining)
 
     def deadline(self, req: Request) -> Optional[float]:
         """Absolute completion deadline of ``req`` on the scheduler clock,
@@ -236,15 +255,27 @@ class Scheduler:
         """Advance every live slot by its sampled token (``tokens`` maps
         slot -> token id); returns the requests that finished this step
         (their slots are free again)."""
+        return self.on_decode_tokens({s: [t] for s, t in tokens.items()})
+
+    def on_decode_tokens(self, tokens: Dict[int, Sequence[int]]
+                         ) -> List[Request]:
+        """Advance every live slot by the 1..K+1 tokens one (speculative)
+        decode step emitted for it; returns the requests that finished.
+        Appending stops at retirement (eos / budget / capacity) — the
+        engine already truncates to the retire point, this is the
+        belt-and-braces guard for the invariant ``pos == len(context) - 1``.
+        """
         done = []
-        for slot, tok in tokens.items():
+        for slot, toks in tokens.items():
             req = self.active.get(slot)
             if req is None:
                 continue
-            req.generated.append(int(tok))
-            req.pos += 1
-            if self._maybe_retire(req):
-                done.append(req)
+            for tok in toks:
+                req.generated.append(int(tok))
+                req.pos += 1
+                if self._maybe_retire(req):
+                    done.append(req)
+                    break
         return done
 
     def _maybe_retire(self, req: Request) -> bool:
@@ -316,7 +347,7 @@ class Scheduler:
                      key=lambda r: self.slack_s(r, now), default=None)
         if urgent is None:
             return None
-        est_wait = min((max(0, r.remaining) * self.est_step_s
+        est_wait = min((self.est_decode_s(r.remaining)
                         for r in self.active.values()), default=0.0)
         if self.slack_s(urgent, now) >= est_wait:
             return None                       # not at risk: waiting is fine

@@ -1,0 +1,141 @@
+"""Speculative multi-token decode: prompt-lookup drafting + acceptance.
+
+Host-side and jax-free (like :mod:`repro.serve.scheduler`), so the policy
+is unit-testable without compiling a model.  The serve engine's classic
+decode loop is strictly sequential: ONE token per jitted dispatch, because
+token ``i+1``'s distribution depends on token ``i``.  Speculative decode is
+the paper's sequential-to-combinatorial tilt applied to generation: guess
+K candidate tokens cheaply on the host (*drafting*), then score all K+1
+positions in ONE wide dispatch (``verify_chunk``) — a few serial steps
+replaced by one parallel multi-operand step, with the split-K page combine
+still running through the shared radix-4 ``ReductionPlan``.
+
+Two pieces live here:
+
+* :class:`PromptLookupDrafter` — a **model-free** drafter: match the last
+  n-gram of a slot's token history (prompt + generated output) against
+  earlier occurrences in that same history and propose the continuation.
+  Zero extra weights, zero extra dispatches; it exploits the
+  self-similarity of real generation (quoting the prompt, code/list
+  patterns, repetition loops).  The lookup is *iterated*: when the matched
+  continuation is shorter than the budget (e.g. a tight repetition cycle),
+  the draft-so-far is appended to the history and matched again, so short
+  cycles still fill all K lanes.
+* :func:`accept_tokens` — the acceptance rule.  The verify dispatch
+  samples a token at EVERY fed position from the true logits with the
+  request's own stateless PRNG stream (``fold_in(PRNGKey(seed), i)`` at
+  sample index ``i`` — :mod:`repro.serve.sampling`); a draft is accepted
+  while it equals the token actually sampled at its position.  Because
+  each emitted token is always *the* sample the non-speculative engine
+  would have drawn at that index, the output stream is **bit-exact** vs
+  sequential decode for greedy AND stochastic lanes — for a deterministic
+  (delta) proposal this exact-match rule *is* rejection sampling: a draft
+  ``d`` survives with probability ``p(d)``, and on rejection the emitted
+  correction is distributed as ``p`` conditioned on ``!= d`` — the
+  residual distribution.  Restart/eviction determinism therefore survives
+  unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+__all__ = ["PromptLookupDrafter", "propose_draft", "accept_tokens"]
+
+
+def _lookup(history: Sequence[int], k: int, ngram_max: int,
+            ngram_min: int) -> List[int]:
+    """One prompt-lookup round: the continuation (up to ``k`` tokens) after
+    the most recent earlier occurrence of the longest matching suffix
+    n-gram of ``history`` (n from ``ngram_max`` down to ``ngram_min``)."""
+    n_hist = len(history)
+    for n in range(min(ngram_max, n_hist - 1), ngram_min - 1, -1):
+        pat = list(history[-n:])
+        for i in range(n_hist - n - 1, -1, -1):
+            if list(history[i:i + n]) == pat:
+                cont = list(history[i + n:i + n + k])
+                if cont:
+                    return cont
+                break       # suffix-adjacent match: no continuation to take
+    return []
+
+
+def propose_draft(history: Sequence[int], k: int, ngram_max: int = 3,
+                  ngram_min: int = 1) -> List[int]:
+    """Draft up to ``k`` candidate next tokens for one slot by iterated
+    prompt lookup over its own ``history`` (prompt + generated so far).
+
+    Args:
+      history: the slot's full token history; the last token is the one
+        the next decode step would feed.
+      k: draft budget (the verify dispatch width is ``k + 1``).
+      ngram_max: longest suffix n-gram tried first (longer matches are
+        higher-precision anchors).
+      ngram_min: shortest n-gram worth matching; below it the drafter
+        returns fewer than ``k`` tokens rather than guessing blind.
+
+    Returns:
+      0 to ``k`` drafted tokens.  An empty draft degrades the step to the
+      classic single-token decode (still one dispatch, one emitted token).
+    """
+    if k <= 0 or len(history) < ngram_min + 1:
+        return []
+    out: List[int] = []
+    h = list(history)
+    while len(out) < k:
+        cont = _lookup(h, k - len(out), ngram_max, ngram_min)
+        if not cont:
+            break
+        out.extend(cont)
+        h.extend(cont)
+    return out[:k]
+
+
+@dataclasses.dataclass(frozen=True)
+class PromptLookupDrafter:
+    """Engine-facing drafter config: ``propose(history, k)`` wraps
+    :func:`propose_draft` with this instance's n-gram window.
+
+    Args:
+      ngram_max: longest suffix n-gram matched first (default 3).
+      ngram_min: shortest n-gram worth matching (default 1).
+    """
+
+    ngram_max: int = 3
+    ngram_min: int = 1
+
+    def __post_init__(self):
+        if self.ngram_min < 1 or self.ngram_max < self.ngram_min:
+            raise ValueError(
+                f"need 1 <= ngram_min <= ngram_max, got "
+                f"[{self.ngram_min}, {self.ngram_max}]")
+
+    def propose(self, history: Sequence[int], k: int) -> List[int]:
+        """Up to ``k`` drafted tokens for ``history`` (see
+        :func:`propose_draft`)."""
+        return propose_draft(history, k, self.ngram_max, self.ngram_min)
+
+
+def accept_tokens(sampled: Sequence[int],
+                  drafts: Sequence[int]) -> Tuple[List[int], int]:
+    """Longest-matching-prefix acceptance for one slot.
+
+    Args:
+      sampled: the ``len(drafts) + 1`` tokens sampled in-graph from the
+        verify dispatch's logits — ``sampled[j]`` is the token drawn (with
+        the request's own PRNG stream at sample index ``base + j``) from
+        the true distribution after fed token ``j``.
+      drafts: the drafted tokens that were fed at positions ``1..k``.
+
+    Returns:
+      ``(emitted, accepted)``: the tokens this step emits — the accepted
+      draft prefix plus one correction/bonus token, i.e. ``sampled[:a+1]``
+      where ``a`` is the number of leading positions with
+      ``sampled[j] == drafts[j]`` — and ``a`` itself.  Every emitted token
+      is exactly what sequential decode would have sampled at its index,
+      which is what makes speculative output bit-exact (see module doc).
+    """
+    a = 0
+    while a < len(drafts) and int(sampled[a]) == int(drafts[a]):
+        a += 1
+    return [int(sampled[j]) for j in range(a + 1)], a
