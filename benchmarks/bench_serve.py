@@ -29,13 +29,18 @@ the answer for the reduced config on CPU:
   Greedy tokens are asserted bit-identical, so the recorded deltas are
   pure throughput: accept rate, tokens per step, decode tok/s, and
   decode-step latency percentiles.
+* quantized KV pages: the shared-prefix paged traffic re-served with
+  fp32 / int8 / int4 page pools (the engine's ``kv_dtype`` knob) —
+  records bytes per resident slot (the capacity uplift at fixed pool
+  bytes), decode tok/s, greedy bit-stability, per-step logit drift vs
+  fp32, and the speculative accept-rate drift over int8 pages.
 
 Emits ``results/BENCH_serve.json`` with prefill/decode tok/s for both
 paths, the prefill speedup, decode batch occupancy, decode-step latency
 percentiles, the prefix-cache hit/miss/reuse counters, the ``paged``
-comparison, and the ``spec`` section — the perf trajectory baseline for
-later serving PRs.  See ``docs/serving.md`` for what each metric
-excludes.
+comparison, the ``spec`` section, and the ``quant`` section — the perf
+trajectory baseline for later serving PRs.  See ``docs/serving.md`` for
+what each metric excludes.
 """
 from __future__ import annotations
 
@@ -131,6 +136,9 @@ def _prefix_workload(cfg, params, prompts, *, prefix_cache: bool,
         "hit_admit_s_p50": st["hit_admit_s_p50"],
         "cold_admit_s_p50": st["cold_admit_s_p50"],
         "paged": eng.paged,
+        "kv_dtype": st["kv_dtype"],
+        "kv_bytes_per_slot": st["kv_bytes_per_slot"],
+        "pool_bytes": st["pool_bytes"],
         "tokens": [r.generated for r in reqs],
     }, eng
 
@@ -155,11 +163,12 @@ def _drafter_replay_tps(traj, start: int, k: int) -> float:
 
 
 def _spec_workload(cfg, params, prompts, *, spec_k: int,
-                   max_seq: int) -> dict:
+                   max_seq: int, kv_dtype: str = "fp32") -> dict:
     """Serve the continuation workload greedily with ``spec_k`` drafts per
     step (0 = the sequential baseline) and return decode-side stats."""
     eng = ServeEngine(cfg, params, max_slots=SLOTS, max_seq=max_seq,
-                      prefill_chunk=PREFILL_CHUNK, spec_k=spec_k)
+                      prefill_chunk=PREFILL_CHUNK, spec_k=spec_k,
+                      kv_dtype=kv_dtype)
     reqs = [eng.submit(p, SPEC_GEN) for p in prompts]
     eng.warmup()
     eng.run()
@@ -177,6 +186,44 @@ def _spec_workload(cfg, params, prompts, *, spec_k: int,
         "pages_rolled_back": st["spec_pages_rolled_back"],
         "tokens": [r.generated for r in reqs],
     }
+
+
+def _quant_workload(cfg, params, prompts, *, kv_dtype: str, max_seq: int,
+                    page_size: int) -> dict:
+    """Serve the shared-prefix traffic through a paged engine with
+    ``kv_dtype`` KV pages, tracing every decode step's logits (the
+    quantization-drift probe), and return capacity + throughput stats."""
+    eng = ServeEngine(cfg, params, max_slots=SLOTS, max_seq=max_seq,
+                      prefill_chunk=PREFILL_CHUNK, page_size=page_size,
+                      prefix_cache=True, min_prefix=8, paged_kv=True,
+                      kv_dtype=kv_dtype)
+    eng.trace_logits = True
+    reqs = [eng.submit(list(p), GEN) for p in prompts]
+    eng.warmup()
+    eng.run()
+    assert all(len(r.generated) == GEN for r in reqs)
+    st = eng.stats_summary()
+    return {
+        "kv_dtype": st["kv_dtype"],
+        "kv_bytes_per_slot": st["kv_bytes_per_slot"],
+        "pool_bytes": st["pool_bytes"],
+        "decode_tok_s": st["decode_tok_s"],
+        "decode_s": st["decode_s"],
+        "decode_step_p50_s": st["decode_step_p50_s"],
+        "tokens": [r.generated for r in reqs],
+        "trace": np.concatenate(eng.logit_trace, axis=0),
+    }
+
+
+def _logit_drift(a: np.ndarray, b: np.ndarray) -> tuple:
+    """(max, mean) absolute logit delta over the aligned step trace.  The
+    engines schedule identically (same lengths, same admission order), so
+    rows correspond step-for-step; once greedy tokens diverge the deltas
+    measure free-running divergence, not per-step quantization error —
+    meaningful as an error bound only while tokens stay bit-stable."""
+    n = min(len(a), len(b))
+    d = np.abs(a[:n].astype(np.float64) - b[:n].astype(np.float64))
+    return float(d.max()), float(d.mean())
 
 
 def run() -> dict:
@@ -339,6 +386,7 @@ def run() -> dict:
     print(f"\npaged prefix-hit admission: {bytes_reduction:.0%} fewer bytes "
           f"copied, {by_page['pages_shared']:.0f} pages shared by "
           f"reference, {admit_speedup:.2f}x hit-admission latency (p50)")
+    paged_tokens = by_page["tokens"]
     by_copy.pop("tokens")
     by_page.pop("tokens")
 
@@ -399,6 +447,60 @@ def run() -> dict:
     seq.pop("tokens")
     spc.pop("tokens")
 
+    # ---- quantized KV pages: the same shared-prefix paged traffic with
+    # fp32 / int8 / int4 page pools.  fp32 through the kv_dtype knob must
+    # reproduce the paged run bit-for-bit (the knob is free when off);
+    # int8 must keep greedy tokens bit-stable on this workload; int4 pays
+    # accuracy for capacity (recorded, not asserted).  The capacity win is
+    # bytes per resident slot at a FIXED page count — i.e. how many more
+    # slots the same pool bytes could hold.
+    section(f"quantized KV pages: shared-prefix traffic, fp32 vs int8 vs "
+            f"int4 page pools (max_seq {pg_seq}, page {pg_page})")
+    qfp = _quant_workload(cfg, params, shared_prompts, kv_dtype="fp32",
+                          max_seq=pg_seq, page_size=pg_page)
+    q8 = _quant_workload(cfg, params, shared_prompts, kv_dtype="int8",
+                         max_seq=pg_seq, page_size=pg_page)
+    q4 = _quant_workload(cfg, params, shared_prompts, kv_dtype="int4",
+                         max_seq=pg_seq, page_size=pg_page)
+    assert qfp["tokens"] == paged_tokens, (
+        "kv_dtype='fp32' changed greedy outputs vs the paged engine")
+    uplift8 = qfp["kv_bytes_per_slot"] / q8["kv_bytes_per_slot"]
+    uplift4 = qfp["kv_bytes_per_slot"] / q4["kv_bytes_per_slot"]
+    bitstable8 = q8["tokens"] == qfp["tokens"]
+    bitstable4 = q4["tokens"] == qfp["tokens"]
+    drift8_max, drift8_mean = _logit_drift(qfp["trace"], q8["trace"])
+    drift4_max, drift4_mean = _logit_drift(qfp["trace"], q4["trace"])
+    print_rows([
+        {"path": d["kv_dtype"], "kv_bytes_per_slot": d["kv_bytes_per_slot"],
+         "pool_bytes": d["pool_bytes"], "decode_tok_s": d["decode_tok_s"]}
+        for d in (qfp, q8, q4)])
+    print(f"\nresident-slot uplift at fixed pool bytes: int8 {uplift8:.2f}x"
+          f", int4 {uplift4:.2f}x;  greedy bit-stable: int8 {bitstable8}, "
+          f"int4 {bitstable4};  logit drift (max/mean): "
+          f"int8 {drift8_max:.3g}/{drift8_mean:.3g}, "
+          f"int4 {drift4_max:.3g}/{drift4_mean:.3g}")
+    assert uplift8 >= 1.9, (
+        f"int8 pages only {uplift8:.2f}x resident-slot capacity "
+        f"(acceptance floor: 1.9x)")
+    assert uplift4 >= 3.5, (
+        f"int4 pages only {uplift4:.2f}x resident-slot capacity "
+        f"(acceptance floor: 3.5x)")
+    assert bitstable8, (
+        "int8 KV pages flipped greedy tokens on the bench workload")
+    # speculative decode over int8 pages: drafting/verification runs
+    # against the quantized pool; record the accept-rate drift vs fp32
+    spc8 = _spec_workload(cfg, params, spec_prompts, spec_k=SPEC_K,
+                          max_seq=sp_seq, kv_dtype="int8")
+    assert all(len(t) == SPEC_GEN for t in spc8["tokens"])
+    spc8.pop("tokens")
+    accept_drift = abs(spc8["accept_rate"] - spc["accept_rate"])
+    print(f"spec over int8 pages: {spc8['tokens_per_step']:.2f} "
+          f"tokens/step, accept rate {spc8['accept_rate']:.0%} "
+          f"(fp32 {spc['accept_rate']:.0%}, drift {accept_drift:.3f})")
+    for d in (qfp, q8, q4):
+        d.pop("tokens")
+        d.pop("trace")
+
     return {
         "arch": cfg.arch_id,
         "requests": N_REQUESTS,
@@ -418,6 +520,9 @@ def run() -> dict:
             "decode_steps": stats["decode_steps"],
             "decode_step_p50_s": stats["decode_step_p50_s"],
             "decode_step_p99_s": stats["decode_step_p99_s"],
+            "kv_dtype": stats["kv_dtype"],
+            "kv_bytes_per_slot": stats["kv_bytes_per_slot"],
+            "pool_bytes": stats["pool_bytes"],
         },
         "prefill_speedup": speedup_prefill,
         "decode_speedup": speedup_decode,
@@ -448,6 +553,25 @@ def run() -> dict:
             "decode_speedup": spec_speedup,
             "decode_step_p50_s": spc["decode_step_p50_s"],
             "decode_step_p99_s": spc["decode_step_p99_s"],
+        },
+        "quant": {
+            "max_seq": pg_seq,
+            "page_size": pg_page,
+            "fp32": qfp,
+            "int8": q8,
+            "int4": q4,
+            "slot_uplift_int8": uplift8,
+            "slot_uplift_int4": uplift4,
+            "int8_tokens_bitstable": bitstable8,
+            "int4_tokens_bitstable": bitstable4,
+            "int8_logit_drift_max": drift8_max,
+            "int8_logit_drift_mean": drift8_mean,
+            "int4_logit_drift_max": drift4_max,
+            "int4_logit_drift_mean": drift4_mean,
+            "spec_int8": spc8,
+            "spec_accept_rate_fp32": spc["accept_rate"],
+            "spec_accept_rate_int8": spc8["accept_rate"],
+            "spec_accept_rate_drift": accept_drift,
         },
         "compile_excluded": True,
     }

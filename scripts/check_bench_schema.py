@@ -51,6 +51,18 @@ REQUIRED = {
         "spec.decode_step_p50_s", "spec.decode_step_p99_s",
         "spec.sequential.decode_step_p50_s",
         "spec.sequential.decode_step_p99_s",
+        "engine.kv_bytes_per_slot", "engine.pool_bytes",
+        "paged.paged.kv_bytes_per_slot", "paged.paged.pool_bytes",
+        "quant.page_size",
+        "quant.fp32.kv_bytes_per_slot", "quant.fp32.decode_tok_s",
+        "quant.int8.kv_bytes_per_slot", "quant.int8.pool_bytes",
+        "quant.int8.decode_tok_s",
+        "quant.int4.kv_bytes_per_slot", "quant.int4.pool_bytes",
+        "quant.int4.decode_tok_s",
+        "quant.slot_uplift_int8", "quant.slot_uplift_int4",
+        "quant.int8_tokens_bitstable", "quant.int8_logit_drift_max",
+        "quant.int4_logit_drift_max",
+        "quant.spec_accept_rate_int8", "quant.spec_accept_rate_drift",
     ],
     "collectives": [
         "rows", "stage_plan", "kernel_timings", "dryrun_collectives",

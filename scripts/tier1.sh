@@ -41,6 +41,13 @@ python -m benchmarks.run --only serve
 python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
     --slots 2 --prompt-len 12 --gen 12 --spec-k 3
 
+# Quantized-KV smoke: the same CLI drive with int8 pages (quantize on
+# scatter, dequant inside the split-K decode, spec verification over the
+# quantized pool) — keeps the kv_dtype path from rotting between
+# benchmark refreshes.
+python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
+    --slots 2 --prompt-len 12 --gen 12 --spec-k 3 --kv-dtype int8
+
 # Perf-trajectory schema: every results/BENCH_*.json must keep its
 # required metric keys (a refactor that silently drops one fails here,
 # not three PRs later when someone tries to compare against it).

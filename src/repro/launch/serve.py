@@ -12,7 +12,9 @@ per-slot positions, finished slots are refilled mid-flight — and tokens are
 sampled in-graph per slot (``--temperature 0`` = greedy).  Decode steps
 are speculative by default (``--spec-k`` prompt-lookup drafts verified in
 one K+1-wide dispatch, bit-exact vs sequential decode; ``--no-spec``
-disables).  ``--per-token`` instead runs :func:`generate`, the legacy
+disables).  ``--kv-dtype int8``/``int4`` stores KV pages as per-row
+quantized codes dequantized inside the decode kernel (paged engines only).
+``--per-token`` instead runs :func:`generate`, the legacy
 one-dispatch-per-token loop kept as the measurement baseline.  See
 ``docs/serving.md`` for the full request lifecycle and knob reference.
 """
@@ -90,7 +92,8 @@ def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
                 max_seq: int = 0, prefill_chunk: int = 32,
                 page_size=None, sampling=None, slo_ms=None,
                 prefix_cache: bool = True, paged_kv=None,
-                pool_pages=None, spec_k: int = 0):
+                pool_pages=None, spec_k: int = 0,
+                kv_dtype: str = "fp32"):
     """Run a list of requests through the engine; returns (outputs, stats).
 
     Args:
@@ -112,6 +115,9 @@ def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
         row per slot; smaller overcommits and defers on exhaustion).
       spec_k: speculative-decode draft budget per slot per step (0 =
         sequential decode; auto-off for SSM/hybrid families).
+      kv_dtype: KV page element type — "fp32" (default), "int8" or
+        "int4" quantized pages (paged engines only; auto-falls back to
+        fp32 for families without pageable state).
 
     Returns:
       (outputs, stats): per-request generated-token lists in submission
@@ -130,7 +136,8 @@ def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
     eng = ServeEngine(cfg, params, max_slots=slots, max_seq=max_seq,
                       prefill_chunk=prefill_chunk, page_size=page_size,
                       prefix_cache=prefix_cache, paged_kv=paged_kv,
-                      pool_pages=pool_pages, spec_k=spec_k)
+                      pool_pages=pool_pages, spec_k=spec_k,
+                      kv_dtype=kv_dtype)
     # warm up BEFORE submitting: the SLO clock starts at submission, and
     # AOT compile / first-execution setup is engine bring-up, not request
     # latency (same reason the throughput timers exclude it)
@@ -173,6 +180,12 @@ def main(argv=None) -> int:
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="physical page-pool size for paged allocation "
                          "(default: one full row per slot)")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=("fp32", "int8", "int4"),
+                    help="KV page element type: quantized int8/int4 pages "
+                         "shrink the pool (per-row codes + fp32 scales, "
+                         "dequantized in-kernel; paged engines only — "
+                         "auto-falls back to fp32 for SSM/hybrid)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="speculative-decode draft budget per slot per "
                          "step (prompt-lookup drafting + one K+1-wide "
@@ -223,7 +236,8 @@ def main(argv=None) -> int:
                               prefix_cache=not args.no_prefix_cache,
                               paged_kv=False if args.no_paged_kv else None,
                               pool_pages=args.pool_pages,
-                              spec_k=0 if args.no_spec else args.spec_k)
+                              spec_k=0 if args.no_spec else args.spec_k,
+                              kv_dtype=args.kv_dtype)
     print(f"[engine] arch={cfg.arch_id} requests={args.requests} "
           f"slots={args.slots} gen={args.gen} "
           f"prompt_lens={lens} sampling={sampling}")
@@ -237,6 +251,9 @@ def main(argv=None) -> int:
           f"({stats['prefix_reused_tokens']:.0f} tokens reused, "
           f"{stats['pages_shared']:.0f} pages shared by reference, "
           f"{stats['prefix_bytes_copied']:.0f} bytes copied)")
+    print(f"kv pages: dtype={stats['kv_dtype']} "
+          f"{stats['kv_bytes_per_slot']:.0f} bytes/slot, "
+          f"pool {stats['pool_bytes']:.0f} bytes")
     if stats["spec_k"]:
         print(f"speculative decode (k={stats['spec_k']:.0f}): "
               f"{stats['tokens_per_step']:.2f} tokens/step, "

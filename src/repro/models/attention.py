@@ -533,30 +533,57 @@ def gqa_decode_pages(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     copy-on-writes the boundary page before any write can land there).
     ``nvalid``: optional (B,) per-slot valid-row count — rows past it are
     redirected to the scratch page (speculative verification's write mask).
+
+    **Quantized pages**: each pool argument may instead be a
+    ``(codes, scales)`` pair (int8 / packed-int4 code pool + fp32 per-row
+    scale pool, see :func:`repro.serve.cache.quant_state_specs`).  The
+    gathered view is dequantized in-kernel
+    (:func:`repro.models.paging.gather_pages_dequant`), the new rows are
+    written into the view at full precision (scores/softmax stay fp32
+    either way), and quantization happens on scatter — codes and their
+    scales through the same page table.  Returns the updated pools in the
+    same structure they came in.
     """
-    from repro.models import paging
+    from repro.models import paging, quant_kv
 
     b, c, _ = x.shape
-    page = pool_k.shape[1]
+    quant = isinstance(pool_k, tuple)
+    if quant:
+        (codes_k, scale_k), (codes_v, scale_v) = pool_k, pool_v
+        page = codes_k.shape[1]
+        bits = quant_kv.kv_bits(codes_k)
+        k_gath = paging.gather_pages_dequant(codes_k, scale_k, pages,
+                                             x.dtype)
+        v_gath = paging.gather_pages_dequant(codes_v, scale_v, pages,
+                                             x.dtype)
+    else:
+        page = pool_k.shape[1]
+        k_gath = paging.gather_pages(pool_k, pages)
+        v_gath = paging.gather_pages(pool_v, pages)
     smax = pages.shape[1] * page
     cur = jnp.asarray(cur_index, jnp.int32)
     q, k_new, v_new, pos = _decode_qkv_new(x, p, cfg, cur)
     if nvalid is None:
-        k_view = batched_cache_write(paging.gather_pages(pool_k, pages),
-                                     k_new, cur)
-        v_view = batched_cache_write(paging.gather_pages(pool_v, pages),
-                                     v_new, cur)
+        k_view = batched_cache_write(k_gath, k_new, cur)
+        v_view = batched_cache_write(v_gath, v_new, cur)
     else:
         # row-masked view write: near capacity, a (B, K+1) block can hang
         # past smax, and dynamic_update_slice's start clamping would shift
         # the fed rows over *valid* view positions — drop them instead
         # (their queries are draft padding whose outputs are discarded)
-        k_view = masked_cache_write(paging.gather_pages(pool_k, pages),
-                                    k_new, pos, nvalid)
-        v_view = masked_cache_write(paging.gather_pages(pool_v, pages),
-                                    v_new, pos, nvalid)
+        k_view = masked_cache_write(k_gath, k_new, pos, nvalid)
+        v_view = masked_cache_write(v_gath, v_new, pos, nvalid)
     out = _splitk_attend(q, k_view, v_view, causal_valid(pos, smax),
                          cfg, page)
+    if quant:
+        qk, sk = quant_kv.quantize_rows(k_new, bits)
+        qv, sv = quant_kv.quantize_rows(v_new, bits)
+        codes_k = paging.scatter_token_rows(codes_k, pages, qk, pos, nvalid)
+        scale_k = paging.scatter_token_rows(scale_k, pages, sk, pos, nvalid)
+        codes_v = paging.scatter_token_rows(codes_v, pages, qv, pos, nvalid)
+        scale_v = paging.scatter_token_rows(scale_v, pages, sv, pos, nvalid)
+        return (out @ p["wo"].astype(x.dtype), (codes_k, scale_k),
+                (codes_v, scale_v))
     pool_k = paging.scatter_token_rows(pool_k, pages, k_new, pos, nvalid)
     pool_v = paging.scatter_token_rows(pool_v, pages, v_new, pos, nvalid)
     return out @ p["wo"].astype(x.dtype), pool_k, pool_v

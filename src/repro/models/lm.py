@@ -229,8 +229,11 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
     "pages" is present the state leaves are *physical page pools*
     (``(layers, num_pages, page_size, ...)``, see
     ``repro.serve.cache.paged_state_specs``) and every layer attends over
-    gathered pages instead of dense slot rows. Returns the final hidden
-    states (B, C, D) and the updated cache state."""
+    gathered pages instead of dense slot rows. When the state additionally
+    carries ``*_scale`` leaves (``repro.serve.cache.quant_state_specs``)
+    the pools hold int8/packed-int4 codes; each layer receives a
+    ``(codes, scales)`` pair and dequantizes in-kernel. Returns the final
+    hidden states (B, C, D) and the updated cache state."""
     cur = batch["index"]
     pages = batch.get("pages")
     nspec = batch.get("nspec")
@@ -238,7 +241,13 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
                              cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
 
     if cfg.attn_kind == "mla":
-        caches = (state["ckv"], state["kr"])
+        quant = "ckv_scale" in state
+        if quant and pages is None:
+            raise ValueError("quantized KV state requires a page table "
+                             "(kv_dtype != 'fp32' is paged-only)")
+        caches = (((state["ckv"], state["ckv_scale"]),
+                   (state["kr"], state["kr_scale"])) if quant
+                  else (state["ckv"], state["kr"]))
 
         def layer(x, inp):
             bp, ckv, kr = inp
@@ -258,18 +267,28 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
             return x + h, (ckv, kr)
 
         x, (ckv, kr) = mscan(layer, x, (params["blocks"],) + caches)
-        new_state = {"ckv": ckv, "kr": kr}
+        if quant:
+            new_state = {"ckv": ckv[0], "ckv_scale": ckv[1],
+                         "kr": kr[0], "kr_scale": kr[1]}
+        else:
+            new_state = {"ckv": ckv, "kr": kr}
     else:
-        caches = (state["k"], state["v"])
+        quant = "k_scale" in state
+        if quant and pages is None:
+            raise ValueError("quantized KV state requires a page table "
+                             "(kv_dtype != 'fp32' is paged-only)")
+        caches = (((state["k"], state["k_scale"]),
+                   (state["v"], state["v_scale"])) if quant
+                  else (state["k"], state["v"]))
         # splitk's shard_map assumes one shared write offset; paged split-K
         # is the single-host analogue keyed off the shared reduction plan.
-        use_splitk = (pages is None and nspec is None and
+        use_splitk = (not quant and pages is None and nspec is None and
                       jnp.ndim(cur) == 0 and
                       attention.splitk_ok(cfg, mesh, caches[0].shape[1],
                                           caches[0].shape[2]))
         page = cfg.decode_page_size
-        use_paged = (pages is None and not use_splitk and page > 0
-                     and caches[0].shape[2] % page == 0)
+        use_paged = (not quant and pages is None and not use_splitk
+                     and page > 0 and caches[0].shape[2] % page == 0)
 
         def layer(x, inp):
             bp, ck, cv = inp
@@ -295,7 +314,11 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
             return x + h, (ck, cv)
 
         x, (ck, cv) = mscan(layer, x, (params["blocks"],) + caches)
-        new_state = {"k": ck, "v": cv}
+        if quant:
+            new_state = {"k": ck[0], "k_scale": ck[1],
+                         "v": cv[0], "v_scale": cv[1]}
+        else:
+            new_state = {"k": ck, "v": cv}
     return x, new_state
 
 

@@ -186,32 +186,59 @@ def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     through the table (shared pages are never rewritten; the serve engine
     copy-on-writes the boundary page).  ``nvalid``: optional (B,) per-slot
     valid-row count — rows past it land on the scratch page (speculative
-    verification's write mask)."""
-    from repro.models import paging
+    verification's write mask).
+
+    **Quantized pages**: either pool argument may instead be a
+    ``(codes, scales)`` pair (int8 / packed-int4 code pool + fp32 per-row
+    scale pool, see :func:`repro.serve.cache.quant_state_specs`).  The
+    gathered latent view is dequantized in-kernel, new latent rows attend
+    at full precision, and quantization happens on scatter — codes and
+    scales through the same page table.  Returns the updated pools in the
+    same structure they came in."""
+    from repro.models import paging, quant_kv
     from repro.models.attention import (batched_cache_write, causal_valid,
                                         decode_positions, masked_cache_write)
 
     b, c, _ = x.shape
-    page = pool_ckv.shape[1]
+    quant = isinstance(pool_ckv, tuple)
+    if quant:
+        (codes_ckv, scale_ckv), (codes_kr, scale_kr) = pool_ckv, pool_krope
+        page = codes_ckv.shape[1]
+        bits = quant_kv.kv_bits(codes_ckv)
+        ckv_gath = paging.gather_pages_dequant(codes_ckv, scale_ckv, pages,
+                                               x.dtype)
+        kr_gath = paging.gather_pages_dequant(codes_kr, scale_kr, pages,
+                                              x.dtype)
+    else:
+        page = pool_ckv.shape[1]
+        ckv_gath = paging.gather_pages(pool_ckv, pages)
+        kr_gath = paging.gather_pages(pool_krope, pages)
     smax = pages.shape[1] * page
     cur = jnp.asarray(cur_index, jnp.int32)
     pos = decode_positions(cur, c)                   # (C,) or (B, C)
     q_nope, q_rope = _queries(x, p, cfg, pos)
     c_new, kr_new = _latent_kv(x, p, cfg, pos)
     if nvalid is None:
-        ckv_view = batched_cache_write(paging.gather_pages(pool_ckv, pages),
-                                       c_new, cur)
-        kr_view = batched_cache_write(
-            paging.gather_pages(pool_krope, pages), kr_new, cur)
+        ckv_view = batched_cache_write(ckv_gath, c_new, cur)
+        kr_view = batched_cache_write(kr_gath, kr_new, cur)
     else:
         # see gqa_decode_pages: near capacity dynamic_update_slice would
         # clamp-shift the fed rows over valid view positions — mask instead
-        ckv_view = masked_cache_write(paging.gather_pages(pool_ckv, pages),
-                                      c_new, pos, nvalid)
-        kr_view = masked_cache_write(
-            paging.gather_pages(pool_krope, pages), kr_new, pos, nvalid)
+        ckv_view = masked_cache_write(ckv_gath, c_new, pos, nvalid)
+        kr_view = masked_cache_write(kr_gath, kr_new, pos, nvalid)
     out = _absorbed_attend(x.dtype, p, cfg, q_nope, q_rope, ckv_view,
                            kr_view, causal_valid(pos, smax))
+    if quant:
+        qc, sc = quant_kv.quantize_rows(c_new, bits)
+        qr, sr = quant_kv.quantize_rows(kr_new, bits)
+        codes_ckv = paging.scatter_token_rows(codes_ckv, pages, qc, pos,
+                                              nvalid)
+        scale_ckv = paging.scatter_token_rows(scale_ckv, pages, sc, pos,
+                                              nvalid)
+        codes_kr = paging.scatter_token_rows(codes_kr, pages, qr, pos, nvalid)
+        scale_kr = paging.scatter_token_rows(scale_kr, pages, sr, pos, nvalid)
+        return (out @ p["wo"].astype(x.dtype), (codes_ckv, scale_ckv),
+                (codes_kr, scale_kr))
     pool_ckv = paging.scatter_token_rows(pool_ckv, pages, c_new, pos, nvalid)
     pool_krope = paging.scatter_token_rows(pool_krope, pages, kr_new, pos,
                                            nvalid)

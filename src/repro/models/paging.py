@@ -28,7 +28,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-__all__ = ["gather_pages", "scatter_token_rows"]
+__all__ = ["gather_pages", "gather_pages_dequant", "scatter_token_rows"]
 
 
 def gather_pages(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
@@ -45,6 +45,32 @@ def gather_pages(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
     """
     v = jnp.take(pool, pages, axis=0)        # (B, n_pages, page, ...)
     return v.reshape((v.shape[0], v.shape[1] * v.shape[2]) + v.shape[3:])
+
+
+def gather_pages_dequant(pool: jnp.ndarray, scale_pool: jnp.ndarray,
+                         pages: jnp.ndarray, out_dtype) -> jnp.ndarray:
+    """Dequantizing :func:`gather_pages`: gather integer code pages and
+    their per-row scale pages, and return the float slot view the split-K
+    attend consumes.
+
+    Args:
+      pool: quantized code pool, ``(num_pages, page_size, ..., D)`` int8
+        (8-bit) or ``(num_pages, page_size, ..., D/2)`` packed uint8
+        (4-bit) — the dtype tags the bit width
+        (:func:`repro.models.quant_kv.kv_bits`).
+      scale_pool: ``(num_pages, page_size, ...)`` fp32 per-row scales
+        (same pooled layout, one trailing axis fewer).
+      pages: ``(B, n_pages)`` int32 page table.
+      out_dtype: dtype of the dequantized view (the attention compute
+        dtype).
+
+    Returns:
+      ``(B, n_pages * page_size, ..., D)`` dequantized view — the
+      quantized analogue of :func:`gather_pages`'s contiguous output.
+    """
+    from repro.models.quant_kv import dequantize_rows
+    return dequantize_rows(gather_pages(pool, pages),
+                           gather_pages(scale_pool, pages), out_dtype)
 
 
 def scatter_token_rows(pool: jnp.ndarray, pages: jnp.ndarray,

@@ -1,0 +1,161 @@
+"""Shared symmetric quantization primitives for KV pages and gradients.
+
+One audited implementation serves two consumers:
+
+* **Gradient compression** (:mod:`repro.optim.compression`) — per-tensor
+  int8 with a pre-agreed shared scale (:func:`quantize_int8` /
+  :func:`dequantize_int8`, re-exported there for backward compatibility).
+* **Quantized KV pages** (the serve tier's ``kv_dtype`` knob) — per-row
+  symmetric int8/int4 codes with an fp32 scale per (token, head) row
+  (:func:`quantize_rows` / :func:`dequantize_rows`).  int4 codes are
+  packed two per byte (:func:`pack_int4` / :func:`unpack_int4`) so a page
+  pool leaf shrinks 8x vs fp32; the code dtype *is* the bit-width tag
+  (``int8`` -> 8-bit, ``uint8`` -> packed 4-bit, :func:`kv_bits`).
+
+The accumulator-width question — can ``page_size`` quantized rows be
+summed exactly inside the split-K page combine without overflow — is
+answered by the paper's exact carry math, not a worst-case guess:
+:func:`kv_carry_budget` instantiates
+``repro.core.carry.carry_budget(N=page_size, M=bits, k=2)`` and
+:func:`assert_kv_accumulator` enforces at engine build time that the
+exact result width (plus a sign bit) fits the int32 carrier, mirroring
+the build-time check gradient reduction already performs via
+``repro.core.accum.plan_gradient_reduction``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.carry import CarryBudget, carry_budget
+
+__all__ = [
+    "KV_DTYPES", "quantize_int8", "dequantize_int8",
+    "quantize_rows", "dequantize_rows", "pack_int4", "unpack_int4",
+    "kv_bits", "kv_carry_budget", "assert_kv_accumulator",
+]
+
+#: Engine-facing names for the KV page element type.
+KV_DTYPES = ("fp32", "int8", "int4")
+
+#: Smallest representable scale: an all-zero row quantizes to all-zero
+#: codes with this scale, so dequantization reproduces exact zeros.
+_SCALE_FLOOR = 1e-12
+
+
+def quantize_int8(g: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric per-tensor int8 with a *shared* (pre-agreed) scale."""
+    q = jnp.round(g.astype(jnp.float32) / scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8` (fp32 output)."""
+    return q.astype(jnp.float32) * scale
+
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int8 codes in [-8, 7] two-per-byte along the last axis.
+
+    ``q``: ``(..., D)`` int8 with ``D`` even.  Returns ``(..., D // 2)``
+    uint8 — element ``i`` holds codes ``2i`` (low nibble) and ``2i + 1``
+    (high nibble), each stored offset-binary (code + 8)."""
+    if q.shape[-1] % 2:
+        raise ValueError(f"pack_int4 needs an even last axis, "
+                         f"got {q.shape[-1]}")
+    lo = (q[..., 0::2] + 8).astype(jnp.uint8)
+    hi = (q[..., 1::2] + 8).astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_int4(u: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`: ``(..., D/2)`` uint8 -> ``(..., D)``
+    int8 codes in [-8, 7]."""
+    lo = (u & 0x0F).astype(jnp.int8) - 8
+    hi = (u >> 4).astype(jnp.int8) - 8
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(u.shape[:-1] + (u.shape[-1] * 2,))
+
+
+def kv_bits(codes) -> int:
+    """Bit width encoded by a KV code array's dtype: ``int8`` -> 8,
+    ``uint8`` (two packed nibbles) -> 4."""
+    dt = jnp.dtype(codes.dtype if hasattr(codes, "dtype") else codes)
+    if dt == jnp.dtype(jnp.int8):
+        return 8
+    if dt == jnp.dtype(jnp.uint8):
+        return 4
+    raise ValueError(f"not a KV code dtype: {dt} (expected int8 or uint8)")
+
+
+def quantize_rows(x: jnp.ndarray, bits: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row symmetric quantization over the LAST axis.
+
+    Each row (one token's features for one head) gets its own fp32 scale
+    ``amax(|row|) / qmax``, so freshly decoded rows can be written into a
+    quantized page pool one at a time — no page-wide requantization on
+    append, and copy-on-write moves codes and scales together.
+
+    Args:
+      x: ``(..., D)`` float rows.
+      bits: 8 (int8 codes in [-127, 127]) or 4 (codes in [-7, 7], packed
+        two per byte — ``D`` must be even).
+
+    Returns:
+      ``(codes, scale)``: codes ``(..., D)`` int8 for 8-bit or
+      ``(..., D // 2)`` uint8 for 4-bit, and ``scale`` ``(...,)`` fp32.
+    """
+    if bits not in (8, 4):
+        raise ValueError(f"bits must be 8 or 4, got {bits}")
+    qmax = 127 if bits == 8 else 7
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=-1)
+    scale = jnp.maximum(amax / qmax, _SCALE_FLOOR)
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -qmax, qmax)
+    q = q.astype(jnp.int8)
+    return (pack_int4(q) if bits == 4 else q), scale
+
+
+def dequantize_rows(codes: jnp.ndarray, scale: jnp.ndarray,
+                    out_dtype) -> jnp.ndarray:
+    """Inverse of :func:`quantize_rows`; bit width is read off
+    ``codes.dtype`` (:func:`kv_bits`).
+
+    Args:
+      codes: ``(..., D)`` int8 or ``(..., D/2)`` packed uint8 codes.
+      scale: ``(...,)`` per-row fp32 scales.
+      out_dtype: dtype of the dequantized rows (the attention compute
+        dtype — scores/softmax stay fp32 downstream regardless).
+    """
+    if kv_bits(codes) == 4:
+        codes = unpack_int4(codes)
+    out = codes.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+def kv_carry_budget(page_size: int, bits: int) -> CarryBudget:
+    """The paper's exact width plan for summing one KV page's quantized
+    rows: ``carry_budget(N=page_size, M=bits, k=2)`` — ``page_size``
+    operands of ``bits`` binary digits each."""
+    return carry_budget(page_size, bits, 2)
+
+
+def assert_kv_accumulator(page_size: int, bits: int,
+                          acc_bits: int = 32) -> CarryBudget:
+    """Build-time audit that a page-wide sum of quantized magnitudes fits
+    the integer carrier.
+
+    The exact worst case is ``result_digits`` magnitude bits plus one sign
+    bit (symmetric codes are signed); raises ``ValueError`` when that
+    exceeds ``acc_bits``, otherwise returns the :class:`CarryBudget` so
+    callers can log the audited widths."""
+    b = kv_carry_budget(page_size, bits)
+    need = b.result_digits + 1
+    if need > acc_bits:
+        raise ValueError(
+            f"page_size={page_size} x int{bits} rows need {need} "
+            f"accumulator bits ({b.result_digits} magnitude + sign), which "
+            f"overflows the int{acc_bits} carrier — shrink the page size")
+    return b

@@ -21,20 +21,12 @@ import jax.numpy as jnp
 
 from repro.dist.collectives import tree_psum
 from repro.dist.plan import make_reduction_plan
+# the shared audited implementation (also used by quantized KV pages);
+# re-exported here for backward compatibility
+from repro.models.quant_kv import dequantize_int8, quantize_int8
 
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean",
            "init_error_state"]
-
-
-def quantize_int8(g: jnp.ndarray, scale: jnp.ndarray
-                  ) -> jnp.ndarray:
-    """Symmetric per-tensor int8 with a *shared* (pre-agreed) scale."""
-    q = jnp.round(g.astype(jnp.float32) / scale)
-    return jnp.clip(q, -127, 127).astype(jnp.int8)
-
-
-def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return q.astype(jnp.float32) * scale
 
 
 def init_error_state(params: Any, n_shards: int) -> Any:

@@ -3,7 +3,8 @@ sampling + prefix-cache reuse + SLO-aware admission + speculative
 multi-token decode over the shared decode state (see
 :mod:`repro.serve.engine` and ``docs/serving.md``)."""
 from repro.serve.cache import (PagePool, PrefixTrie, copy_page, copy_slot,
-                               pageable, paged_state_specs, reset_slot,
+                               pageable, paged_state_specs,
+                               quant_state_specs, reset_slot,
                                slot_slice, slot_update, state_bytes,
                                state_zeros, supports_prefix)
 from repro.serve.engine import ServeEngine, auto_page_size
@@ -16,7 +17,8 @@ __all__ = [
     "ServeEngine", "auto_page_size", "Request", "Scheduler",
     "SamplingParams", "GREEDY", "sample_tokens",
     "PrefixTrie", "supports_prefix", "copy_slot",
-    "PagePool", "pageable", "paged_state_specs", "copy_page",
+    "PagePool", "pageable", "paged_state_specs", "quant_state_specs",
+    "copy_page",
     "PromptLookupDrafter", "propose_draft", "accept_tokens",
     "state_zeros", "slot_slice", "slot_update", "reset_slot", "state_bytes",
 ]

@@ -51,8 +51,8 @@ from repro.models.common import ParamSpec
 
 __all__ = ["state_zeros", "batch_axis", "slot_slice", "slot_update",
            "reset_slot", "copy_slot", "state_bytes", "supports_prefix",
-           "pageable", "paged_state_specs", "copy_page", "PagePool",
-           "PrefixTrie"]
+           "pageable", "paged_state_specs", "quant_state_specs",
+           "copy_page", "PagePool", "PrefixTrie"]
 
 
 def _is_spec(x) -> bool:
@@ -209,6 +209,50 @@ def paged_state_specs(specs: Any, page_size: int, num_pages: int) -> Any:
                          scale=s.scale)
 
     return jax.tree.map(conv, specs, is_leaf=_is_spec)
+
+
+def quant_state_specs(pspecs: Dict[str, ParamSpec], kv_dtype: str
+                      ) -> Dict[str, ParamSpec]:
+    """Rewrite a pooled (paged) spec tree into its quantized layout.
+
+    Every KV leaf of ``pspecs`` (a :func:`paged_state_specs` output —
+    a flat dict of ParamSpecs) becomes an integer *code* leaf plus an
+    fp32 ``<name>_scale`` sibling holding one symmetric scale per
+    (page, position, head) row — the last (feature) axis is the
+    quantization group (see :func:`repro.models.quant_kv.quantize_rows`).
+    Scale leaves keep the ``(phys_page, page_seq)`` axes, so every pooled
+    operation — :func:`state_zeros`, :func:`copy_page` copy-on-write,
+    gather/scatter through the page table — treats codes and scales
+    uniformly: a boundary-page copy moves both, by construction.
+
+    ``kv_dtype``: ``"int8"`` keeps leaf shapes (1 byte per element);
+    ``"int4"`` halves the last axis (two codes packed per uint8 byte —
+    requires an even feature extent, else ``ValueError``).  ``"fp32"``
+    returns ``pspecs`` unchanged."""
+    if kv_dtype == "fp32":
+        return pspecs
+    if kv_dtype not in ("int8", "int4"):
+        raise ValueError(f"kv_dtype must be one of ('fp32', 'int8', "
+                         f"'int4'), got {kv_dtype!r}")
+    out: Dict[str, ParamSpec] = {}
+    for name, s in pspecs.items():
+        if not _is_spec(s):
+            raise ValueError(f"quant_state_specs needs a flat dict of "
+                             f"ParamSpecs, got {type(s)} at {name!r}")
+        if kv_dtype == "int4":
+            feat = s.shape[-1]
+            if feat % 2:
+                raise ValueError(
+                    f"kv_dtype='int4' packs two codes per byte, but leaf "
+                    f"{name!r} has an odd feature extent {feat}")
+            shape = s.shape[:-1] + (feat // 2,)
+            dtype = jnp.uint8
+        else:
+            shape, dtype = s.shape, jnp.int8
+        out[name] = ParamSpec(shape, s.axes, dtype=dtype, init="zeros")
+        out[name + "_scale"] = ParamSpec(s.shape[:-1], s.axes[:-1],
+                                         dtype=jnp.float32, init="zeros")
+    return out
 
 
 def _leaf_page_copy(leaf: jnp.ndarray, spec: ParamSpec, src, dst

@@ -74,6 +74,7 @@ import numpy as np
 
 from repro.models.common import shape_structs
 from repro.models.registry import get_api
+from repro.models import quant_kv
 from repro.serve import cache
 from repro.serve.sampling import (GREEDY, SamplingParams, sample_tokens,
                                   sampling_lanes)
@@ -149,6 +150,16 @@ class ServeEngine:
         back to 0) for families without a position-wise rewindable decode
         state (SSM/hybrid) — mirror of the ``paged_kv`` auto gate.
       spec_ngram: longest history n-gram the drafter anchors on.
+      kv_dtype: element type of the pooled KV pages — ``"fp32"`` (default,
+        bit-exact full precision), ``"int8"`` or ``"int4"`` (per-row
+        symmetric codes + fp32 scales, dequantized inside the decode
+        kernel; see :mod:`repro.models.quant_kv`).  Quantization is
+        paged-only: it auto-falls back to ``"fp32"`` when the engine
+        resolves to the contiguous path (SSM/hybrid families — mirror of
+        the ``paged_kv`` auto gate), and raises a clear error when
+        combined with an explicit ``paged_kv=False``.  The page-sum
+        accumulator width is audited at build time with the paper's exact
+        carry math (:func:`repro.models.quant_kv.assert_kv_accumulator`).
     """
 
     def __init__(self, cfg, params, *, max_slots: int = 4,
@@ -158,7 +169,8 @@ class ServeEngine:
                  paged_kv: Optional[bool] = None,
                  pool_pages: Optional[int] = None,
                  trie_capacity: Optional[int] = None,
-                 spec_k: int = 0, spec_ngram: int = 3):
+                 spec_k: int = 0, spec_ngram: int = 3,
+                 kv_dtype: str = "fp32"):
         api = get_api(cfg)
         if api.decode_step is None or api.prefill_chunk is None:
             raise ValueError(f"{cfg.arch_id} has no decode path")
@@ -195,6 +207,10 @@ class ServeEngine:
         self.spec_k = spec_k
         self.drafter = (PromptLookupDrafter(ngram_max=spec_ngram)
                         if spec_k else None)
+        if kv_dtype not in quant_kv.KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {quant_kv.KV_DTYPES},"
+                             f" got {kv_dtype!r}")
+        requested_paged = paged_kv
         if paged_kv is None:
             paged_kv = cache.pageable(self.specs, page_size)
         elif paged_kv:
@@ -211,6 +227,17 @@ class ServeEngine:
                     f"an adjacent (batch, kv_seq) axis pair — SSM/hybrid "
                     f"families are not)")
         self.paged = bool(paged_kv)
+        if kv_dtype != "fp32":
+            if requested_paged is False:
+                raise ValueError(
+                    f"kv_dtype={kv_dtype!r} quantizes pooled KV pages, "
+                    f"which requires the paged engine — incompatible with "
+                    f"paged_kv=False")
+            if not self.paged:
+                # same silent auto-gate as paged_kv: SSM/hybrid state (or a
+                # page_size that resolved to 0) has no pages to quantize
+                kv_dtype = "fp32"
+        self.kv_dtype = kv_dtype
         if self.paged:
             self.max_pages = max_seq // page_size
             if pool_pages is None:
@@ -218,6 +245,12 @@ class ServeEngine:
             self.pool = cache.PagePool(pool_pages + 1)   # +1: scratch
             self.pspecs = cache.paged_state_specs(
                 self.specs, page_size, pool_pages + 1)
+            if kv_dtype != "fp32":
+                # build-time audit: page_size int{bits} magnitudes must sum
+                # exactly inside the int32 carrier (paper's carry math)
+                quant_kv.assert_kv_accumulator(
+                    page_size, 8 if kv_dtype == "int8" else 4)
+                self.pspecs = cache.quant_state_specs(self.pspecs, kv_dtype)
             self.state = cache.state_zeros(self.pspecs)
             # per-slot page tables; 0 = the scratch page (unallocated)
             self.table = np.zeros((max_slots, self.max_pages), np.int32)
@@ -235,6 +268,10 @@ class ServeEngine:
             # so eviction/preemption decisions consult the shared pages
             # (probe only: must not refresh trie recency)
             self.scheduler.reuse_probe = self._probe_reuse
+        #: when True, every decode dispatch appends its live-lane fp32
+        #: logits to ``logit_trace`` (the bench's quantization-drift probe)
+        self.trace_logits = False
+        self.logit_trace: List[np.ndarray] = []
         self._exe: Dict[Any, Any] = {}
         self._warm: set = set()
         self._chunk_ewma: Optional[float] = None
@@ -325,6 +362,14 @@ class ServeEngine:
                                if self.prefix is not None else 0)
         s["pages_in_use"] = self.pool.used_count if self.paged else 0
         s["pool_pages"] = self.pool.num_pages - 1 if self.paged else 0
+        # capacity accounting for the kv_dtype knob: bytes one resident
+        # slot's full KV row occupies, and the whole pool's footprint —
+        # quantized pages shrink both at fixed page counts
+        s["kv_dtype"] = self.kv_dtype
+        s["kv_bytes_per_slot"] = (self.page_bytes * self.max_pages
+                                  if self.paged else self.slot_bytes)
+        s["pool_bytes"] = cache.state_bytes(
+            self.pspecs if self.paged else self.specs)
         s["slo_met"] = self.scheduler.slo_met_count
         s["slo_missed"] = self.scheduler.slo_missed_count
         return s
@@ -927,11 +972,13 @@ class ServeEngine:
         live = list(self.scheduler.active)
 
         t0 = time.perf_counter()
-        nxt, _, self.state = exe(self.params, self.state, toks_d, pos_d,
-                                 *pages_extra,
-                                 temps, top_ks, top_ps, seeds, idxs)
+        nxt, lg, self.state = exe(self.params, self.state, toks_d, pos_d,
+                                  *pages_extra,
+                                  temps, top_ks, top_ps, seeds, idxs)
         nxt = np.asarray(nxt)
         dt = time.perf_counter() - t0
+        if self.trace_logits:
+            self.logit_trace.append(np.asarray(lg)[live])
         self.stats["decode_s"] += dt
         self.stats["decode_tokens"] += len(live)
         self.stats["decode_steps"] += 1
@@ -1032,11 +1079,13 @@ class ServeEngine:
         live = list(self.scheduler.active)
 
         t0 = time.perf_counter()
-        nxt, _, self.state = exe(self.params, self.state, toks_d, pos_d,
-                                 *pages_extra, nspec_d, temps, top_ks,
-                                 top_ps, seeds, idxs)
+        nxt, lg, self.state = exe(self.params, self.state, toks_d, pos_d,
+                                  *pages_extra, nspec_d, temps, top_ks,
+                                  top_ps, seeds, idxs)
         nxt = np.asarray(nxt)
         dt = time.perf_counter() - t0
+        if self.trace_logits:
+            self.logit_trace.append(np.asarray(lg)[live])
 
         emitted: Dict[int, List[int]] = {}
         n_emitted = 0

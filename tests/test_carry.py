@@ -136,6 +136,47 @@ def test_carry_budget_consistency(n, m):
     assert not b.fits(b.result_digits - 1)
 
 
+# small (N, M, k) grid where every operand combination is enumerable —
+# the exact fields must match what exhaustion over ALL inputs observes
+BRUTE_GRID = [(n, m, k)
+              for k in (2, 3, 10) for m in (1, 2, 3) for n in (2, 3, 4, 5)
+              if (k ** m) ** n <= 100_000]
+
+
+@pytest.mark.parametrize("n,m,k", BRUTE_GRID)
+def test_carry_budget_vs_brute_force(n, m, k):
+    """Exhaustively enumerate every N-operand M-digit base-k addition and
+    check carry_budget/carry_digits report exactly the observed maxima."""
+    import itertools
+    top = k ** m
+    max_total = max_carry = 0
+    for ops in itertools.product(range(top), repeat=n):
+        total = sum(ops)
+        max_total = max(max_total, total)
+        max_carry = max(max_carry, total // top)   # carry OUT of column M
+    b = ct.carry_budget(n, m, k)
+    assert b.carry_value_exact == max_carry
+    assert b.result_digits == ct.num_digits(max_total, k)
+    assert ct.carry_digits(n, m, k) == (ct.num_digits(max_carry, k)
+                                        if max_carry else 0)
+    assert max_total < k ** b.result_digits
+
+
+@pytest.mark.parametrize("page,digits", [(16, 12), (32, 13), (64, 14),
+                                         (128, 15)])
+def test_kv_accumulator_widths_int8(page, digits):
+    """Pin the audited widths the quantized-KV split-K combine relies on:
+    page_size int8 rows (M=8 binary digits) sum exactly in ``digits``
+    magnitude bits — comfortably inside the int32 carrier with sign."""
+    b = ct.carry_budget(page, 8, 2)
+    assert b.result_digits == digits
+    assert b.result_digits + 1 <= 32
+
+
+def test_kv_accumulator_width_int4():
+    assert ct.carry_budget(128, 4, 2).result_digits == 11
+
+
 @given(x=st.integers(0, 10 ** 24), k=BASES)
 def test_digits_roundtrip(x, k):
     assert ct.from_digits(ct.digits(x, k), k) == x
