@@ -54,7 +54,7 @@ from repro.configs.registry import get_config
 from repro.launch.serve import generate
 from repro.models.common import init_params, param_count
 from repro.models.registry import get_api
-from repro.serve import ServeEngine
+from repro.serve import EngineConfig, ServeEngine
 from repro.serve.spec import propose_draft
 
 from benchmarks.common import print_rows, section
@@ -96,6 +96,10 @@ SPEC_SEQ = 768
 # reads below break-even, so one noisy window cannot fail the floor.
 ADMIT_ROUNDS = 2
 ADMIT_ROUNDS_MAX = 6
+# The hand-set engine configuration every workload derives from via
+# .replace(...) — also the autotune baseline point (bench_autotune sweeps
+# around it and asserts the best swept point matches or beats it).
+BASE_CONFIG = EngineConfig(max_slots=SLOTS, prefill_chunk=PREFILL_CHUNK)
 
 
 def _prefix_workload(cfg, params, prompts, *, prefix_cache: bool,
@@ -110,10 +114,9 @@ def _prefix_workload(cfg, params, prompts, *, prefix_cache: bool,
     rounds) without recompiling."""
     if max_seq is None:
         max_seq = max(16, -(-(max(len(p) for p in prompts) + GEN) // 16) * 16)
-    eng = ServeEngine(cfg, params, max_slots=SLOTS, max_seq=max_seq,
-                      prefill_chunk=PREFILL_CHUNK, page_size=page_size,
-                      prefix_cache=prefix_cache, min_prefix=8,
-                      paged_kv=paged)
+    eng = ServeEngine(cfg, params, config=BASE_CONFIG.replace(
+        max_seq=max_seq, page_size=page_size, prefix_cache=prefix_cache,
+        min_prefix=8, paged_kv=paged))
     reqs = [eng.submit(p, GEN) for p in prompts]
     eng.warmup()
     eng.run()
@@ -166,9 +169,8 @@ def _spec_workload(cfg, params, prompts, *, spec_k: int,
                    max_seq: int, kv_dtype: str = "fp32") -> dict:
     """Serve the continuation workload greedily with ``spec_k`` drafts per
     step (0 = the sequential baseline) and return decode-side stats."""
-    eng = ServeEngine(cfg, params, max_slots=SLOTS, max_seq=max_seq,
-                      prefill_chunk=PREFILL_CHUNK, spec_k=spec_k,
-                      kv_dtype=kv_dtype)
+    eng = ServeEngine(cfg, params, config=BASE_CONFIG.replace(
+        max_seq=max_seq, spec_k=spec_k, kv_dtype=kv_dtype))
     reqs = [eng.submit(p, SPEC_GEN) for p in prompts]
     eng.warmup()
     eng.run()
@@ -193,10 +195,9 @@ def _quant_workload(cfg, params, prompts, *, kv_dtype: str, max_seq: int,
     """Serve the shared-prefix traffic through a paged engine with
     ``kv_dtype`` KV pages, tracing every decode step's logits (the
     quantization-drift probe), and return capacity + throughput stats."""
-    eng = ServeEngine(cfg, params, max_slots=SLOTS, max_seq=max_seq,
-                      prefill_chunk=PREFILL_CHUNK, page_size=page_size,
-                      prefix_cache=True, min_prefix=8, paged_kv=True,
-                      kv_dtype=kv_dtype)
+    eng = ServeEngine(cfg, params, config=BASE_CONFIG.replace(
+        max_seq=max_seq, page_size=page_size, prefix_cache=True,
+        min_prefix=8, paged_kv=True, kv_dtype=kv_dtype))
     eng.trace_logits = True
     reqs = [eng.submit(list(p), GEN) for p in prompts]
     eng.warmup()
@@ -257,8 +258,8 @@ def run() -> dict:
     }
 
     # ---- engine: chunked prefill + continuous batching (+ paged split-K)
-    eng = ServeEngine(cfg, params, max_slots=SLOTS, max_seq=max_seq,
-                      prefill_chunk=PREFILL_CHUNK)
+    eng = ServeEngine(cfg, params, config=BASE_CONFIG.replace(
+        max_seq=max_seq))
     reqs = [eng.submit(pr, GEN) for pr in prompts]
     eng.warmup()
     eng.run()
@@ -403,9 +404,8 @@ def run() -> dict:
             f"max_seq {sp_seq}), k={SPEC_K} prompt-lookup drafts/step")
     cand = [rng.integers(0, cfg.vocab, (SPEC_PROMPT,)).tolist()
             for _ in range(SPEC_CANDIDATES)]
-    setup = ServeEngine(cfg, params, max_slots=SLOTS,
-                        max_seq=SPEC_PROMPT + SPEC_TURN1,
-                        prefill_chunk=PREFILL_CHUNK)
+    setup = ServeEngine(cfg, params, config=BASE_CONFIG.replace(
+        max_seq=SPEC_PROMPT + SPEC_TURN1))
     t1_reqs = [setup.submit(p, SPEC_TURN1) for p in cand]
     setup.warmup()
     setup.run()

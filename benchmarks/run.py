@@ -15,9 +15,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_adders, bench_carry_tables, bench_cla_vs_lut,
-                        bench_collectives, bench_lemma3, bench_moa_kernels,
-                        bench_neuron, bench_serve, bench_transition)
+from benchmarks import (bench_adders, bench_autotune, bench_carry_tables,
+                        bench_cla_vs_lut, bench_collectives, bench_lemma3,
+                        bench_moa_kernels, bench_neuron, bench_serve,
+                        bench_transition)
 
 BENCHES = {
     "carry_tables": (bench_carry_tables, "Tables 1a/1b/1c + 2"),
@@ -29,6 +30,7 @@ BENCHES = {
     "neuron": (bench_neuron, "§8 neurons"),
     "collectives": (bench_collectives, "§7 tree collectives"),
     "serve": (bench_serve, "chunked-prefill continuous-batching engine"),
+    "autotune": (bench_autotune, "EngineConfig knob sweep + Pareto front"),
 }
 
 

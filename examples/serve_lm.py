@@ -21,7 +21,7 @@ from repro.configs.registry import get_config, list_archs
 from repro.launch.serve import generate, serve_batch
 from repro.models.common import init_params, param_count
 from repro.models.registry import get_api
-from repro.serve import SamplingParams
+from repro.serve import EngineConfig, SamplingParams
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -43,8 +43,10 @@ def main(argv=None) -> int:
     lens = rng.integers(4, 20, args.requests)
     prompts = [rng.integers(0, cfg.vocab, (n,)).tolist() for n in lens]
     gens = [int(g) for g in rng.integers(4, args.gen + 1, args.requests)]
+    # one typed config drives both waves (max_seq=0: derive per workload)
+    econfig = EngineConfig(max_slots=args.slots, prefill_chunk=16)
     outs, stats = serve_batch(cfg, params, prompts, gens,
-                              slots=args.slots, prefill_chunk=16)
+                              config=econfig, max_seq=0)
     print(f"{args.requests} requests on {args.slots} slots: "
           f"prefill {stats['prefill_tok_s']:.0f} tok/s  "
           f"decode {stats['decode_tok_s']:.0f} tok/s  "
@@ -71,8 +73,8 @@ def main(argv=None) -> int:
               for _ in range(args.slots + 1)]
     sampled = [SamplingParams(temperature=0.8, top_p=0.95, seed=100 + i)
                for i in range(len(shared))]
-    outs2, st2 = serve_batch(cfg, params, shared, 8, slots=args.slots,
-                             prefill_chunk=16, sampling=sampled)
+    outs2, st2 = serve_batch(cfg, params, shared, 8, config=econfig,
+                             max_seq=0, sampling=sampled)
     print(f"shared-prefix wave: {st2['prefix_hits']:.0f} prefix hits, "
           f"{st2['prefix_reused_tokens']:.0f} tokens reused "
           f"(hit rate {st2['prefix_hit_rate']:.0%}; "

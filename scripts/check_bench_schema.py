@@ -69,6 +69,16 @@ REQUIRED = {
     ],
     "carry_tables": ["table_1a", "table_1b", "table_1c", "table_2",
                      "cells_checked"],
+    "autotune": [
+        "arch", "max_seq", "grid", "objectives", "compile_excluded",
+        "n_points", "n_valid", "front", "front_size", "points",
+        "baseline.config", "baseline.metrics.decode_tok_s",
+        "baseline.metrics.pool_bytes",
+        "baseline.metrics.decode_step_p99_s",
+        "best.config", "best.metrics.decode_tok_s",
+        "best.metrics.pool_bytes", "best.metrics.decode_step_p99_s",
+        "best_vs_baseline",
+    ],
 }
 
 

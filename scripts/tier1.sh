@@ -48,6 +48,11 @@ python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
 python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
     --slots 2 --prompt-len 12 --gen 12 --spec-k 3 --kv-dtype int8
 
+# Autotune smoke: a 2x2 EngineConfig micro-grid through the sweep runner
+# + Pareto front (module main, NOT benchmarks.run — the smoke must never
+# overwrite the committed 16-point results/BENCH_autotune.json).
+python -m benchmarks.bench_autotune --smoke
+
 # Perf-trajectory schema: every results/BENCH_*.json must keep its
 # required metric keys (a refactor that silently drops one fails here,
 # not three PRs later when someone tries to compare against it).

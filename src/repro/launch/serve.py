@@ -30,9 +30,10 @@ import numpy as np
 from repro.configs.registry import get_config, list_archs
 from repro.models.common import init_params
 from repro.models.registry import get_api
-from repro.serve import SamplingParams, ServeEngine, state_zeros
+from repro.serve import (EngineConfig, SamplingParams, ServeEngine,
+                         add_cli_args, config_from_args, state_zeros)
 
-__all__ = ["main", "generate", "serve_batch"]
+__all__ = ["main", "generate", "serve_batch", "batch_config"]
 
 
 def generate(cfg, params, prompts: np.ndarray, gen: int,
@@ -88,36 +89,71 @@ def generate(cfg, params, prompts: np.ndarray, gen: int,
         "decode_tok_s": b * gen / max(t_decode, 1e-9)}
 
 
-def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
-                max_seq: int = 0, prefill_chunk: int = 32,
-                page_size=None, sampling=None, slo_ms=None,
-                prefix_cache: bool = True, paged_kv=None,
-                pool_pages=None, spec_k: int = 0,
-                kv_dtype: str = "fp32"):
+def batch_config(prompts, gens, *, config=None, slots=None, max_seq=None,
+                 **knobs) -> EngineConfig:
+    """Resolve the ``serve_batch`` knob surface into ONE
+    :class:`~repro.serve.EngineConfig` (pure planning — no engine built,
+    so tests can assert every knob lands without compiling a model).
+
+    Args:
+      prompts: list of 1-D int token lists (sizes the derived capacity).
+      gens: per-request generation lengths (int or list).
+      config: a ready-made :class:`~repro.serve.EngineConfig`; mutually
+        exclusive with ``knobs``.
+      slots: convenience alias for ``max_slots`` (the historical
+        ``serve_batch`` spelling); overrides the config when given.
+      max_seq: per-slot cache capacity.  ``0`` forces derivation from the
+        longest request (padded to 16); ``None`` (default) derives too
+        unless an explicit ``config`` was given (whose ``max_seq`` then
+        stands); any other value is used as-is.
+      knobs: any other :class:`~repro.serve.EngineConfig` field by name
+        (``prefill_chunk``, ``page_size``, ``min_prefix``, ``spec_k``,
+        ``spec_ngram``, ``trie_capacity``, ``kv_dtype``, ...).
+
+    Returns:
+      The fully-populated (but unresolved) config the engine will run.
+    """
+    if config is not None and knobs:
+        raise TypeError(
+            f"pass engine knobs via config= OR as keywords, not both "
+            f"(got config= plus {sorted(knobs)})")
+    ecfg = config if config is not None else EngineConfig(**knobs)
+    if slots is not None:
+        ecfg = ecfg.replace(max_slots=slots)
+    if max_seq:
+        ecfg = ecfg.replace(max_seq=max_seq)
+    elif max_seq == 0 or config is None:
+        if isinstance(gens, int):
+            gens = [gens] * len(prompts)
+        need = max(len(p) + g for p, g in zip(prompts, gens))
+        ecfg = ecfg.replace(max_seq=max(16, -(-need // 16) * 16))
+    return ecfg
+
+
+def serve_batch(cfg, params, prompts, gens, *, config=None, slots=None,
+                max_seq=None, sampling=None, slo_ms=None, **knobs):
     """Run a list of requests through the engine; returns (outputs, stats).
 
     Args:
       cfg: model config; params: model parameters.
       prompts: list of 1-D int token lists.
       gens: per-request generation lengths (int or list).
-      slots: decode batch width; max_seq: per-slot cache capacity
-        (0 = derived from the longest request, padded to 16).
-      prefill_chunk: max tokens per prefill dispatch.
-      page_size: KV page size for paged split-K decode (None = auto).
+      config: a ready-made :class:`~repro.serve.EngineConfig` describing
+        every engine knob; mutually exclusive with passing knobs as
+        keywords.
+      slots: decode batch width (alias for ``max_slots``).
+      max_seq: per-slot cache capacity (``0`` or the default ``None`` =
+        derived from the longest request, padded to 16; with an explicit
+        ``config``, ``None`` keeps ``config.max_seq`` — see
+        :func:`batch_config`).
       sampling: per-request :class:`SamplingParams`, one shared instance,
         or None for greedy decoding everywhere.
       slo_ms: per-request completion-latency SLO in ms (scalar or list;
         None = no SLO).
-      prefix_cache: enable prefix-cache reuse across requests.
-      paged_kv: paged KV allocation (page tables + refcounted zero-copy
-        prefix sharing); None = engine auto, False = contiguous slots.
-      pool_pages: physical page-pool size when paged (None = one full
-        row per slot; smaller overcommits and defers on exhaustion).
-      spec_k: speculative-decode draft budget per slot per step (0 =
-        sequential decode; auto-off for SSM/hybrid families).
-      kv_dtype: KV page element type — "fp32" (default), "int8" or
-        "int4" quantized pages (paged engines only; auto-falls back to
-        fp32 for families without pageable state).
+      knobs: any other :class:`~repro.serve.EngineConfig` field by name —
+        ``prefill_chunk``, ``page_size``, ``prefix_cache``,
+        ``min_prefix``, ``paged_kv``, ``pool_pages``, ``trie_capacity``,
+        ``spec_k``, ``spec_ngram``, ``kv_dtype``.
 
     Returns:
       (outputs, stats): per-request generated-token lists in submission
@@ -130,14 +166,9 @@ def serve_batch(cfg, params, prompts, gens, *, slots: int = 4,
         sampling = [sampling] * n
     if slo_ms is None or isinstance(slo_ms, (int, float)):
         slo_ms = [slo_ms] * n
-    if not max_seq:
-        max_seq = max(len(p) + g for p, g in zip(prompts, gens))
-        max_seq = max(16, -(-max_seq // 16) * 16)        # pad to 16
-    eng = ServeEngine(cfg, params, max_slots=slots, max_seq=max_seq,
-                      prefill_chunk=prefill_chunk, page_size=page_size,
-                      prefix_cache=prefix_cache, paged_kv=paged_kv,
-                      pool_pages=pool_pages, spec_k=spec_k,
-                      kv_dtype=kv_dtype)
+    ecfg = batch_config(prompts, gens, config=config, slots=slots,
+                        max_seq=max_seq, **knobs)
+    eng = ServeEngine(cfg, params, config=ecfg)
     # warm up BEFORE submitting: the SLO clock starts at submission, and
     # AOT compile / first-execution setup is engine bring-up, not request
     # latency (same reason the throughput timers exclude it)
@@ -153,14 +184,9 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="llama3.2-3b", choices=list_archs())
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16,
                     help="mean prompt length (lengths are staggered)")
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--prefill-chunk", type=int, default=32)
-    ap.add_argument("--page", type=int, default=None,
-                    help="KV page size for the split-K decode combine "
-                         "(default auto; 0 = dense)")
     ap.add_argument("--per-token", action="store_true",
                     help="run the legacy per-token baseline loop instead")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -172,28 +198,12 @@ def main(argv=None) -> int:
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request completion-latency SLO in ms "
                          "(enables deadline-aware admission)")
-    ap.add_argument("--no-prefix-cache", action="store_true",
-                    help="disable prefix-cache reuse across requests")
-    ap.add_argument("--no-paged-kv", action="store_true",
-                    help="force contiguous slot allocation (default: "
-                         "paged page-table allocation when supported)")
-    ap.add_argument("--pool-pages", type=int, default=None,
-                    help="physical page-pool size for paged allocation "
-                         "(default: one full row per slot)")
-    ap.add_argument("--kv-dtype", default="fp32",
-                    choices=("fp32", "int8", "int4"),
-                    help="KV page element type: quantized int8/int4 pages "
-                         "shrink the pool (per-row codes + fp32 scales, "
-                         "dequantized in-kernel; paged engines only — "
-                         "auto-falls back to fp32 for SSM/hybrid)")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="speculative-decode draft budget per slot per "
-                         "step (prompt-lookup drafting + one K+1-wide "
-                         "verify dispatch; auto-off for SSM/hybrid)")
-    ap.add_argument("--no-spec", action="store_true",
-                    help="disable speculative decode (sequential "
-                         "one-token decode steps)")
     ap.add_argument("--seed", type=int, default=0)
+    # every engine knob comes from the ONE shared EngineConfig binding
+    # (--slots, --max-seq, --prefill-chunk, --page, --min-prefix,
+    #  --no-prefix-cache, --no-paged-kv, --pool-pages, --trie-capacity,
+    #  --spec-k/--no-spec, --spec-ngram, --kv-dtype)
+    add_cli_args(ap)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -206,10 +216,10 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(args.seed)
 
     if args.per_token:
-        prompts = rng.integers(0, cfg.vocab,
-                               (args.slots, args.prompt_len)).astype(np.int32)
+        prompts = rng.integers(
+            0, cfg.vocab, (args.max_slots, args.prompt_len)).astype(np.int32)
         ids, stats = generate(cfg, params, prompts, args.gen)
-        print(f"[per-token] arch={cfg.arch_id} batch={args.slots} "
+        print(f"[per-token] arch={cfg.arch_id} batch={args.max_slots} "
               f"prompt={args.prompt_len} gen={args.gen}")
         print(f"prefill {stats['prefill_s']:.2f}s "
               f"({stats['prefill_tok_s']:.1f} tok/s)  "
@@ -229,17 +239,11 @@ def main(argv=None) -> int:
                               top_k=args.top_k, top_p=args.top_p,
                               seed=args.seed)
     outs, stats = serve_batch(cfg, params, prompts, args.gen,
-                              slots=args.slots,
-                              prefill_chunk=args.prefill_chunk,
-                              page_size=args.page,
-                              sampling=sampling, slo_ms=args.slo_ms,
-                              prefix_cache=not args.no_prefix_cache,
-                              paged_kv=False if args.no_paged_kv else None,
-                              pool_pages=args.pool_pages,
-                              spec_k=0 if args.no_spec else args.spec_k,
-                              kv_dtype=args.kv_dtype)
+                              config=config_from_args(args),
+                              max_seq=args.max_seq,
+                              sampling=sampling, slo_ms=args.slo_ms)
     print(f"[engine] arch={cfg.arch_id} requests={args.requests} "
-          f"slots={args.slots} gen={args.gen} "
+          f"slots={args.max_slots} gen={args.gen} "
           f"prompt_lens={lens} sampling={sampling}")
     print(f"prefill {stats['prefill_s']:.2f}s "
           f"({stats['prefill_tok_s']:.1f} tok/s)  "

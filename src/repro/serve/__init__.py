@@ -7,6 +7,8 @@ from repro.serve.cache import (PagePool, PrefixTrie, copy_page, copy_slot,
                                quant_state_specs, reset_slot,
                                slot_slice, slot_update, state_bytes,
                                state_zeros, supports_prefix)
+from repro.serve.config import (EngineConfig, KV_DTYPES, add_cli_args,
+                                config_from_args, knob_table_md)
 from repro.serve.engine import ServeEngine, auto_page_size
 from repro.serve.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serve.scheduler import Request, Scheduler
@@ -15,6 +17,8 @@ from repro.serve.spec import (PromptLookupDrafter, accept_tokens,
 
 __all__ = [
     "ServeEngine", "auto_page_size", "Request", "Scheduler",
+    "EngineConfig", "KV_DTYPES", "add_cli_args", "config_from_args",
+    "knob_table_md",
     "SamplingParams", "GREEDY", "sample_tokens",
     "PrefixTrie", "supports_prefix", "copy_slot",
     "PagePool", "pageable", "paged_state_specs", "quant_state_specs",

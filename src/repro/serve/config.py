@@ -1,0 +1,320 @@
+"""Typed serve-engine configuration: every knob, validated, in ONE place.
+
+:class:`EngineConfig` is the single source of truth for the engine's knob
+space.  Before this module existed the same eleven keyword arguments were
+re-declared (and their validation re-implemented, divergently) in three
+layers — ``ServeEngine.__init__``, ``serve_batch``, and the
+``repro.launch.serve`` CLI — and two of the layers silently dropped knobs
+the engine accepted.  Now every consumer builds the same dataclass:
+
+* :meth:`EngineConfig.validate` — the model-independent constraints
+  (slot/capacity bounds, page divisibility, ``kv_dtype`` membership and
+  its conflict with an explicit ``paged_kv=False``).  Pure Python, no
+  jax import, so configs are checkable host-side.
+* :meth:`EngineConfig.resolve` — the model-dependent resolution: auto
+  page size, family gating (paged allocation, speculative decode and the
+  prefix cache auto-off for families whose state cannot support them),
+  the quantization fallback, and the default pool size.  Returns a new,
+  fully-concrete config in which no field is ``None``-as-auto anymore.
+* :meth:`EngineConfig.replace` — derive sweep points
+  (``cfg.replace(spec_k=4)``); the constructor ``repro.tune`` is built on.
+* :func:`add_cli_args` / :func:`config_from_args` — one argparse binding
+  shared by every CLI, generated from the same field list.
+* :func:`knob_table_md` — the ``docs/serving.md`` knob table, generated
+  from the field metadata so the docs cannot drift from the code.
+
+This module adds no jax dependency of its own — construction, validation
+and CLI binding are pure host-side Python, and
+:meth:`EngineConfig.resolve` imports the model registry lazily only when
+called — so planning a sweep of configs costs no device work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import field
+from typing import Optional, Tuple
+
+__all__ = ["EngineConfig", "KV_DTYPES", "auto_page_size", "knob_table_md",
+           "add_cli_args", "config_from_args"]
+
+#: KV-page element types the engine accepts.  Kept in lock-step with
+#: ``repro.models.quant_kv.KV_DTYPES`` (that module needs jax at import;
+#: this one must not) — ``tests/test_config.py`` pins the two tuples
+#: equal.
+KV_DTYPES: Tuple[str, ...] = ("fp32", "int8", "int4")
+
+
+def auto_page_size(max_seq: int) -> int:
+    """Largest power-of-two page in [16, 128] that divides ``max_seq`` and
+    leaves at least two pages (a 1-page split-K combine is a no-op)."""
+    for p in (128, 64, 32, 16):
+        if max_seq % p == 0 and max_seq // p >= 2:
+            return p
+    return 0
+
+
+def _knob(default, doc: str):
+    """Dataclass field carrying its knob-table ``doc`` line (and CLI help)
+    as metadata; ``default`` is the engine default."""
+    return field(default=default, metadata={"doc": doc})
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """The serve engine's complete knob space as one typed, frozen value.
+
+    Field defaults are the engine defaults; ``None`` means *auto* for
+    ``page_size`` / ``paged_kv`` / ``pool_pages`` (resolved against a
+    model config by :meth:`resolve`) and *unbounded* for
+    ``trie_capacity``.  See ``docs/serving.md`` for the knob table this
+    class generates and ``docs/autotune.md`` for sweeping it.
+    """
+
+    max_slots: int = _knob(
+        4, "decode batch width (concurrent requests)")
+    max_seq: int = _knob(
+        128, "per-slot cache capacity (context + generated tokens)")
+    prefill_chunk: int = _knob(
+        32, "max tokens per prefill dispatch (shape buckets are powers "
+           "of two up to it)")
+    page_size: Optional[int] = _knob(
+        None, "KV page for the split-K decode combine and the paged "
+              "allocator (`None` auto, `0` dense; must divide `max_seq`)")
+    prefix_cache: bool = _knob(
+        True, "enable prefix reuse (auto-off for non-positional state)")
+    min_prefix: int = _knob(
+        8, "smallest resident-prefix match worth reusing")
+    paged_kv: Optional[bool] = _knob(
+        None, "paged allocation (`None` auto, `False` contiguous "
+              "copy_slot)")
+    pool_pages: Optional[int] = _knob(
+        None, "physical page-pool size (`None` = one full row per slot; "
+              "smaller overcommits)")
+    trie_capacity: Optional[int] = _knob(
+        None, "LRU bound on prefix-trie entries (`None` = unbounded)")
+    spec_k: int = _knob(
+        0, "speculative draft budget per slot per step (`0` = "
+           "sequential; auto-off for SSM/hybrid)")
+    spec_ngram: int = _knob(
+        3, "longest history n-gram the prompt-lookup drafter anchors on")
+    kv_dtype: str = _knob(
+        "fp32", "KV page element type: `\"fp32\"` (default), `\"int8\"` "
+                "or `\"int4\"` quantized pages (paged engines only; "
+                "auto-falls back to fp32 for SSM/hybrid, errors with "
+                "explicit `paged_kv=False`)")
+
+    # ------------------------------------------------------------ checks
+    def validate(self) -> "EngineConfig":
+        """Check every model-independent constraint; returns ``self`` so
+        calls chain.  Raises ``ValueError`` with the same messages the
+        engine constructor historically raised (tests pin them):
+        slot/capacity/chunk lower bounds, ``spec_k >= 0``, ``kv_dtype``
+        membership in :data:`KV_DTYPES`, quantization's conflict with an
+        explicit ``paged_kv=False``, and explicit-``page_size``
+        divisibility of ``max_seq``."""
+        if self.max_slots < 1:
+            raise ValueError("need at least one slot")
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
+        if self.spec_ngram < 1:
+            raise ValueError(
+                f"spec_ngram must be >= 1, got {self.spec_ngram}")
+        if self.pool_pages is not None and self.pool_pages < 1:
+            raise ValueError(
+                f"pool_pages must be >= 1, got {self.pool_pages}")
+        if self.trie_capacity is not None and self.trie_capacity < 1:
+            raise ValueError(
+                f"trie_capacity must be >= 1, got {self.trie_capacity}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {KV_DTYPES},"
+                             f" got {self.kv_dtype!r}")
+        if self.kv_dtype != "fp32" and self.paged_kv is False:
+            raise ValueError(
+                f"kv_dtype={self.kv_dtype!r} quantizes pooled KV pages, "
+                f"which requires the paged engine — incompatible with "
+                f"paged_kv=False")
+        if self.page_size and self.max_seq % self.page_size:
+            raise ValueError(
+                f"page_size={self.page_size} must divide "
+                f"max_seq={self.max_seq} (the cache is allocated in whole "
+                f"pages; pick a page size that divides the capacity, or "
+                f"pass page_size=None to let auto_page_size choose one)")
+        return self
+
+    def resolve(self, model_cfg) -> "EngineConfig":
+        """Resolve every auto knob against ``model_cfg`` and return a new,
+        fully-concrete config (no ``None``-as-auto fields left).
+
+        Runs :meth:`validate` first, then applies the model-dependent
+        gates in the same order the engine constructor historically did:
+
+        * the family must have a decode path at all;
+        * ``page_size`` ``None`` -> :func:`auto_page_size`;
+        * ``spec_k`` auto-off when the family has no ``verify_chunk`` or
+          no position-wise rewindable state (SSM/hybrid);
+        * ``paged_kv`` ``None`` -> on iff the state tree is pageable at
+          the resolved page size; an explicit ``True`` raises when
+          ``page_size`` resolved to 0 or the family is not pageable;
+        * ``kv_dtype`` silently falls back to ``"fp32"`` on contiguous
+          engines (quantization is paged-only);
+        * ``pool_pages`` ``None`` -> one full page row per slot (paged);
+        * ``prefix_cache`` auto-off for families without positional state.
+
+        Imports the model registry lazily so everything up to this call
+        stays pure host-side Python."""
+        self.validate()
+        from repro.models.registry import get_api
+        from repro.serve import cache
+        api = get_api(model_cfg)
+        if api.decode_step is None or api.prefill_chunk is None:
+            raise ValueError(f"{model_cfg.arch_id} has no decode path")
+        page_size = self.page_size
+        if page_size is None:
+            page_size = auto_page_size(self.max_seq)
+        specs = api.decode_state_specs(
+            dataclasses.replace(model_cfg, decode_page_size=page_size),
+            self.max_slots, self.max_seq)
+        spec_k = self.spec_k
+        # speculative decode needs (a) a verify_chunk entry point and (b)
+        # a position-wise rewindable state tree: rolling back a rejected
+        # draft is just "stop counting those positions" for attention
+        # families, but impossible for O(1) SSM/hybrid state — auto-off,
+        # exactly like the paged_kv gate.
+        if spec_k and (api.verify_chunk is None
+                       or not cache.supports_prefix(specs)):
+            spec_k = 0
+        paged = self.paged_kv
+        if paged is None:
+            paged = cache.pageable(specs, page_size)
+        elif paged:
+            if not page_size:
+                raise ValueError(
+                    f"paged_kv=True needs page_size > 0, but it resolved "
+                    f"to 0 (auto_page_size found no power-of-two page in "
+                    f"[16, 128] dividing max_seq={self.max_seq} into >= 2 "
+                    f"pages); pass an explicit page_size")
+            if not cache.pageable(specs, page_size):
+                raise ValueError(
+                    f"paged_kv=True: {model_cfg.arch_id}'s decode state "
+                    f"is not pageable at page_size={page_size} (every "
+                    f"leaf needs an adjacent (batch, kv_seq) axis pair — "
+                    f"SSM/hybrid families are not)")
+        paged = bool(paged)
+        kv_dtype = self.kv_dtype
+        if kv_dtype != "fp32" and not paged:
+            # same silent auto-gate as paged_kv: SSM/hybrid state (or a
+            # page_size that resolved to 0) has no pages to quantize (an
+            # explicit paged_kv=False was already rejected by validate)
+            kv_dtype = "fp32"
+        pool_pages = self.pool_pages
+        if paged and pool_pages is None:
+            pool_pages = self.max_slots * (self.max_seq // page_size)
+        prefix_cache = bool(self.prefix_cache
+                            and cache.supports_prefix(specs))
+        return dataclasses.replace(
+            self, page_size=page_size, paged_kv=paged, spec_k=spec_k,
+            kv_dtype=kv_dtype, pool_pages=pool_pages,
+            prefix_cache=prefix_cache)
+
+    def replace(self, **overrides) -> "EngineConfig":
+        """New config with the ``overrides`` keyword fields swapped in —
+        the sweep-point constructor (``cfg.replace(spec_k=4)``)."""
+        return dataclasses.replace(self, **overrides)
+
+    def to_dict(self) -> dict:
+        """Plain-dict view of the knobs (JSON-serializable; the shape the
+        autotune bench records per sweep point)."""
+        return dataclasses.asdict(self)
+
+
+def knob_table_md() -> str:
+    """Markdown knob table (``| knob | where | meaning |``) generated from
+    the :class:`EngineConfig` field metadata.  ``docs/serving.md`` embeds
+    this output verbatim (pinned by ``tests/test_config.py``), so the
+    documented knob set cannot drift from the dataclass."""
+    rows = ["| knob | where | meaning |", "|---|---|---|"]
+    for f in dataclasses.fields(EngineConfig):
+        rows.append(f"| `{f.name}` | `EngineConfig` | {f.metadata['doc']} |")
+    return "\n".join(rows) + "\n"
+
+
+def add_cli_args(parser, spec_k_default: int = 4) -> None:
+    """Register every :class:`EngineConfig` knob on an argparse ``parser``
+    (one shared binding for every serve CLI; each option's ``dest`` is the
+    field name, so :func:`config_from_args` can round-trip them).
+
+    ``spec_k_default`` sets the CLI default draft budget — the serving
+    CLIs default speculative decode ON (4) while the dataclass defaults
+    it off, preserving each layer's historical behavior.  ``--max-seq``
+    keeps the CLI convention ``0 = derive from the submitted requests``
+    (see ``serve_batch``)."""
+    parser.add_argument("--slots", dest="max_slots", type=int, default=4,
+                        help="decode batch width (concurrent requests)")
+    parser.add_argument("--max-seq", dest="max_seq", type=int, default=0,
+                        help="per-slot cache capacity (0 = derive from "
+                             "the submitted requests, padded to 16)")
+    parser.add_argument("--prefill-chunk", dest="prefill_chunk", type=int,
+                        default=32,
+                        help="max tokens per prefill dispatch")
+    parser.add_argument("--page", dest="page_size", type=int, default=None,
+                        help="KV page size for the split-K decode combine "
+                             "(default auto; 0 = dense)")
+    parser.add_argument("--no-prefix-cache", dest="prefix_cache",
+                        action="store_false", default=True,
+                        help="disable prefix-cache reuse across requests")
+    parser.add_argument("--min-prefix", dest="min_prefix", type=int,
+                        default=8,
+                        help="smallest resident-prefix match worth reusing")
+    parser.add_argument("--no-paged-kv", dest="paged_kv",
+                        action="store_const", const=False, default=None,
+                        help="force contiguous slot allocation (default: "
+                             "paged page-table allocation when supported)")
+    parser.add_argument("--pool-pages", dest="pool_pages", type=int,
+                        default=None,
+                        help="physical page-pool size for paged allocation "
+                             "(default: one full row per slot)")
+    parser.add_argument("--trie-capacity", dest="trie_capacity", type=int,
+                        default=None,
+                        help="LRU bound on prefix-trie entries "
+                             "(default: unbounded)")
+    parser.add_argument("--spec-k", dest="spec_k", type=int,
+                        default=spec_k_default,
+                        help="speculative-decode draft budget per slot per "
+                             "step (prompt-lookup drafting + one K+1-wide "
+                             "verify dispatch; auto-off for SSM/hybrid)")
+    parser.add_argument("--no-spec", dest="no_spec", action="store_true",
+                        help="disable speculative decode (sequential "
+                             "one-token decode steps)")
+    parser.add_argument("--spec-ngram", dest="spec_ngram", type=int,
+                        default=3,
+                        help="longest history n-gram the drafter anchors on")
+    parser.add_argument("--kv-dtype", dest="kv_dtype", default="fp32",
+                        choices=KV_DTYPES,
+                        help="KV page element type: quantized int8/int4 "
+                             "pages shrink the pool (per-row codes + fp32 "
+                             "scales, dequantized in-kernel; paged engines "
+                             "only — auto-falls back to fp32 for "
+                             "SSM/hybrid)")
+
+
+def config_from_args(args) -> EngineConfig:
+    """Build an :class:`EngineConfig` from a namespace parsed by an
+    :func:`add_cli_args` parser.  Every field whose ``dest`` is present is
+    copied over; ``--no-spec`` zeroes ``spec_k``; ``--max-seq 0`` (the
+    derive-from-requests CLI convention) keeps the dataclass default —
+    callers that derive pass their workload capacity to ``serve_batch``
+    separately."""
+    kw = {}
+    for f in dataclasses.fields(EngineConfig):
+        if hasattr(args, f.name):
+            kw[f.name] = getattr(args, f.name)
+    if getattr(args, "no_spec", False):
+        kw["spec_k"] = 0
+    if not kw.get("max_seq"):
+        kw.pop("max_seq", None)
+    return EngineConfig(**kw)

@@ -76,6 +76,7 @@ from repro.models.common import shape_structs
 from repro.models.registry import get_api
 from repro.models import quant_kv
 from repro.serve import cache
+from repro.serve.config import EngineConfig, auto_page_size
 from repro.serve.sampling import (GREEDY, SamplingParams, sample_tokens,
                                   sampling_lanes)
 from repro.serve.scheduler import Request, Scheduler
@@ -93,15 +94,6 @@ _COST_EWMA = 0.5
 _LATENCY_WINDOW = 4096
 
 
-def auto_page_size(max_seq: int) -> int:
-    """Largest power-of-two page in [16, 128] that divides ``max_seq`` and
-    leaves at least two pages (a 1-page split-K combine is a no-op)."""
-    for p in (128, 64, 32, 16):
-        if max_seq % p == 0 and max_seq // p >= 2:
-            return p
-    return 0
-
-
 def _buckets(chunk: int, lo: int = 8) -> Tuple[int, ...]:
     """Power-of-two prefill shape buckets up to ``chunk`` (inclusive)."""
     out, b = [], lo
@@ -115,133 +107,56 @@ def _buckets(chunk: int, lo: int = 8) -> Tuple[int, ...]:
 class ServeEngine:
     """Continuous-batching engine over one model's decode state.
 
-    Args:
-      cfg: model config (decode-capable family).
-      params: model parameters.
-      max_slots: decode batch width (concurrent requests).
-      max_seq: per-slot cache capacity (context + generated tokens).
-      prefill_chunk: max tokens ingested per prefill dispatch.
-      page_size: KV page size for the paged split-K decode combine;
-        ``None`` = auto (:func:`auto_page_size`), ``0`` = dense decode.
-      prefix_cache: enable prefix-cache reuse across requests (only takes
-        effect for fully positional state trees — attention families; see
-        :func:`repro.serve.cache.supports_prefix`).
-      min_prefix: smallest resident-prefix match worth reusing; shorter
-        matches run the full cold prefill (a 1-token copy saves nothing
-        and incidental matches would perturb greedy equivalence tests).
-      paged_kv: allocate positional state in a physical page pool with
-        per-slot page tables (zero-copy prefix sharing + boundary-page
-        copy-on-write). ``None`` = auto: on whenever ``page_size > 0`` and
-        the state tree is pageable (:func:`repro.serve.cache.pageable`);
-        ``True`` raises a clear error when those preconditions fail
-        (e.g. ``auto_page_size`` resolved to 0 for this ``max_seq``);
-        ``False`` forces the contiguous copy_slot engine.
-      pool_pages: physical (non-scratch) pages in the pool. ``None`` =
-        ``max_slots * max_seq // page_size`` — enough for every slot to
-        hold a full private row, so sharing can only create headroom.
-        Smaller values overcommit: exhausted-pool admissions are deferred
-        (and LRU retired entries reclaimed), never dropped.
-      trie_capacity: LRU bound on prefix-trie entries (``None`` =
-        unbounded); evicted entries free their pages once retired.
-      spec_k: speculative-decode draft budget per slot per step (``0`` =
-        classic sequential decode).  When > 0, each decode step drafts up
-        to ``spec_k`` tokens per slot by prompt lookup and verifies all of
-        them in one ``(B, spec_k + 1)``-wide dispatch.  Auto-off (resolves
-        back to 0) for families without a position-wise rewindable decode
-        state (SSM/hybrid) — mirror of the ``paged_kv`` auto gate.
-      spec_ngram: longest history n-gram the drafter anchors on.
-      kv_dtype: element type of the pooled KV pages — ``"fp32"`` (default,
-        bit-exact full precision), ``"int8"`` or ``"int4"`` (per-row
-        symmetric codes + fp32 scales, dequantized inside the decode
-        kernel; see :mod:`repro.models.quant_kv`).  Quantization is
-        paged-only: it auto-falls back to ``"fp32"`` when the engine
-        resolves to the contiguous path (SSM/hybrid families — mirror of
-        the ``paged_kv`` auto gate), and raises a clear error when
-        combined with an explicit ``paged_kv=False``.  The page-sum
-        accumulator width is audited at build time with the paper's exact
-        carry math (:func:`repro.models.quant_kv.assert_kv_accumulator`).
+    Constructed from a model config + params and ONE
+    :class:`~repro.serve.config.EngineConfig` describing every knob
+    (``ServeEngine(cfg, params, config=EngineConfig(spec_k=4))``); for
+    convenience the same knobs are accepted directly as keywords
+    (``ServeEngine(cfg, params, spec_k=4)``) and collected into a config —
+    passing both forms at once is an error.  All knob validation and
+    auto-resolution (page size, family gating, quantization fallback,
+    pool sizing) lives in :meth:`EngineConfig.validate` /
+    :meth:`EngineConfig.resolve`, NOT here; the resolved config is kept
+    as ``self.config``.  See ``docs/serving.md`` for the knob table and
+    :class:`~repro.serve.config.EngineConfig` for per-knob semantics.
+
+    Quantized engines additionally audit the page-sum accumulator width
+    at build time with the paper's exact carry math
+    (:func:`repro.models.quant_kv.assert_kv_accumulator`).
     """
 
-    def __init__(self, cfg, params, *, max_slots: int = 4,
-                 max_seq: int = 128, prefill_chunk: int = 32,
-                 page_size: Optional[int] = None,
-                 prefix_cache: bool = True, min_prefix: int = 8,
-                 paged_kv: Optional[bool] = None,
-                 pool_pages: Optional[int] = None,
-                 trie_capacity: Optional[int] = None,
-                 spec_k: int = 0, spec_ngram: int = 3,
-                 kv_dtype: str = "fp32"):
+    def __init__(self, cfg, params, *,
+                 config: Optional[EngineConfig] = None, **knobs):
+        if config is None:
+            config = EngineConfig(**knobs)
+        elif knobs:
+            raise TypeError(
+                f"pass engine knobs via config= OR as keywords, not both "
+                f"(got config= plus {sorted(knobs)})")
+        ecfg = config.resolve(cfg)
+        self.config = ecfg
         api = get_api(cfg)
-        if api.decode_step is None or api.prefill_chunk is None:
-            raise ValueError(f"{cfg.arch_id} has no decode path")
-        if page_size is None:
-            page_size = auto_page_size(max_seq)
-        if page_size and max_seq % page_size:
-            raise ValueError(
-                f"page_size={page_size} must divide max_seq={max_seq} "
-                f"(the cache is allocated in whole pages; pick a page size "
-                f"that divides the capacity, or pass page_size=None to let "
-                f"auto_page_size choose one)")
+        max_slots, max_seq = ecfg.max_slots, ecfg.max_seq
+        page_size = ecfg.page_size
         self.cfg = dataclasses.replace(cfg, decode_page_size=page_size)
         self.api = api
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
-        self.prefill_chunk = prefill_chunk
+        self.prefill_chunk = ecfg.prefill_chunk
         self.page_size = page_size
-        self.min_prefix = min_prefix
-        self.chunk_buckets = _buckets(prefill_chunk)
-        self.scheduler = Scheduler(max_slots, max_seq,
-                                   prefill_chunk=prefill_chunk)
+        self.min_prefix = ecfg.min_prefix
+        self.chunk_buckets = _buckets(ecfg.prefill_chunk)
+        self.scheduler = Scheduler.from_config(ecfg)
         self.specs = api.decode_state_specs(self.cfg, max_slots, max_seq)
-        if spec_k < 0:
-            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
-        # speculative decode needs (a) a verify_chunk entry point and (b) a
-        # position-wise rewindable state tree: rolling back a rejected
-        # draft is just "stop counting those positions" for attention
-        # families, but impossible for O(1) SSM/hybrid state — auto-off,
-        # exactly like the paged_kv gate.
-        if spec_k and (api.verify_chunk is None
-                       or not cache.supports_prefix(self.specs)):
-            spec_k = 0
-        self.spec_k = spec_k
-        self.drafter = (PromptLookupDrafter(ngram_max=spec_ngram)
-                        if spec_k else None)
-        if kv_dtype not in quant_kv.KV_DTYPES:
-            raise ValueError(f"kv_dtype must be one of {quant_kv.KV_DTYPES},"
-                             f" got {kv_dtype!r}")
-        requested_paged = paged_kv
-        if paged_kv is None:
-            paged_kv = cache.pageable(self.specs, page_size)
-        elif paged_kv:
-            if not page_size:
-                raise ValueError(
-                    f"paged_kv=True needs page_size > 0, but it resolved "
-                    f"to 0 (auto_page_size found no power-of-two page in "
-                    f"[16, 128] dividing max_seq={max_seq} into >= 2 "
-                    f"pages); pass an explicit page_size")
-            if not cache.pageable(self.specs, page_size):
-                raise ValueError(
-                    f"paged_kv=True: {cfg.arch_id}'s decode state is not "
-                    f"pageable at page_size={page_size} (every leaf needs "
-                    f"an adjacent (batch, kv_seq) axis pair — SSM/hybrid "
-                    f"families are not)")
-        self.paged = bool(paged_kv)
-        if kv_dtype != "fp32":
-            if requested_paged is False:
-                raise ValueError(
-                    f"kv_dtype={kv_dtype!r} quantizes pooled KV pages, "
-                    f"which requires the paged engine — incompatible with "
-                    f"paged_kv=False")
-            if not self.paged:
-                # same silent auto-gate as paged_kv: SSM/hybrid state (or a
-                # page_size that resolved to 0) has no pages to quantize
-                kv_dtype = "fp32"
+        self.spec_k = ecfg.spec_k
+        self.drafter = (PromptLookupDrafter(ngram_max=ecfg.spec_ngram)
+                        if ecfg.spec_k else None)
+        self.paged = bool(ecfg.paged_kv)
+        kv_dtype = ecfg.kv_dtype
         self.kv_dtype = kv_dtype
         if self.paged:
             self.max_pages = max_seq // page_size
-            if pool_pages is None:
-                pool_pages = max_slots * self.max_pages
+            pool_pages = ecfg.pool_pages
             self.pool = cache.PagePool(pool_pages + 1)   # +1: scratch
             self.pspecs = cache.paged_state_specs(
                 self.specs, page_size, pool_pages + 1)
@@ -260,9 +175,9 @@ class ServeEngine:
             self.state = cache.state_zeros(self.specs)
         #: bytes one contiguous copy_slot moves (the PR 3 hit path cost)
         self.slot_bytes = cache.state_bytes(self.specs) // max_slots
-        self.prefix = (cache.PrefixTrie(capacity=trie_capacity)
-                       if prefix_cache and cache.supports_prefix(self.specs)
-                       else None)
+        # resolve() already gated prefix_cache on supports_prefix
+        self.prefix = (cache.PrefixTrie(capacity=ecfg.trie_capacity)
+                       if ecfg.prefix_cache else None)
         if self.prefix is not None:
             # the scheduler's cost model prices resident prefixes at ~0,
             # so eviction/preemption decisions consult the shared pages

@@ -119,8 +119,9 @@ class Scheduler:
                  prefill_chunk: int = 32,
                  clock: Callable[[], float] = time.monotonic,
                  reuse_probe: Optional[Callable[[Sequence[int]], int]] = None):
-        if max_slots < 1:
-            raise ValueError("need at least one slot")
+        # knob validation (e.g. max_slots >= 1) lives in
+        # repro.serve.config.EngineConfig.validate, the one place every
+        # consumer goes through — see from_config
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.prefill_chunk = max(1, prefill_chunk)
@@ -138,6 +139,19 @@ class Scheduler:
         self.est_tokens_per_step: float = 1.0
         self.slo_met_count = 0
         self.slo_missed_count = 0
+
+    @classmethod
+    def from_config(cls, config, *,
+                    clock: Callable[[], float] = time.monotonic,
+                    reuse_probe: Optional[Callable[[Sequence[int]], int]]
+                    = None) -> "Scheduler":
+        """Build a scheduler from an (already validated)
+        :class:`~repro.serve.config.EngineConfig`: ``max_slots``,
+        ``max_seq`` and ``prefill_chunk`` are read from ``config``;
+        ``clock`` and ``reuse_probe`` pass through to the constructor."""
+        return cls(config.max_slots, config.max_seq,
+                   prefill_chunk=config.prefill_chunk, clock=clock,
+                   reuse_probe=reuse_probe)
 
     # ----------------------------------------------------------- cost model
     def update_cost_model(self, chunk_s: Optional[float] = None,

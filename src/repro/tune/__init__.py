@@ -1,0 +1,12 @@
+"""Autotune tier: sweep the serve engine's typed knob space
+(:class:`~repro.serve.EngineConfig`) over a fixed workload and rank the
+outcomes with multi-objective Pareto dominance (see
+:mod:`repro.tune.sweep`, :mod:`repro.tune.pareto` and
+``docs/autotune.md``)."""
+from repro.tune.pareto import argbest, dominates, pareto_front
+from repro.tune.sweep import METRIC_KEYS, SweepSpec, run_sweep, sweep_workload
+
+__all__ = [
+    "SweepSpec", "run_sweep", "sweep_workload", "METRIC_KEYS",
+    "dominates", "pareto_front", "argbest",
+]

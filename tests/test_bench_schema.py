@@ -34,7 +34,7 @@ def test_checker_accepts_complete_fixture(tmp_path):
     # only files with declared schemas need their metric paths; others
     # need just the base keys — but every declared bench must exist
     _write(tmp_path, "carry_tables", _full_carry())
-    for name in ("serve", "collectives"):
+    for name in sorted(set(cbs.REQUIRED) - {"carry_tables"}):
         payload = {"bench": name, "elapsed_s": 0.1}
         for path in cbs.REQUIRED[name]:
             node = payload
@@ -80,3 +80,17 @@ def test_repo_required_schema_matches_bench_output():
     path = ROOT / "results" / "BENCH_serve.json"
     assert path.exists(), "tier-1 runs the serve bench before this check"
     assert cbs.check_file(path) == []
+
+
+def test_repo_autotune_json_matches_schema_and_floors():
+    """The committed results/BENCH_autotune.json satisfies its declared
+    schema AND the sweep-size acceptance floors (>= 8 valid configs, a
+    front of >= 3 mutually non-dominated points, best >= baseline)."""
+    cbs = _checker()
+    path = ROOT / "results" / "BENCH_autotune.json"
+    assert path.exists(), "run `python -m benchmarks.run --only autotune`"
+    assert cbs.check_file(path) == []
+    data = json.loads(path.read_text())
+    assert data["n_valid"] >= 8
+    assert data["front_size"] >= 3 and len(data["front"]) >= 3
+    assert data["best_vs_baseline"] >= 1.0

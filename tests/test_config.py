@@ -1,0 +1,234 @@
+"""EngineConfig tests: the single source of truth for engine knobs.
+
+Covers the model-independent validation messages (raised identically from
+``EngineConfig.validate`` and the ``ServeEngine`` constructor), the
+model-dependent ``resolve`` gates (auto page size, SSM/hybrid
+auto-fallbacks, paged gating errors), and — the refactor's point — that
+every knob is reachable from every consumer: the engine keyword surface,
+``serve_batch``/``batch_config``, and the shared CLI binding.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.common import init_params
+from repro.models.registry import get_api
+from repro.serve import (EngineConfig, KV_DTYPES, ServeEngine,
+                         add_cli_args, config_from_args, knob_table_md)
+from repro.serve.config import auto_page_size
+from repro.launch.serve import batch_config
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _cfg(arch_id="llama3.2-3b", **over):
+    return get_config(arch_id).reduced(dtype=jnp.float32, **over)
+
+
+def _params(cfg, seed=0):
+    api = get_api(cfg)
+    return init_params(api.param_specs(cfg), jax.random.key(seed))
+
+
+# a valid non-default value for every field — used to prove each knob is
+# reachable through every consumer surface (satellite: serve_batch used
+# to silently drop min_prefix / spec_ngram / trie_capacity)
+NON_DEFAULT = {
+    "max_slots": 2, "max_seq": 64, "prefill_chunk": 16, "page_size": 16,
+    "prefix_cache": False, "min_prefix": 4, "paged_kv": False,
+    "pool_pages": 7, "trie_capacity": 5, "spec_k": 3, "spec_ngram": 2,
+    "kv_dtype": "int8",
+}
+
+
+def test_defaults_are_engine_defaults():
+    c = EngineConfig()
+    assert (c.max_slots, c.max_seq, c.prefill_chunk) == (4, 128, 32)
+    assert c.page_size is None and c.paged_kv is None
+    assert c.pool_pages is None and c.trie_capacity is None
+    assert c.prefix_cache is True and c.min_prefix == 8
+    assert (c.spec_k, c.spec_ngram, c.kv_dtype) == (0, 3, "fp32")
+    assert c.validate() is c
+
+
+def test_non_default_covers_every_field():
+    fields = {f.name for f in dataclasses.fields(EngineConfig)}
+    assert set(NON_DEFAULT) == fields
+    for name, val in NON_DEFAULT.items():
+        assert val != getattr(EngineConfig(), name), name
+
+
+def test_kv_dtypes_pin_quant_kv():
+    """config.KV_DTYPES is a jax-free copy; it must track the engine's."""
+    from repro.models.quant_kv import KV_DTYPES as ENGINE_KV_DTYPES
+    assert tuple(KV_DTYPES) == tuple(ENGINE_KV_DTYPES)
+
+
+# ----------------------------------------------------------- validation
+
+VALIDATE_ERRORS = [
+    (dict(max_slots=0), "need at least one slot"),
+    (dict(max_seq=0), "max_seq must be >= 1"),
+    (dict(prefill_chunk=0), "prefill_chunk must be >= 1"),
+    (dict(spec_k=-1), "spec_k must be >= 0"),
+    (dict(spec_ngram=0), "spec_ngram must be >= 1"),
+    (dict(pool_pages=0), "pool_pages must be >= 1"),
+    (dict(trie_capacity=0), "trie_capacity must be >= 1"),
+    (dict(kv_dtype="int2"), "kv_dtype must be one of"),
+    (dict(kv_dtype="int8", paged_kv=False), "paged_kv=False"),
+    (dict(page_size=24, max_seq=64), "must divide"),
+]
+
+
+@pytest.mark.parametrize("knobs,msg", VALIDATE_ERRORS,
+                         ids=[m[:24] for _, m in VALIDATE_ERRORS])
+def test_validate_error_messages(knobs, msg):
+    with pytest.raises(ValueError, match=msg):
+        EngineConfig(**knobs).validate()
+
+
+@pytest.mark.parametrize("knobs,msg", VALIDATE_ERRORS,
+                         ids=[m[:24] for _, m in VALIDATE_ERRORS])
+def test_engine_constructor_raises_same_messages(knobs, msg):
+    """The engine has NO validation of its own: every constructor error
+    is EngineConfig.validate's, verbatim (raised before any state is
+    allocated)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    with pytest.raises(ValueError, match=msg):
+        ServeEngine(cfg, params, **knobs)
+
+
+def test_engine_rejects_config_plus_knobs():
+    cfg = _cfg()
+    params = _params(cfg)
+    with pytest.raises(TypeError, match="not both"):
+        ServeEngine(cfg, params, config=EngineConfig(), spec_k=2)
+
+
+# -------------------------------------------------------------- resolve
+
+def test_resolve_attention_auto_knobs():
+    cfg = _cfg()  # attention family: everything supported
+    r = EngineConfig(max_seq=64, spec_k=4, kv_dtype="int8").resolve(cfg)
+    assert r.page_size == auto_page_size(64) == 32
+    assert r.paged_kv is True and r.spec_k == 4
+    assert r.kv_dtype == "int8" and r.prefix_cache is True
+    assert r.pool_pages == r.max_slots * (64 // 32)
+    # fully concrete: no None-as-auto fields survive resolve
+    assert None not in (r.page_size, r.paged_kv, r.pool_pages)
+
+
+def test_resolve_ssm_auto_fallbacks():
+    """SSM state is neither positional nor pageable: spec/paged/quant/
+    prefix all silently gate off (same policy the engine always had)."""
+    cfg = _cfg("falcon-mamba-7b")
+    r = EngineConfig(max_seq=64, spec_k=4, kv_dtype="int8",
+                     prefix_cache=True).resolve(cfg)
+    assert r.spec_k == 0 and r.paged_kv is False
+    assert r.kv_dtype == "fp32" and r.prefix_cache is False
+
+
+def test_resolve_paged_true_errors():
+    with pytest.raises(ValueError, match="not pageable"):
+        EngineConfig(max_seq=64, paged_kv=True).resolve(
+            _cfg("falcon-mamba-7b"))
+    # max_seq=24 has no power-of-two page in [16, 128] -> auto page 0
+    with pytest.raises(ValueError, match="page_size > 0"):
+        EngineConfig(max_seq=24, paged_kv=True).resolve(_cfg())
+
+
+def test_resolve_idempotent():
+    cfg = _cfg()
+    r = EngineConfig(max_seq=64).resolve(cfg)
+    assert r.resolve(cfg) == r
+
+
+def test_engine_config_equals_knobs():
+    """config= and keyword knobs build the identical engine."""
+    cfg = _cfg()
+    params = _params(cfg)
+    knobs = dict(max_slots=2, max_seq=32, prefill_chunk=16, spec_k=2)
+    a = ServeEngine(cfg, params, config=EngineConfig(**knobs))
+    b = ServeEngine(cfg, params, **knobs)
+    assert a.config == b.config
+    assert a.config == EngineConfig(**knobs).resolve(cfg)
+
+
+# ------------------------------------------------- consumer reachability
+
+def test_batch_config_reaches_every_field():
+    """serve_batch's planning helper lands EVERY EngineConfig knob — the
+    regression test for the dropped min_prefix/spec_ngram/trie_capacity
+    keywords."""
+    prompts = [[1, 2, 3]]
+    for name, val in NON_DEFAULT.items():
+        if name == "max_seq":
+            ecfg = batch_config(prompts, 4, max_seq=val)
+        else:
+            ecfg = batch_config(prompts, 4, **{name: val})
+        assert getattr(ecfg, name) == val, name
+
+
+def test_batch_config_modes():
+    prompts = [[0] * 20, [0] * 5]
+    # no config: capacity derives from the longest request, padded to 16
+    assert batch_config(prompts, 10).max_seq == 32
+    assert batch_config(prompts, [10, 1]).max_seq == 32
+    # explicit config: its max_seq stands unless max_seq=0 forces derive
+    c = EngineConfig(max_seq=128)
+    assert batch_config(prompts, 10, config=c).max_seq == 128
+    assert batch_config(prompts, 10, config=c, max_seq=0).max_seq == 32
+    assert batch_config(prompts, 10, config=c, max_seq=64).max_seq == 64
+    # slots aliases max_slots over either form
+    assert batch_config(prompts, 10, slots=2).max_slots == 2
+    assert batch_config(prompts, 10, config=c, slots=2).max_slots == 2
+    with pytest.raises(TypeError, match="not both"):
+        batch_config(prompts, 10, config=c, spec_k=2)
+
+
+def _parse(argv):
+    ap = argparse.ArgumentParser()
+    add_cli_args(ap)
+    return ap.parse_args(argv)
+
+
+def test_cli_reaches_every_field():
+    """The shared argparse binding exposes every EngineConfig field (by
+    dest) and config_from_args round-trips a fully-specified command
+    line."""
+    args = _parse([])
+    for f in dataclasses.fields(EngineConfig):
+        assert hasattr(args, f.name), f"no CLI binding for {f.name}"
+    argv = ["--slots", "2", "--max-seq", "64", "--prefill-chunk", "16",
+            "--page", "16", "--no-prefix-cache", "--min-prefix", "4",
+            "--no-paged-kv", "--pool-pages", "7", "--trie-capacity", "5",
+            "--spec-k", "3", "--spec-ngram", "2", "--kv-dtype", "fp32"]
+    got = config_from_args(_parse(argv))
+    want = dict(NON_DEFAULT, paged_kv=False, kv_dtype="fp32")
+    assert got == EngineConfig(**want)
+
+
+def test_cli_defaults_and_no_spec():
+    # CLI default: spec ON at k=4, max_seq 0 (=derive) keeps the
+    # dataclass default so serve_batch derivation applies downstream
+    got = config_from_args(_parse([]))
+    assert got == EngineConfig(spec_k=4)
+    assert config_from_args(_parse(["--no-spec"])).spec_k == 0
+    assert config_from_args(_parse(["--spec-k", "6"])).spec_k == 6
+
+
+# ------------------------------------------------------------- knob docs
+
+def test_knob_table_embedded_in_docs():
+    """docs/serving.md embeds knob_table_md() verbatim, so the documented
+    knob table cannot drift from the dataclass."""
+    table = knob_table_md()
+    for f in dataclasses.fields(EngineConfig):
+        assert f"| `{f.name}` |" in table
+    with open("docs/serving.md") as fh:
+        assert table.rstrip("\n") in fh.read()
