@@ -34,13 +34,29 @@ the answer for the reduced config on CPU:
   records bytes per resident slot (the capacity uplift at fixed pool
   bytes), decode tok/s, greedy bit-stability, per-step logit drift vs
   fp32, and the speculative accept-rate drift over int8 pages.
+* page-content dedup: a position-shifted shared-span workload (every
+  request: one page of UNIQUE tokens, then a shared interior span at
+  equal positions) on a single-layer config, where the prefix trie
+  scores ZERO hits by construction — every shared page must come from
+  the content-hash index, and greedy tokens must match the dedup-off run
+  bit-for-bit;
+* multi-turn sessions: returning conversations whose slots (and trie
+  entries) were churned away between turns — the session snapshot
+  re-admits the history as shared pages, vs a sessionless engine that
+  re-prefills it, bit-exact by construction;
+* bursty overload: a seeded Poisson burst trace replayed open-loop on
+  the deterministic virtual clock (``repro.tune.workloads``), degrade
+  ladder on vs off at the SAME offered load — goodput ratio asserted,
+  and every request the ladder arm actually served must emit tokens
+  bit-identical to the undegraded arm's.
 
 Emits ``results/BENCH_serve.json`` with prefill/decode tok/s for both
 paths, the prefill speedup, decode batch occupancy, decode-step latency
 percentiles, the prefix-cache hit/miss/reuse counters, the ``paged``
-comparison, the ``spec`` section, and the ``quant`` section — the perf
-trajectory baseline for later serving PRs.  See ``docs/serving.md`` for
-what each metric excludes.
+comparison, the ``spec`` section, the ``quant`` section, and the
+``dedup`` / ``multi_turn`` / ``burst`` sections — the perf trajectory
+baseline for later serving PRs.  See ``docs/serving.md`` for what each
+metric excludes.
 """
 from __future__ import annotations
 
@@ -56,6 +72,7 @@ from repro.models.common import init_params, param_count
 from repro.models.registry import get_api
 from repro.serve import EngineConfig, ServeEngine
 from repro.serve.spec import propose_draft
+from repro.tune.workloads import VirtualCosts, bursty_trace, replay_open_loop
 
 from benchmarks.common import print_rows, section
 
@@ -96,6 +113,31 @@ SPEC_SEQ = 768
 # reads below break-even, so one noisy window cannot fail the floor.
 ADMIT_ROUNDS = 2
 ADMIT_ROUNDS_MAX = 6
+# Page-content dedup workload: every request is one page of unique tokens
+# followed by the same DEDUP_SPAN-token span at the SAME interior
+# positions.  Run on a 1-layer config, whose KV rows are a pure function
+# of (token, position) — matching interior content at matching positions
+# means matching page bytes.  The differing first page keeps the prefix
+# trie at zero hits, so every shared page is the content index's doing.
+DEDUP_REQUESTS = 6
+DEDUP_PAGE = 16
+DEDUP_SPAN = 32
+# Multi-turn session workload: USERS conversations of TURNS turns each,
+# with enough one-shot churn traffic between turns that every slot (and
+# its trie entry) has turned over before a user returns.
+MT_USERS = 4
+MT_TURNS = 3
+MT_TURN_TOKENS = 12
+MT_GEN = 6
+# Bursty overload workload: a seeded Poisson burst trace replayed on the
+# virtual clock; the burst peaks oversubscribe BURST_SLOTS slots badly
+# enough that the no-ladder engine blows SLOs across the board.
+BURST_REQUESTS = 28
+BURST_SLOTS = 2
+BURST_RATE = 2.0
+BURST_PEAK_RATE = 30.0
+BURST_SLO_MS = 900.0
+BURST_GOODPUT_FLOOR = 1.15
 # The hand-set engine configuration every workload derives from via
 # .replace(...) — also the autotune baseline point (bench_autotune sweeps
 # around it and asserts the best swept point matches or beats it).
@@ -501,6 +543,182 @@ def run() -> dict:
         d.pop("tokens")
         d.pop("trace")
 
+    # ---- page-content dedup: interior spans the prefix trie CANNOT see.
+    # 1-layer config: layer-0 KV rows depend only on (token, position), so
+    # the shared span at equal positions produces byte-identical pages.
+    section(f"page-content dedup: {DEDUP_REQUESTS} requests, "
+            f"{DEDUP_PAGE}-token unique heads + a shared {DEDUP_SPAN}-token "
+            f"interior span (prefix trie blind by construction)")
+    cfg1 = get_config(ARCH).reduced(dtype=jnp.float32, n_layers=1)
+    params1 = init_params(get_api(cfg1).param_specs(cfg1), jax.random.key(0))
+    span = rng.integers(0, cfg1.vocab, (DEDUP_SPAN,)).tolist()
+    heads = [rng.integers(0, cfg1.vocab, (DEDUP_PAGE,)).tolist()
+             for _ in range(DEDUP_REQUESTS)]
+    # distinct first tokens guarantee zero-length trie matches
+    for i, h in enumerate(heads):
+        h[0] = i
+    dd_prompts = [h + span for h in heads]
+    dd_seq = max(16, -(-(DEDUP_PAGE + DEDUP_SPAN + GEN) // DEDUP_PAGE)
+                 * DEDUP_PAGE)
+
+    def _dedup_workload(page_dedup: bool) -> tuple:
+        e = ServeEngine(cfg1, params1, config=BASE_CONFIG.replace(
+            max_seq=dd_seq, page_size=DEDUP_PAGE, paged_kv=True,
+            pool_pages=48, page_dedup=page_dedup))
+        rr = [e.submit(p, GEN) for p in dd_prompts]
+        e.warmup()
+        e.run()
+        assert all(len(r.generated) == GEN for r in rr)
+        return [r.generated for r in rr], e.stats_summary()
+
+    dd_cold_toks, dd_cold = _dedup_workload(False)
+    dd_toks, dd_on = _dedup_workload(True)
+    assert dd_toks == dd_cold_toks, "page dedup changed greedy outputs"
+    assert dd_on["prefix_hits"] == 0, (
+        "the dedup workload hit the prefix trie — the shared pages no "
+        "longer isolate the content index")
+    assert dd_on["dedup_hits"] >= DEDUP_REQUESTS - 1, (
+        f"only {dd_on['dedup_hits']:.0f} dedup hits on "
+        f"{DEDUP_REQUESTS} identical interior spans")
+    assert dd_on["dedup_pages_per_hit"] >= 1.0, (
+        f"{dd_on['dedup_pages_per_hit']:.2f} pages shared per dedup hit "
+        f"(floor: 1 full page)")
+    assert dd_on["dedup_hash_collisions"] == 0
+    dedup_pages_saved = dd_cold["pages_in_use"] - dd_on["pages_in_use"]
+    print_rows([
+        {"path": "dedup_off", "pages_in_use": dd_cold["pages_in_use"],
+         "dedup_hits": 0, "pages_per_hit": 0.0},
+        {"path": "dedup_on", "pages_in_use": dd_on["pages_in_use"],
+         "dedup_hits": dd_on["dedup_hits"],
+         "pages_per_hit": dd_on["dedup_pages_per_hit"]},
+    ])
+    print(f"\npage-content dedup: {dd_on['dedup_hits']:.0f}/"
+          f"{DEDUP_REQUESTS} admissions shared "
+          f"{dd_on['dedup_pages_shared']:.0f} interior pages "
+          f"({dd_on['dedup_pages_per_hit']:.1f}/hit, "
+          f"{dedup_pages_saved:.0f} resident pages saved, trie hits "
+          f"{dd_on['prefix_hits']:.0f}, tokens bit-exact)")
+
+    # ---- multi-turn sessions: every slot AND trie entry churned away
+    # between turns, so only the session snapshot can carry the history.
+    section(f"multi-turn sessions: {MT_USERS} conversations x {MT_TURNS} "
+            f"turns, slots churned between turns, vs sessionless replay")
+    mt_seq = max(16, -(-((MT_TURN_TOKENS + MT_GEN) * MT_TURNS + GEN) // 16)
+                 * 16)
+    # explicit pool headroom: the auto pool is sized for live slots only,
+    # and MT_USERS retained session snapshots would immediately put it
+    # under pressure (dropping the very snapshots this section measures)
+    mt_cfgs = BASE_CONFIG.replace(max_slots=2, max_seq=mt_seq,
+                                  prefill_chunk=16, paged_kv=True,
+                                  page_size=16, pool_pages=64)
+    mt_turns = [[rng.integers(0, cfg.vocab, (MT_TURN_TOKENS,)).tolist()
+                 for _ in range(MT_TURNS)] for _ in range(MT_USERS)]
+
+    def _churn(e):
+        # one-shot traffic that turns over every slot (and trie row)
+        cr = [e.submit(rng.integers(0, cfg.vocab, (24,)).tolist(), 4)
+              for _ in range(4)]
+        e.run()
+        assert all(len(r.generated) == 4 for r in cr)
+
+    mt_eng = ServeEngine(cfg, params, config=mt_cfgs)
+    mt_eng.warmup()
+    mt_outs = [[None] * MT_TURNS for _ in range(MT_USERS)]
+    churn_rng_state = rng.bit_generator.state   # replay identical churn
+    for k in range(MT_TURNS):
+        trs = [mt_eng.submit_turn(f"user{u}", mt_turns[u][k], MT_GEN)
+               for u in range(MT_USERS)]
+        mt_eng.run()
+        for u, r in enumerate(trs):
+            mt_outs[u][k] = r.generated
+        _churn(mt_eng)
+    mt = mt_eng.stats_summary()
+    # sessionless baseline: replay each turn's FULL accumulated history as
+    # a cold prompt (prefix cache off so nothing is accidentally resident)
+    rng.bit_generator.state = churn_rng_state
+    cold_eng = ServeEngine(cfg, params, config=mt_cfgs.replace(
+        prefix_cache=False))
+    cold_eng.warmup()
+    hist = [[] for _ in range(MT_USERS)]
+    for k in range(MT_TURNS):
+        crs = [cold_eng.submit(hist[u] + mt_turns[u][k], MT_GEN)
+               for u in range(MT_USERS)]
+        cold_eng.run()
+        for u, r in enumerate(crs):
+            assert r.generated == mt_outs[u][k], (
+                f"session reuse changed user{u} turn {k} tokens")
+            hist[u] = hist[u] + mt_turns[u][k] + r.generated
+        _churn(cold_eng)
+    mt_cold = cold_eng.stats_summary()
+    mt_prefill_saved = 1.0 - (mt["prefill_tokens"]
+                              / max(mt_cold["prefill_tokens"], 1))
+    assert mt["session_hits"] == MT_USERS * (MT_TURNS - 1), (
+        f"{mt['session_hits']:.0f} session hits, expected every "
+        f"returning turn ({MT_USERS * (MT_TURNS - 1)})")
+    assert mt["session_reused_tokens"] > 0
+    assert mt["prefill_tokens"] < mt_cold["prefill_tokens"], (
+        "session reuse did not reduce prefilled tokens")
+    print_rows([
+        {"path": "sessionless", "prefill_tokens": mt_cold["prefill_tokens"],
+         "session_hits": 0, "reused_tokens": 0},
+        {"path": "sessions", "prefill_tokens": mt["prefill_tokens"],
+         "session_hits": mt["session_hits"],
+         "reused_tokens": mt["session_reused_tokens"]},
+    ])
+    print(f"\nmulti-turn sessions: {mt['session_hits']:.0f}/"
+          f"{MT_USERS * (MT_TURNS - 1)} returning turns re-admitted from "
+          f"snapshots, {mt['session_reused_tokens']:.0f} tokens reused, "
+          f"{mt_prefill_saved:.0%} fewer prefilled tokens, bit-exact")
+
+    # ---- bursty overload: the degrade ladder vs FIFO-until-it-drowns at
+    # the SAME offered load on the deterministic virtual clock.  Real
+    # tokens, simulated time: SLO pressure, shed decisions and the whole
+    # ladder trajectory reproduce bit-for-bit across hosts.
+    section(f"bursty overload: {BURST_REQUESTS} Poisson arrivals "
+            f"(bursts {BURST_PEAK_RATE:.0f}/s over {BURST_RATE:.0f}/s "
+            f"base), SLO {BURST_SLO_MS:.0f}ms, {BURST_SLOTS} slots, "
+            f"degrade ladder on vs off")
+    trace = bursty_trace(BURST_REQUESTS, rate=BURST_RATE,
+                         burst_rate=BURST_PEAK_RATE, mean_prompt=20,
+                         mean_gen=10, max_prompt=48, max_gen=24,
+                         vocab=cfg.vocab, slo_ms=BURST_SLO_MS, seed=7)
+    costs = VirtualCosts()
+
+    def _burst_arm(degrade: bool) -> dict:
+        e = ServeEngine(cfg, params, config=EngineConfig(
+            max_slots=BURST_SLOTS, max_seq=128, prefill_chunk=16,
+            spec_k=3, degrade=degrade))
+        return replay_open_loop(e, trace, costs)
+
+    b_off = _burst_arm(False)
+    b_on = _burst_arm(True)
+    # every request the ladder arm served must carry the undegraded arm's
+    # exact tokens (spec on/off and chunk size are output-invariant; shed
+    # requests emit nothing and are excluded by construction)
+    for i, (got, want) in enumerate(zip(b_on["outputs"], b_off["outputs"])):
+        assert not got or got == want, (
+            f"degrade ladder changed arrival {i}'s tokens")
+    goodput_ratio = b_on["goodput_tok_s"] / max(b_off["goodput_tok_s"],
+                                                1e-9)
+    print_rows([
+        {"path": "no_ladder", "goodput_tok_s": b_off["goodput_tok_s"],
+         "slo_met": b_off["slo_met"], "slo_missed": b_off["slo_missed"],
+         "shed": b_off["shed"], "virtual_s": b_off["elapsed_s"]},
+        {"path": "ladder", "goodput_tok_s": b_on["goodput_tok_s"],
+         "slo_met": b_on["slo_met"], "slo_missed": b_on["slo_missed"],
+         "shed": b_on["shed"], "virtual_s": b_on["elapsed_s"]},
+    ])
+    print(f"\ndegrade ladder: {goodput_ratio:.2f}x goodput at the same "
+          f"offered load ({b_on['stats']['degrade_transitions']:.0f} "
+          f"level transitions, {b_on['shed']} shed with reason, served "
+          f"tokens bit-exact vs undegraded)")
+    assert b_on["shed"] == sum(
+        1 for r in b_on["finished"] if r.shed_reason is not None), (
+        "shed_count and retired-with-reason requests disagree")
+    assert goodput_ratio >= BURST_GOODPUT_FLOOR, (
+        f"degrade ladder goodput only {goodput_ratio:.2f}x the no-ladder "
+        f"baseline (acceptance floor: {BURST_GOODPUT_FLOOR}x)")
+
     return {
         "arch": cfg.arch_id,
         "requests": N_REQUESTS,
@@ -572,6 +790,49 @@ def run() -> dict:
             "spec_accept_rate_fp32": spc["accept_rate"],
             "spec_accept_rate_int8": spc8["accept_rate"],
             "spec_accept_rate_drift": accept_drift,
+        },
+        "dedup": {
+            "requests": DEDUP_REQUESTS,
+            "page_size": DEDUP_PAGE,
+            "span": DEDUP_SPAN,
+            "hits": dd_on["dedup_hits"],
+            "pages_shared": dd_on["dedup_pages_shared"],
+            "pages_per_hit": dd_on["dedup_pages_per_hit"],
+            "hash_collisions": dd_on["dedup_hash_collisions"],
+            "prefix_hits": dd_on["prefix_hits"],
+            "pages_in_use_off": dd_cold["pages_in_use"],
+            "pages_in_use_on": dd_on["pages_in_use"],
+            "pages_saved": dedup_pages_saved,
+            "tokens_bitexact": True,
+        },
+        "multi_turn": {
+            "users": MT_USERS,
+            "turns": MT_TURNS,
+            "session_hits": mt["session_hits"],
+            "session_turns": mt["session_turns"],
+            "session_reused_tokens": mt["session_reused_tokens"],
+            "prefill_tokens": mt["prefill_tokens"],
+            "prefill_tokens_sessionless": mt_cold["prefill_tokens"],
+            "prefill_tokens_saved_frac": mt_prefill_saved,
+            "tokens_bitexact": True,
+        },
+        "burst": {
+            "requests": BURST_REQUESTS,
+            "slots": BURST_SLOTS,
+            "slo_ms": BURST_SLO_MS,
+            "virtual_costs": {"chunk_s": costs.chunk_s,
+                              "step_s": costs.step_s,
+                              "spec_step_s": costs.spec_step_s},
+            "no_ladder": {k: b_off[k] for k in
+                          ("goodput_tok_s", "served_tok_s", "elapsed_s",
+                           "slo_met", "slo_missed", "shed", "steps")},
+            "ladder": {k: b_on[k] for k in
+                       ("goodput_tok_s", "served_tok_s", "elapsed_s",
+                        "slo_met", "slo_missed", "shed", "steps")},
+            "degrade_transitions": b_on["stats"]["degrade_transitions"],
+            "degrade_steps": b_on["stats"]["degrade_steps"],
+            "goodput_ratio": goodput_ratio,
+            "served_tokens_bitexact": True,
         },
         "compile_excluded": True,
     }

@@ -63,6 +63,16 @@ REQUIRED = {
         "quant.int8_tokens_bitstable", "quant.int8_logit_drift_max",
         "quant.int4_logit_drift_max",
         "quant.spec_accept_rate_int8", "quant.spec_accept_rate_drift",
+        "dedup.hits", "dedup.pages_shared", "dedup.pages_per_hit",
+        "dedup.hash_collisions", "dedup.prefix_hits",
+        "dedup.tokens_bitexact",
+        "multi_turn.session_hits", "multi_turn.session_reused_tokens",
+        "multi_turn.prefill_tokens_saved_frac",
+        "multi_turn.tokens_bitexact",
+        "burst.goodput_ratio", "burst.ladder.goodput_tok_s",
+        "burst.no_ladder.goodput_tok_s", "burst.ladder.shed",
+        "burst.ladder.slo_met", "burst.degrade_transitions",
+        "burst.served_tokens_bitexact",
     ],
     "collectives": [
         "rows", "stage_plan", "kernel_timings", "dryrun_collectives",

@@ -48,6 +48,12 @@ python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
 python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
     --slots 2 --prompt-len 12 --gen 12 --spec-k 3 --kv-dtype int8
 
+# Overload smoke: a seeded bursty open-loop trace on the virtual clock —
+# SLO pressure, the degrade ladder (spec off -> small chunks -> shed) and
+# retire-with-reason shedding all fire end to end, deterministically.
+python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 16 \
+    --slots 2 --prompt-len 16 --gen 10 --spec-k 3 --burst-smoke
+
 # Autotune smoke: a 2x2 EngineConfig micro-grid through the sweep runner
 # + Pareto front (module main, NOT benchmarks.run — the smoke must never
 # overwrite the committed 16-point results/BENCH_autotune.json).

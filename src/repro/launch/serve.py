@@ -189,6 +189,10 @@ def main(argv=None) -> int:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--per-token", action="store_true",
                     help="run the legacy per-token baseline loop instead")
+    ap.add_argument("--burst-smoke", action="store_true",
+                    help="replay a seeded bursty open-loop trace on the "
+                         "virtual clock instead (exercises SLO pressure, "
+                         "the degrade ladder and shedding end to end)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -214,6 +218,36 @@ def main(argv=None) -> int:
     api = get_api(cfg)
     params = init_params(api.param_specs(cfg), jax.random.key(args.seed))
     rng = np.random.default_rng(args.seed)
+
+    if args.burst_smoke:
+        # open-loop burst replay: arrivals do not wait for completions,
+        # time is virtual (deterministic given --seed), tokens are real.
+        # Degrade + SLOs are forced on — the whole point of the smoke is
+        # driving the ladder through shed and back.
+        from repro.tune.workloads import bursty_trace, replay_open_loop
+        ecfg = config_from_args(args).replace(
+            max_seq=(args.max_seq or 128), degrade=True)
+        trace = bursty_trace(args.requests, rate=2.0, burst_rate=30.0,
+                             mean_prompt=float(args.prompt_len),
+                             mean_gen=float(args.gen),
+                             max_prompt=ecfg.max_seq // 2,
+                             max_gen=ecfg.max_seq // 4, vocab=cfg.vocab,
+                             slo_ms=args.slo_ms or 900.0, seed=args.seed)
+        eng = ServeEngine(cfg, params, config=ecfg)
+        res = replay_open_loop(eng, trace)
+        st = res["stats"]
+        print(f"[burst] arch={cfg.arch_id} arrivals={len(trace)} "
+              f"slots={ecfg.max_slots} virtual {res['elapsed_s']:.2f}s "
+              f"in {res['steps']} engine steps")
+        print(f"goodput {res['goodput_tok_s']:.1f} tok/s (virtual)  "
+              f"SLO {res['slo_met']} met / {res['slo_missed']} missed  "
+              f"shed {res['shed']}  degrade transitions "
+              f"{st['degrade_transitions']:.0f} "
+              f"(final level {st['degrade_level']:.0f})")
+        shed = [r for r in res["finished"] if r.shed_reason is not None]
+        if shed:
+            print(f"first shed reason: {shed[0].shed_reason!r}")
+        return 0
 
     if args.per_token:
         prompts = rng.integers(

@@ -2,7 +2,8 @@
 sampling + prefix-cache reuse + SLO-aware admission + speculative
 multi-token decode over the shared decode state (see
 :mod:`repro.serve.engine` and ``docs/serving.md``)."""
-from repro.serve.cache import (PagePool, PrefixTrie, copy_page, copy_slot,
+from repro.serve.cache import (PageDedupIndex, PagePool, PrefixTrie,
+                               copy_page, copy_slot,
                                pageable, paged_state_specs,
                                quant_state_specs, reset_slot,
                                slot_slice, slot_update, state_bytes,
@@ -11,18 +12,21 @@ from repro.serve.config import (EngineConfig, KV_DTYPES, add_cli_args,
                                 config_from_args, knob_table_md)
 from repro.serve.engine import ServeEngine, auto_page_size
 from repro.serve.sampling import GREEDY, SamplingParams, sample_tokens
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import DegradeLadder, Request, Scheduler
+from repro.serve.sessions import Session, SessionStore
 from repro.serve.spec import (PromptLookupDrafter, accept_tokens,
                               propose_draft)
 
 __all__ = [
     "ServeEngine", "auto_page_size", "Request", "Scheduler",
+    "DegradeLadder",
     "EngineConfig", "KV_DTYPES", "add_cli_args", "config_from_args",
     "knob_table_md",
     "SamplingParams", "GREEDY", "sample_tokens",
     "PrefixTrie", "supports_prefix", "copy_slot",
-    "PagePool", "pageable", "paged_state_specs", "quant_state_specs",
-    "copy_page",
+    "PagePool", "PageDedupIndex", "pageable", "paged_state_specs",
+    "quant_state_specs", "copy_page",
+    "Session", "SessionStore",
     "PromptLookupDrafter", "propose_draft", "accept_tokens",
     "state_zeros", "slot_slice", "slot_update", "reset_slot", "state_bytes",
 ]

@@ -52,7 +52,7 @@ from repro.models.common import ParamSpec
 __all__ = ["state_zeros", "batch_axis", "slot_slice", "slot_update",
            "reset_slot", "copy_slot", "state_bytes", "supports_prefix",
            "pageable", "paged_state_specs", "quant_state_specs",
-           "copy_page", "PagePool", "PrefixTrie"]
+           "copy_page", "PagePool", "PrefixTrie", "PageDedupIndex"]
 
 
 def _is_spec(x) -> bool:
@@ -556,3 +556,112 @@ class PrefixTrie:
         if touch and slot >= 0:
             self._touch(slot)
         return depth, slot
+
+
+# ---------------------------------------------------------------------------
+# host-side page-content dedup index (content-addressed physical pages)
+# ---------------------------------------------------------------------------
+
+class PageDedupIndex:
+    """Content-addressed index over *full* physical pages.
+
+    The :class:`PrefixTrie` only sees token **prefixes**: a shared system
+    prompt that starts at position 40 is invisible to it.  This index
+    closes that gap at the page level — the engine hashes the actual bytes
+    of every fully-written page (all KV leaves; codes **and** scales for
+    quantized pools) and registers ``digest -> physical page`` here.  A
+    later admission whose freshly-prefilled page hashes to the same digest
+    can drop its own copy and reference the already-resident page instead
+    (refcount bump via :class:`PagePool`), regardless of where in either
+    sequence the span sits.
+
+    Sharing stays unconditionally bit-exact because only byte-identical
+    pages are ever merged: a digest match is a *candidate*, and the engine
+    confirms it with a full byte compare before sharing (so a hash
+    collision degrades to a miss, never to corruption — collisions are
+    counted by the engine's stats).
+
+    The index holds **no references** of its own; it must mirror the page
+    tables: the engine calls :meth:`discard` / :meth:`discard_many`
+    whenever pages are freed or about to be overwritten, and the invariant
+    checked by the churn suite is *every indexed page has refcount > 0*.
+
+    Like the trie, the index is optionally capacity-bounded (LRU over
+    digests, recency touched by insert and successful lookup) so a
+    long-running engine keeps a hot content set instead of indexing every
+    page it ever wrote.
+    """
+
+    def __init__(self, capacity: Optional[int] = None):
+        """Create an empty index; ``capacity`` bounds the number of
+        indexed *pages* (``None`` = unbounded), dropping index entries
+        (never page references — the index holds none) LRU-first."""
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self._by_digest: Dict[bytes, List[int]] = {}
+        self._by_page: Dict[int, bytes] = {}
+        self.capacity = capacity
+        self.evictions = 0
+        self._clock = 0
+        self._last_used: Dict[int, int] = {}
+
+    def __len__(self) -> int:
+        """Number of physical pages currently indexed."""
+        return len(self._by_page)
+
+    def pages(self) -> List[int]:
+        """All indexed physical pages (for invariant checks)."""
+        return list(self._by_page)
+
+    def digest_of(self, page: int) -> Optional[bytes]:
+        """The digest ``page`` is indexed under (or None)."""
+        return self._by_page.get(page)
+
+    def _touch(self, page: int) -> None:
+        self._clock += 1
+        self._last_used[page] = self._clock
+
+    def insert(self, page: int, digest: bytes) -> None:
+        """Index physical ``page`` under content ``digest`` (replacing any
+        previous digest for that page).  Honors ``capacity`` by dropping
+        least-recently-used entries, counted in :attr:`evictions`."""
+        self.discard(page)
+        self._by_digest.setdefault(digest, []).append(int(page))
+        self._by_page[int(page)] = digest
+        self._touch(int(page))
+        if self.capacity is not None:
+            while len(self._by_page) > self.capacity:
+                victim = min((p for p in self._by_page if p != page),
+                             key=lambda p: self._last_used[p], default=None)
+                if victim is None:
+                    break
+                self.discard(victim)
+                self.evictions += 1
+
+    def candidates(self, digest: bytes) -> List[int]:
+        """Physical pages indexed under ``digest`` (possible content
+        matches — the caller byte-compares before sharing).  A non-empty
+        result refreshes those pages' LRU recency."""
+        pages = list(self._by_digest.get(digest, ()))
+        for p in pages:
+            self._touch(p)
+        return pages
+
+    def discard(self, page: int) -> bool:
+        """Drop ``page`` from the index (it is being freed or its content
+        is about to change).  Returns True if an entry was removed."""
+        digest = self._by_page.pop(int(page), None)
+        if digest is None:
+            return False
+        self._last_used.pop(int(page), None)
+        plist = self._by_digest[digest]
+        plist.remove(int(page))
+        if not plist:
+            del self._by_digest[digest]
+        return True
+
+    def discard_many(self, pages) -> int:
+        """Drop each of ``pages`` from the index; returns how many entries
+        were actually removed (vectorized :meth:`discard` for releasing a
+        whole page-table row)."""
+        return sum(self.discard(int(p)) for p in np.asarray(pages).ravel())

@@ -102,6 +102,16 @@ class EngineConfig:
                 "or `\"int4\"` quantized pages (paged engines only; "
                 "auto-falls back to fp32 for SSM/hybrid, errors with "
                 "explicit `paged_kv=False`)")
+    page_dedup: bool = _knob(
+        False, "content-hash full pages at admission and share "
+               "byte-identical ones by reference, wherever they sit in "
+               "either sequence (paged engines only; auto-off otherwise, "
+               "errors with explicit `paged_kv=False`)")
+    degrade: bool = _knob(
+        False, "enable the overload degrade ladder: under measured SLO "
+               "pressure step down spec_k -> smaller prefill chunks -> "
+               "shed hopeless pending requests, recovering with "
+               "hysteresis")
 
     # ------------------------------------------------------------ checks
     def validate(self) -> "EngineConfig":
@@ -138,6 +148,11 @@ class EngineConfig:
                 f"kv_dtype={self.kv_dtype!r} quantizes pooled KV pages, "
                 f"which requires the paged engine — incompatible with "
                 f"paged_kv=False")
+        if self.page_dedup and self.paged_kv is False:
+            raise ValueError(
+                "page_dedup=True shares physical pages by content hash, "
+                "which requires the paged engine — incompatible with "
+                "paged_kv=False")
         if self.page_size and self.max_seq % self.page_size:
             raise ValueError(
                 f"page_size={self.page_size} must divide "
@@ -216,10 +231,14 @@ class EngineConfig:
             pool_pages = self.max_slots * (self.max_seq // page_size)
         prefix_cache = bool(self.prefix_cache
                             and cache.supports_prefix(specs))
+        # content dedup shares whole physical pages; without a page pool
+        # there is nothing to share (an explicit paged_kv=False was
+        # already rejected by validate, like kv_dtype)
+        page_dedup = bool(self.page_dedup and paged)
         return dataclasses.replace(
             self, page_size=page_size, paged_kv=paged, spec_k=spec_k,
             kv_dtype=kv_dtype, pool_pages=pool_pages,
-            prefix_cache=prefix_cache)
+            prefix_cache=prefix_cache, page_dedup=page_dedup)
 
     def replace(self, **overrides) -> "EngineConfig":
         """New config with the ``overrides`` keyword fields swapped in —
@@ -300,6 +319,17 @@ def add_cli_args(parser, spec_k_default: int = 4) -> None:
                              "scales, dequantized in-kernel; paged engines "
                              "only — auto-falls back to fp32 for "
                              "SSM/hybrid)")
+    parser.add_argument("--page-dedup", dest="page_dedup",
+                        action="store_true", default=False,
+                        help="content-hash full pages at admission and "
+                             "share byte-identical ones by reference "
+                             "(interior-span reuse the prefix trie cannot "
+                             "see; paged engines only)")
+    parser.add_argument("--degrade", dest="degrade",
+                        action="store_true", default=False,
+                        help="enable the overload degrade ladder (spec off "
+                             "-> smaller prefill chunks -> shed hopeless "
+                             "pending requests, hysteretic recovery)")
 
 
 def config_from_args(args) -> EngineConfig:

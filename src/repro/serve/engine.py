@@ -64,6 +64,7 @@ functions.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
@@ -72,14 +73,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.common import shape_structs
+from repro.models.common import ParamSpec, shape_structs
 from repro.models.registry import get_api
 from repro.models import quant_kv
 from repro.serve import cache
 from repro.serve.config import EngineConfig, auto_page_size
 from repro.serve.sampling import (GREEDY, SamplingParams, sample_tokens,
                                   sampling_lanes)
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import DegradeLadder, Request, Scheduler
+from repro.serve.sessions import SessionStore
 from repro.serve.spec import PromptLookupDrafter, accept_tokens
 
 __all__ = ["ServeEngine", "auto_page_size"]
@@ -183,6 +185,24 @@ class ServeEngine:
             # so eviction/preemption decisions consult the shared pages
             # (probe only: must not refresh trie recency)
             self.scheduler.reuse_probe = self._probe_reuse
+        # content-addressed page dedup: digest -> resident physical pages
+        # (resolve() already gated page_dedup on paged_kv)
+        self.dedup = (cache.PageDedupIndex() if ecfg.page_dedup else None)
+        #: page-content hash, injectable so tests can force collisions
+        #: (the share decision never trusts it — a digest match is only a
+        #: candidate, confirmed by a full byte compare)
+        self._digest_fn = (
+            lambda b: hashlib.blake2b(b, digest_size=16).digest())
+        #: conversation-id -> accumulated history + retired page refs
+        self.sessions = SessionStore()
+        #: overload degrade ladder (None = every knob always at its
+        #: configured value); thresholds are policy constants, not config
+        self.ladder = DegradeLadder() if ecfg.degrade else None
+        if self.paged:
+            # eviction tie-breaks consult how many pages a victim's
+            # release would ACTUALLY free — dedup/prefix-shared pages
+            # free nothing until their last referent drops them
+            self.scheduler.freed_probe = self._freed_pages
         #: when True, every decode dispatch appends its live-lane fp32
         #: logits to ``logit_trace`` (the bench's quantization-drift probe)
         self.trace_logits = False
@@ -219,7 +239,18 @@ class ServeEngine:
             # speculative-decode counters (all 0 with spec_k == 0)
             "spec_drafted": 0, "spec_accepted": 0,
             "spec_lanes_drafted": 0, "spec_lanes_hit": 0,
-            "spec_pages_rolled_back": 0,
+            "spec_pages_rolled_back": 0, "spec_steps": 0,
+            # page-content dedup counters (all 0 with page_dedup off):
+            # admissions that shared >= 1 page by content, whole pages
+            # shared that way, and digest matches the byte compare refuted
+            "dedup_hits": 0, "dedup_pages_shared": 0,
+            "dedup_hash_collisions": 0,
+            # multi-turn session counters: turns submitted, re-admissions
+            # served from a session snapshot, tokens those reused
+            "session_turns": 0, "session_hits": 0,
+            "session_reused_tokens": 0, "session_snapshot_drops": 0,
+            # degrade-ladder counters (all 0 with degrade off)
+            "degrade_steps": 0, "prefill_dispatches": 0,
         }
         #: per-event latency samples behind the percentile summaries
         #: (sliding windows — see _LATENCY_WINDOW)
@@ -287,6 +318,27 @@ class ServeEngine:
             self.pspecs if self.paged else self.specs)
         s["slo_met"] = self.scheduler.slo_met_count
         s["slo_missed"] = self.scheduler.slo_missed_count
+        # overload accounting: goodput counts only tokens of retired
+        # requests that did not miss their SLO, over engine busy time
+        # (an open-loop driver measuring wall time divides by its own
+        # elapsed instead — see benchmarks/bench_serve.py)
+        s["shed_requests"] = self.scheduler.shed_count
+        s["goodput_tokens"] = self.scheduler.goodput_tokens
+        s["goodput_tok_s"] = self.scheduler.goodput_tokens / max(
+            s["prefill_s"] + s["decode_s"], 1e-9)
+        s["degrade_level"] = (self.ladder.level
+                              if self.ladder is not None else 0)
+        s["degrade_transitions"] = (self.ladder.transitions
+                                    if self.ladder is not None else 0)
+        # dedup rates: content hits per admission, pages shared per hit
+        s["dedup_hit_rate"] = (s["dedup_hits"] / s["admissions"]
+                               if s["admissions"] else 0.0)
+        s["dedup_pages_per_hit"] = (s["dedup_pages_shared"]
+                                    / s["dedup_hits"]
+                                    if s["dedup_hits"] else 0.0)
+        s["dedup_indexed_pages"] = (len(self.dedup)
+                                    if self.dedup is not None else 0)
+        s["sessions_live"] = len(self.sessions)
         return s
 
     # ----------------------------------------------------- compiled fns
@@ -520,6 +572,62 @@ class ServeEngine:
             Request(prompt=list(prompt), max_new=max_new, eos_id=eos_id,
                     sampling=sampling, slo_ms=slo_ms))
 
+    # --------------------------------------------------------- sessions
+    def submit_turn(self, conv_id, tokens: Sequence[int], max_new: int,
+                    eos_id: Optional[int] = None,
+                    sampling: Optional[SamplingParams] = None,
+                    slo_ms: Optional[float] = None) -> Request:
+        """Queue one turn of conversation ``conv_id``: the prompt is the
+        conversation's accumulated history (every previous turn's prompt
+        + reply) plus the new ``tokens``.  On a paged engine a returning
+        conversation re-admits its history as *shared pages* from the
+        session's retired page snapshot — full pages by reference, one
+        boundary page copy-on-write — even after every slot has turned
+        over; the reply is appended to the history when the turn
+        retires.  ``max_new``, ``eos_id``, ``sampling``, ``slo_ms`` and
+        the return value match :meth:`submit`."""
+        sess = self.sessions.ensure(conv_id)
+        req = self.submit(list(sess.history) + list(tokens), max_new,
+                          eos_id=eos_id, sampling=sampling, slo_ms=slo_ms)
+        req._conv_id = conv_id
+        self.stats["session_turns"] += 1
+        return req
+
+    def end_session(self, conv_id) -> bool:
+        """Drop conversation ``conv_id``: release its retired-page
+        snapshot (if any) and forget its history.  Returns True if the
+        session existed."""
+        existed = conv_id in self.sessions
+        row = self.sessions.pop(conv_id)
+        if row is not None:
+            self._deref_row_pages(row[row != 0])
+        return existed
+
+    def _session_retire(self, req: Request, slot: int) -> None:
+        """A session turn just retired out of ``slot``: fold its reply
+        into the conversation history and (paged engines) snapshot the
+        slot's page row — one pool reference per page — so the history
+        stays resident for the next turn.  Replaces (and releases) any
+        previous snapshot; called after speculative rollback, so the row
+        maps exactly the ``req.pos`` materialized positions."""
+        conv = getattr(req, "_conv_id", None)
+        if conv is None:
+            return
+        sess = self.sessions.ensure(conv)
+        sess.history = req.context
+        sess.turns += 1
+        if not self.paged:
+            return
+        old = self.sessions.take_snapshot(sess)
+        if old is not None:
+            self._deref_row_pages(old[old != 0])
+        npages = -(-req.pos // self.page_size)
+        row = self.table[slot, :npages].copy()
+        if req.pos > 0 and int((row != 0).sum()) == npages:
+            self.pool.ref_many(row)
+            sess.row = row
+            sess.covered = req.pos
+
     def evict(self, slot: int) -> Request:
         """Preempt the live request in ``slot`` back to the pending queue
         (its re-admission re-prefills, or prefix-reuses, its context).
@@ -541,6 +649,31 @@ class ServeEngine:
             self.prefix.length(slot) is not None
 
     # ----------------------------------------------- page-table management
+    def _deref_row_pages(self, pages: np.ndarray) -> int:
+        """Deref ``pages`` and un-index every one that actually freed from
+        the dedup index (an indexed page must always be resident — the
+        invariant the churn suite checks); returns pages freed."""
+        pages = np.asarray(pages)
+        freed = self.pool.deref_many(pages)
+        if freed and self.dedup is not None:
+            for p in np.unique(pages):
+                if self.pool.refcount[p] == 0:
+                    self.dedup.discard(int(p))
+        return freed
+
+    def _freed_pages(self, slot: int) -> int:
+        """How many physical pages releasing ``slot``'s row would actually
+        free right now: pages some other row (or a session snapshot, or a
+        dedup referent) still holds stay resident and free nothing.  The
+        scheduler's eviction tie-break consults this so it does not thrash
+        shared pages."""
+        row = self.table[slot]
+        pages = row[row != 0]
+        if not pages.size:
+            return 0
+        uniq, counts = np.unique(pages, return_counts=True)
+        return int((self.pool.refcount[uniq] == counts).sum())
+
     def _release_row(self, slot: int) -> None:
         """Drop slot's page-table row: deref every mapped page in one
         vectorized call (a page shared with another row survives — its
@@ -548,7 +681,7 @@ class ServeEngine:
         if self.prefix is not None:
             self.prefix.remove(slot)
         row = self.table[slot]
-        self.pool.deref_many(row[row != 0])
+        self._deref_row_pages(row[row != 0])
         self.table[slot] = 0
 
     def _release_trie_evicted(self, slots) -> None:
@@ -559,18 +692,33 @@ class ServeEngine:
                 self._release_row(s)
 
     def _reclaim_pages(self, needed: int) -> None:
-        """Free pages under pool pressure by dropping retired trie entries,
-        least-recently-used first, until ``needed`` pages are free (or
-        nothing reclaimable remains). Live slots are never touched."""
-        if self.prefix is None:
-            return
-        for s in list(self.prefix.lru_slots()):
+        """Free pages under pool pressure, cheapest-first, until ``needed``
+        pages are free (or nothing reclaimable remains):
+
+        1. retired trie entries, least-recently-used first — but entries
+           whose release would free *zero* pages (every page still shared
+           by another row, a dedup referent, or a session snapshot) go
+           last: dropping them costs future reuse and reclaims nothing;
+        2. then session snapshots, least-recently-used first (correctness
+           survives — the conversation's next turn just re-prefills).
+
+        Live slots are never touched."""
+        if self.prefix is not None:
+            victims = [s for s in self.prefix.lru_slots()
+                       if s not in self.scheduler.active]
+            victims.sort(key=lambda s: self._freed_pages(s) == 0)
+            for s in victims:
+                if self.pool.free_count >= needed:
+                    return
+                self._release_row(s)
+                self.prefix.evictions += 1
+        for sess in self.sessions.lru_snapshots():
             if self.pool.free_count >= needed:
-                break
-            if s in self.scheduler.active:
-                continue
-            self._release_row(s)
-            self.prefix.evictions += 1
+                return
+            row = self.sessions.take_snapshot(sess)
+            self._deref_row_pages(row[row != 0])
+            self.sessions.drops += 1
+            self.stats["session_snapshot_drops"] += 1
 
     def _ensure_pages(self, slot: int, start: int, end: int) -> bool:
         """Lazily allocate physical pages covering positions ``[start,
@@ -602,18 +750,30 @@ class ServeEngine:
         row = self.table[slot]
         stale = first + np.flatnonzero(row[first:] != 0)
         if stale.size:
-            self.pool.deref_many(row[stale])
+            self._deref_row_pages(row[stale])
             row[stale] = 0
             self.stats["spec_pages_rolled_back"] += int(stale.size)
 
-    def _bind_pages(self, slot: int, src: int, reuse: int, end: int
+    def _bind_pages(self, slot: int, src_row: Optional[np.ndarray],
+                    reuse: int, end: int, *, in_place: bool = False
                     ) -> Tuple[bool, Optional[Tuple[int, int]]]:
         """Build ``slot``'s page-table row for an admission reusing the
-        first ``reuse`` tokens of ``src``'s row, with writable pages
-        through position ``end``: full prefix pages are shared by
-        *reference* (refcount bump — zero bytes), the partial boundary
-        page gets a fresh destination for copy-on-write, and the prefill
-        span is allocated lazily.
+        first ``reuse`` tokens materialized in ``src_row`` (another slot's
+        table row, or a session snapshot), with writable pages through
+        position ``end``: full prefix pages are shared by *reference*
+        (refcount bump — zero bytes), the partial boundary page gets a
+        fresh destination for copy-on-write, and the prefill span is
+        allocated lazily.
+
+        ``in_place`` marks a re-admission into the slot whose own pages
+        already hold the prefix (``src_row`` is ignored).  The row is kept,
+        but prefill is about to overwrite every position >= ``reuse`` —
+        and any page there with refcount > 1 is *shared* (another row, a
+        session snapshot, or a dedup referent holds it), so writing
+        through it would corrupt the sharer's view.  Those pages are
+        detached first: the partial boundary page by copy-on-write, fully
+        rewritten pages by a fresh replacement (their old bytes are never
+        read through this row again).
 
         Returns ``(ok, cow)`` — ``cow`` is the ``(src_phys, dst_phys)``
         boundary copy the caller must dispatch (or None), and ``ok`` is
@@ -622,13 +782,13 @@ class ServeEngine:
         ps = self.page_size
         cow = None
         nfull = 0
-        if reuse and src != slot:
+        if reuse and not in_place:
             self._release_row(slot)
             nfull = reuse // ps
             # share the whole full-page span in two vectorized ops: one
             # refcount scatter, one row assignment (the hit path must not
             # pay a per-page Python loop)
-            shared = self.table[src, :nfull]
+            shared = np.asarray(src_row[:nfull])
             self.pool.ref_many(shared)
             self.table[slot, :nfull] = shared
             if reuse % ps:
@@ -636,7 +796,7 @@ class ServeEngine:
                 # release src's row; even if reclaim frees it, its bytes
                 # stay intact until the CoW copy (the first device write
                 # of this admission) has read them
-                src_b = int(self.table[src, nfull])
+                src_b = int(src_row[nfull])
                 if self.pool.free_count < 1:
                     self._reclaim_pages(1)
                 p = self.pool.alloc()
@@ -647,14 +807,106 @@ class ServeEngine:
                 cow = (src_b, p)
         elif not reuse:
             self._release_row(slot)
-        # (reuse with src == slot: the row is already in place)
+        else:
+            # in-place reuse: detach the overwrite span from any sharers
+            row = self.table[slot]
+            first = reuse // ps
+            for j in range(first, self.max_pages):
+                p = int(row[j])
+                if p == 0:
+                    continue
+                partial = (j == first and reuse % ps)
+                if self.pool.refcount[p] > 1:
+                    if self.pool.free_count < 1:
+                        self._reclaim_pages(1)
+                    fresh = self.pool.alloc()
+                    if fresh < 0:
+                        self._release_row(slot)
+                        return False, None
+                    if partial:
+                        # positions [j*ps, reuse) must survive the swap
+                        cow = (p, fresh)
+                    row[j] = fresh
+                    self._deref_row_pages(np.asarray([p]))
+                elif self.dedup is not None:
+                    # kept-and-(partially-)rewritten page: its content is
+                    # about to change, so its index entry must die NOW
+                    self.dedup.discard(p)
         if not self._ensure_pages(slot, reuse, end):
             self._release_row(slot)
             return False, None
         self.stats["pages_shared"] += nfull
         return True, cow
 
+    # ---------------------------------------------------- content dedup
+    def _page_bytes_of(self, page: int) -> bytes:
+        """The raw bytes of ONE physical page across every pooled leaf
+        (codes AND their fp32 scale siblings for quantized pools), in
+        deterministic leaf order — the unit of content identity.  Only
+        the page is transferred off-device, not the pool."""
+        specs = jax.tree.leaves(self.pspecs,
+                                is_leaf=lambda x: isinstance(x, ParamSpec))
+        leaves = jax.tree.leaves(self.state)
+        chunks = []
+        for leaf, spec in zip(leaves, specs):
+            ax = spec.axes.index("phys_page")
+            arr = jax.lax.index_in_dim(leaf, page, axis=ax, keepdims=False)
+            chunks.append(np.asarray(arr).tobytes())
+        return b"".join(chunks)
+
+    def _dedup_slot(self, slot: int, length: int) -> None:
+        """Content-dedup the full pages an admission just finalized for
+        ``slot`` (pages wholly below the write frontier ``length`` — the
+        spans decode and speculative rollback can never touch).
+
+        Each page this row *exclusively* owns is hashed; a digest match
+        against the :class:`~repro.serve.cache.PageDedupIndex` is only a
+        candidate — the share happens after a full byte compare confirms
+        it (a hash collision is counted and degrades to a miss, so
+        sharing is unconditionally bit-exact).  On a confirmed match the
+        fresh page is dropped for a reference to the resident one;
+        otherwise the fresh page is indexed for future admissions."""
+        ps = self.page_size
+        row = self.table[slot]
+        shared_any = False
+        for j in range(length // ps):
+            p = int(row[j])
+            if p == 0 or self.pool.refcount[p] != 1:
+                # already shared (prefix trie, session snapshot, or an
+                # earlier dedup hit) — nothing to save
+                continue
+            data = self._page_bytes_of(p)
+            digest = self._digest_fn(data)
+            match = None
+            for c in self.dedup.candidates(digest):
+                if c == p:
+                    continue
+                if self._page_bytes_of(c) == data:
+                    match = c
+                    break
+                self.stats["dedup_hash_collisions"] += 1
+            if match is None:
+                self.dedup.insert(p, digest)
+            else:
+                self.pool.ref(match)
+                row[j] = match
+                self._deref_row_pages(np.asarray([p]))   # frees the copy
+                self.stats["dedup_pages_shared"] += 1
+                shared_any = True
+        if shared_any:
+            self.stats["dedup_hits"] += 1
+
     # ------------------------------------------------------------ admit
+    def _effective_chunk(self) -> int:
+        """The prefill chunk cap for admissions planned right now: the
+        configured ``prefill_chunk``, stepped down to the smallest shape
+        bucket while the degrade ladder holds level ``SMALL_CHUNKS`` or
+        above (already-compiled buckets, so degrading never compiles)."""
+        if self.ladder is not None and \
+                self.ladder.level >= DegradeLadder.SMALL_CHUNKS:
+            return self.chunk_buckets[0]
+        return self.prefill_chunk
+
     def _feed_cost_model(self, chunk_s: Optional[float] = None,
                          step_s: Optional[float] = None,
                          tokens_per_step: Optional[float] = None) -> None:
@@ -700,12 +952,28 @@ class ServeEngine:
             # would otherwise copy half-overwritten pages)
             removed = self.prefix.remove(slot)
 
+        # ---- session snapshot: a returning conversation's accumulated
+        # history re-admits as shared pages even after every slot turned
+        # over (the trie only sees *resident* rows) — used when it covers
+        # more than the best trie match
+        sess_row = None
+        conv = getattr(req, "_conv_id", None)
+        if self.paged and conv is not None:
+            sess = self.sessions.get(conv)
+            if sess is not None and sess.row is not None:
+                s_reuse = min(sess.covered, len(ctx) - 1)
+                if s_reuse >= self.min_prefix and s_reuse > reuse:
+                    reuse, src = s_reuse, -1
+                    sess_row = sess.row
+
         # ---- plan the prefill pieces over the remaining context
+        # (the degrade ladder caps the chunk under overload)
+        chunk = self._effective_chunk()
         pieces = []
         pos = reuse
         prefill_end = reuse
         while pos < len(ctx):
-            piece = ctx[pos:pos + self.prefill_chunk]
+            piece = ctx[pos:pos + chunk]
             cb = next(b for b in self.chunk_buckets if b >= len(piece))
             # bucket padding writes (masked-off) cache positions
             # [pos, pos+cb); past max_seq dynamic_update_slice would CLAMP
@@ -723,7 +991,11 @@ class ServeEngine:
         # ---- bind physical pages (paged) — may defer on pool exhaustion
         cow = None
         if self.paged:
-            ok, cow = self._bind_pages(slot, src, reuse, prefill_end)
+            in_place = bool(reuse) and sess_row is None and src == slot
+            row_src = sess_row if sess_row is not None else (
+                self.table[src] if reuse and not in_place else None)
+            ok, cow = self._bind_pages(slot, row_src, reuse, prefill_end,
+                                       in_place=in_place)
             if not ok:
                 if removed and src != slot:    # the entry is gone even
                     self.stats["prefix_evictions"] += 1   # on deferral
@@ -737,11 +1009,16 @@ class ServeEngine:
                 return []
 
         # ---- admission committed: account the lookup + bytes moved
+        # (session-sourced reuse is tallied separately — the trie counters
+        # keep meaning "the trie found/missed it")
+        if sess_row is not None:
+            self.stats["session_hits"] += 1
+            self.stats["session_reused_tokens"] += reuse
         if self.prefix is not None:
-            if reuse:
+            if reuse and sess_row is None:
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_reused_tokens"] += reuse
-            else:
+            elif not reuse:
                 self.stats["prefix_misses"] += 1
             if removed and src != slot:
                 self.stats["prefix_evictions"] += 1
@@ -804,6 +1081,7 @@ class ServeEngine:
         dt = time.perf_counter() - t0
         self.stats["prefill_s"] += dt
         self.stats["prefill_tokens"] += len(ctx) - reuse
+        self.stats["prefill_dispatches"] += len(pieces)
         self.stats["admissions"] += 1
         if self.prefix is not None:
             self.stats["hit_admit_s" if reuse else "cold_admit_s"] += dt
@@ -821,7 +1099,13 @@ class ServeEngine:
             evicted = self.prefix.insert(slot, ctx)
             if self.paged:
                 self._release_trie_evicted(evicted)
+        if self.dedup is not None:
+            # content-dedup the full pages this admission finalized: any
+            # byte-identical resident page — wherever it sits in either
+            # sequence — replaces this row's fresh copy by reference
+            self._dedup_slot(slot, len(ctx))
         if req.slot is None:                   # retired on its first token
+            self._session_retire(req, slot)
             if self.paged and not self._row_reusable(slot):
                 self._release_row(slot)
             return [req]
@@ -905,7 +1189,13 @@ class ServeEngine:
             # this step wrote each live slot's fed token into its pages
             for slot in live:
                 self.prefix.extend(slot, int(tokens[slot, 0]))
+        reqs = {s: self.scheduler.active[s] for s in live}
         done = self.scheduler.on_decode({s: int(nxt[s]) for s in live})
+        for slot in live:
+            if slot not in self.scheduler.active:
+                # retiring session turns snapshot their page row (one
+                # pool ref per page) before any release can free it
+                self._session_retire(reqs[slot], slot)
         if self.paged:
             # free a retiring slot's pages the moment nothing can reuse
             # them: no prefix cache at all, or its trie entry was LRU-
@@ -1020,6 +1310,7 @@ class ServeEngine:
         self.stats["decode_s"] += dt
         self.stats["decode_tokens"] += n_emitted
         self.stats["decode_steps"] += 1
+        self.stats["spec_steps"] += 1
         self.stats["decode_lane_steps"] += len(live)
         self.stats["occupancy_sum"] += occ
         self._step_times.append(dt)
@@ -1035,23 +1326,39 @@ class ServeEngine:
                     self.prefix.extend(slot, t)
         new_len = {slot: int(positions[slot]) + len(emitted[slot])
                    for slot in live}
+        reqs = {s: self.scheduler.active[s] for s in live}
         done = self.scheduler.on_decode_tokens(emitted)
         if self.paged:
             for slot in live:
                 # rewind: rejected-draft pages past the accepted frontier
                 self._rollback_pages(slot, new_len[slot])
-                if slot not in self.scheduler.active and \
-                        not self._row_reusable(slot):
-                    self._release_row(slot)
+                if slot not in self.scheduler.active:
+                    # snapshot AFTER rollback: the row maps exactly the
+                    # accepted (materialized) positions
+                    self._session_retire(reqs[slot], slot)
+                    if not self._row_reusable(slot):
+                        self._release_row(slot)
+        else:
+            for slot in live:
+                if slot not in self.scheduler.active:
+                    self._session_retire(reqs[slot], slot)
         return done
 
     def step(self) -> List[Request]:
-        """One engine iteration: SLO preemption check, refill free slots
+        """One engine iteration: degrade-ladder observation (when
+        ``degrade`` is on), SLO preemption check, refill free slots
         (chunked prefill per admission), then one batched decode step shared
         by ALL live slots — speculative multi-token decode when ``spec_k``
         is set, the classic sequential step otherwise. Returns the requests
-        that finished during this iteration."""
+        that finished during this iteration (including any the ladder shed
+        — retired-with-reason, never silently dropped)."""
         finished: List[Request] = []
+        if self.ladder is not None:
+            level = self.ladder.observe(self.scheduler.slo_pressure())
+            if level:
+                self.stats["degrade_steps"] += 1
+            if level >= DegradeLadder.SHED:
+                finished += self.scheduler.shed_hopeless()
         victim = self.scheduler.maybe_preempt()
         if victim is not None:
             self.evict(victim)
@@ -1059,7 +1366,10 @@ class ServeEngine:
         for slot, req in self.scheduler.admissions():
             finished += self._admit(slot, req)
         if self.scheduler.active:
-            finished += (self._spec_decode_once() if self.spec_k
+            spec_on = self.spec_k and not (
+                self.ladder is not None
+                and self.ladder.level >= DegradeLadder.SPEC_OFF)
+            finished += (self._spec_decode_once() if spec_on
                          else self._decode_once())
         return finished
 

@@ -41,7 +41,7 @@ from typing import (TYPE_CHECKING, Callable, Deque, Dict, List, Optional,
 if TYPE_CHECKING:  # sampling imports jax; keep this module jax-free
     from repro.serve.sampling import SamplingParams
 
-__all__ = ["Request", "Scheduler"]
+__all__ = ["Request", "Scheduler", "DegradeLadder"]
 
 _rid_counter = itertools.count()
 
@@ -75,6 +75,11 @@ class Request:
     submit_t: Optional[float] = None
     finish_t: Optional[float] = None
     slo_met: Optional[bool] = None
+    #: why the scheduler shed this request instead of serving it (``None``
+    #: for every served request) — a shed request is *retired with a
+    #: reason*, never silently dropped: it lands in ``finished`` like any
+    #: other, distinguishable by this field
+    shed_reason: Optional[str] = None
 
     @property
     def context(self) -> List[int]:
@@ -139,6 +144,18 @@ class Scheduler:
         self.est_tokens_per_step: float = 1.0
         self.slo_met_count = 0
         self.slo_missed_count = 0
+        #: requests retired unserved by :meth:`shed_hopeless`
+        self.shed_count = 0
+        #: tokens generated by retired requests that did NOT miss their
+        #: SLO (met it, or carried none) — the numerator of goodput
+        self.goodput_tokens = 0
+        #: optional engine-fed probe mapping a live slot to how many
+        #: physical pages releasing its row would actually free (pages
+        #: shared by prefix or content dedup free nothing until the last
+        #: referent drops them).  Eviction tie-breaking consults it so a
+        #: victim whose pages are all shared — ~0 reclaim benefit — is
+        #: not preferred over one whose eviction genuinely frees memory.
+        self.freed_probe: Optional[Callable[[int], int]] = None
 
     @classmethod
     def from_config(cls, config, *,
@@ -308,9 +325,59 @@ class Scheduler:
                     self.slo_met_count += 1
                 else:
                     self.slo_missed_count += 1
+            if req.slo_met is not False:
+                self.goodput_tokens += len(req.generated)
             self.finished.append(req)
             return True
         return False
+
+    # ---------------------------------------------------------------- shed
+    def slo_pressure(self, now: Optional[float] = None) -> float:
+        """Fraction of SLO'd work (pending + active) whose deadline is at
+        risk under the current cost model as of ``now`` (default: the
+        scheduler clock): slack below one batched decode step of
+        headroom.  0.0 with no SLO'd requests anywhere — the degrade
+        ladder's input signal."""
+        if now is None:
+            now = self.clock()
+        slod = [r for r in itertools.chain(self.pending,
+                                           self.active.values())
+                if self.deadline(r) is not None]
+        if not slod:
+            return 0.0
+        at_risk = sum(1 for r in slod
+                      if self.slack_s(r, now) < self.est_step_s)
+        return at_risk / len(slod)
+
+    def shed_hopeless(self, now: Optional[float] = None,
+                      reason: str = "overload: SLO unattainable"
+                      ) -> List[Request]:
+        """Retire-with-reason every *pending* request whose SLO is already
+        unattainable as of ``now`` (default: the scheduler clock) —
+        negative slack even if admitted immediately — the
+        lowest-value work under overload: serving it spends slots without
+        earning goodput, and EDF would admit it *first* (earliest
+        deadline).  Each shed request lands in ``finished`` with
+        ``shed_reason`` set and counts as an SLO miss; live requests are
+        never shed.  Returns the shed requests."""
+        if now is None:
+            now = self.clock()
+        doomed = [r for r in self.pending
+                  if self.deadline(r) is not None
+                  and self.slack_s(r, now) < 0.0]
+        if not doomed:
+            return []
+        dropped = {r.rid for r in doomed}
+        self.pending = deque(r for r in self.pending
+                             if r.rid not in dropped)
+        for req in doomed:
+            req.shed_reason = reason
+            req.finish_t = now
+            req.slo_met = False
+            self.slo_missed_count += 1
+            self.shed_count += 1
+            self.finished.append(req)
+        return doomed
 
     # --------------------------------------------------------------- evict
     def evict(self, slot: int) -> Request:
@@ -329,14 +396,19 @@ class Scheduler:
         largest post-requeue slack (re-prefilling its full context plus its
         remaining decode budget still beats its deadline).  No-SLO requests
         have infinite slack, so they are preferred victims.  Ties prefer
-        the request with the least generated progress (least re-prefill
-        waste). ``None`` when nothing is active."""
+        the slot whose eviction actually frees pages (``freed_probe`` —
+        a victim whose pages are all prefix- or dedup-shared reclaims
+        nothing, so evicting it is pure re-prefill waste), then the
+        request with the least generated progress. ``None`` when nothing
+        is active."""
         if not self.active:
             return None
         if now is None:
             now = self.clock()
+        probe = self.freed_probe or (lambda s: 0)
         return max(self.active,
                    key=lambda s: (self.slack_s(self.active[s], now),
+                                  probe(s),
                                   -len(self.active[s].generated)))
 
     def maybe_preempt(self, now: Optional[float] = None) -> Optional[int]:
@@ -382,3 +454,86 @@ class Scheduler:
     def occupancy(self) -> float:
         """Fraction of decode-batch slots currently live."""
         return len(self.active) / self.max_slots
+
+
+class DegradeLadder:
+    """Hysteretic overload controller: which knob to give up next.
+
+    Pure host-side state machine (no clock of its own — the engine feeds
+    it one :meth:`Scheduler.slo_pressure` observation per step), stepping
+    through four levels in a fixed, monotone order:
+
+    ======  ==============  ================================================
+    level   name            engine effect
+    ======  ==============  ================================================
+    0       ``normal``      every knob at its configured value
+    1       ``spec_off``    speculative decode suspended (drafting +
+                            K+1-wide verification is wasted work when
+                            accept rates drop under adversarial traffic)
+    2       ``small_chunks``  prefill dispatches capped at the smallest
+                            shape bucket (cheapest marginal admission)
+    3       ``shed``        pending requests whose SLO is already
+                            unattainable are retired-with-reason
+    ======  ==============  ================================================
+
+    Level changes are **hysteretic**: pressure above ``hi`` steps up one
+    level per observation (pressure is re-measured between steps, so a
+    sustained flat overload climbs 0→1→2→3 and *stays* — no oscillation);
+    stepping down requires ``recover_steps`` consecutive observations
+    below ``lo``, and the calm counter resets on every excursion above it.
+    Every degraded level keeps tokens bit-exact: spec on/off and prefill
+    chunking are output-invariant, and shed requests emit nothing.
+    """
+
+    #: the levels, in the order the ladder gives things up
+    NORMAL, SPEC_OFF, SMALL_CHUNKS, SHED = 0, 1, 2, 3
+    LEVEL_NAMES = ("normal", "spec_off", "small_chunks", "shed")
+
+    def __init__(self, *, hi: float = 0.5, lo: float = 0.2,
+                 recover_steps: int = 8):
+        """``hi``/``lo`` are the step-up / step-down pressure thresholds
+        (``lo < hi`` — the dead band between them holds the current
+        level); ``recover_steps`` consecutive calm observations are
+        required per step down."""
+        if not 0.0 <= lo < hi <= 1.0:
+            raise ValueError(
+                f"need 0 <= lo < hi <= 1, got lo={lo}, hi={hi}")
+        if recover_steps < 1:
+            raise ValueError(
+                f"recover_steps must be >= 1, got {recover_steps}")
+        self.hi = hi
+        self.lo = lo
+        self.recover_steps = recover_steps
+        self.level = self.NORMAL
+        #: level changes in either direction (a flat-overload trace makes
+        #: at most 3 — the oscillation check the policy tests pin)
+        self.transitions = 0
+        #: observations spent at any degraded (non-normal) level
+        self.steps_degraded = 0
+        self._calm = 0
+
+    @property
+    def level_name(self) -> str:
+        """Human-readable name of the current level."""
+        return self.LEVEL_NAMES[self.level]
+
+    def observe(self, pressure: float) -> int:
+        """Feed one pressure sample in [0, 1]; returns the (possibly
+        changed) level for the engine step about to run."""
+        if pressure > self.hi:
+            self._calm = 0
+            if self.level < self.SHED:
+                self.level += 1
+                self.transitions += 1
+        elif pressure < self.lo:
+            self._calm += 1
+            if self._calm >= self.recover_steps \
+                    and self.level > self.NORMAL:
+                self.level -= 1
+                self.transitions += 1
+                self._calm = 0
+        else:
+            self._calm = 0
+        if self.level:
+            self.steps_degraded += 1
+        return self.level

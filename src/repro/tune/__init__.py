@@ -2,11 +2,17 @@
 (:class:`~repro.serve.EngineConfig`) over a fixed workload and rank the
 outcomes with multi-objective Pareto dominance (see
 :mod:`repro.tune.sweep`, :mod:`repro.tune.pareto` and
-``docs/autotune.md``)."""
+``docs/autotune.md``), plus seeded bursty/multi-turn traffic traces and
+the deterministic virtual-clock open-loop replay driver behind the
+overload benchmarks (:mod:`repro.tune.workloads`)."""
 from repro.tune.pareto import argbest, dominates, pareto_front
 from repro.tune.sweep import METRIC_KEYS, SweepSpec, run_sweep, sweep_workload
+from repro.tune.workloads import (Arrival, VirtualCosts, bursty_trace,
+                                  multi_turn_trace, replay_open_loop)
 
 __all__ = [
     "SweepSpec", "run_sweep", "sweep_workload", "METRIC_KEYS",
     "dominates", "pareto_front", "argbest",
+    "Arrival", "VirtualCosts", "bursty_trace", "multi_turn_trace",
+    "replay_open_loop",
 ]

@@ -41,7 +41,7 @@ NON_DEFAULT = {
     "max_slots": 2, "max_seq": 64, "prefill_chunk": 16, "page_size": 16,
     "prefix_cache": False, "min_prefix": 4, "paged_kv": False,
     "pool_pages": 7, "trie_capacity": 5, "spec_k": 3, "spec_ngram": 2,
-    "kv_dtype": "int8",
+    "kv_dtype": "int8", "page_dedup": True, "degrade": True,
 }
 
 
@@ -81,6 +81,7 @@ VALIDATE_ERRORS = [
     (dict(kv_dtype="int2"), "kv_dtype must be one of"),
     (dict(kv_dtype="int8", paged_kv=False), "paged_kv=False"),
     (dict(page_size=24, max_seq=64), "must divide"),
+    (dict(page_dedup=True, paged_kv=False), "requires the paged engine"),
 ]
 
 
@@ -207,7 +208,8 @@ def test_cli_reaches_every_field():
     argv = ["--slots", "2", "--max-seq", "64", "--prefill-chunk", "16",
             "--page", "16", "--no-prefix-cache", "--min-prefix", "4",
             "--no-paged-kv", "--pool-pages", "7", "--trie-capacity", "5",
-            "--spec-k", "3", "--spec-ngram", "2", "--kv-dtype", "fp32"]
+            "--spec-k", "3", "--spec-ngram", "2", "--kv-dtype", "fp32",
+            "--page-dedup", "--degrade"]
     got = config_from_args(_parse(argv))
     want = dict(NON_DEFAULT, paged_kv=False, kv_dtype="fp32")
     assert got == EngineConfig(**want)

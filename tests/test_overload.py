@@ -1,0 +1,292 @@
+"""Overload-policy tests: degrade ladder, SLO pressure, shedding, and the
+virtual-clock burst replay — all on fake/virtual clocks, so every decision
+is deterministic (no wall time anywhere near an assertion)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.common import init_params
+from repro.models.registry import get_api
+from repro.serve import DegradeLadder, EngineConfig, Request, Scheduler, \
+    ServeEngine
+from repro.tune.workloads import (Arrival, VirtualCosts, bursty_trace,
+                                  multi_turn_trace, replay_open_loop)
+
+jax.config.update("jax_enable_x64", False)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _sched(**kw):
+    clk = FakeClock()
+    s = Scheduler(kw.pop("max_slots", 2), kw.pop("max_seq", 64),
+                  prefill_chunk=kw.pop("prefill_chunk", 8), clock=clk, **kw)
+    return s, clk
+
+
+# ---------------------------------------------------------------------------
+# DegradeLadder: monotone order, hysteresis, no oscillation
+# ---------------------------------------------------------------------------
+
+def test_ladder_climbs_monotone_and_stays_on_flat_overload():
+    """Sustained flat overload climbs normal -> spec_off -> small_chunks
+    -> shed, one level per observation, then HOLDS: at most 3 transitions
+    no matter how long the overload lasts (the no-oscillation pin)."""
+    lad = DegradeLadder(hi=0.5, lo=0.2, recover_steps=4)
+    levels = [lad.observe(0.9) for _ in range(20)]
+    assert levels[:3] == [1, 2, 3]
+    assert all(lv == DegradeLadder.SHED for lv in levels[3:])
+    assert lad.transitions == 3
+    assert lad.level_name == "shed"
+    assert lad.steps_degraded == 20
+
+
+def test_ladder_recovery_needs_consecutive_calm():
+    """Stepping down needs recover_steps CONSECUTIVE calm observations;
+    any excursion above lo resets the count, and the dead band between
+    lo and hi holds the level without progress in either direction."""
+    lad = DegradeLadder(hi=0.5, lo=0.2, recover_steps=3)
+    for _ in range(2):
+        lad.observe(1.0)
+    assert lad.level == 2
+    # two calm samples, then an excursion: no step down
+    lad.observe(0.0)
+    lad.observe(0.0)
+    lad.observe(0.3)            # dead band: resets calm, holds level
+    assert lad.level == 2
+    lad.observe(0.0)
+    lad.observe(0.0)
+    assert lad.level == 2       # still only 2 consecutive
+    lad.observe(0.0)
+    assert lad.level == 1       # third consecutive: one step down
+    for _ in range(3):
+        lad.observe(0.1)
+    assert lad.level == 0
+    assert lad.transitions == 4
+
+
+def test_ladder_oscillating_pressure_does_not_thrash():
+    """Pressure bouncing between the thresholds (the pattern naive
+    controllers thrash on): level never steps DOWN without the full calm
+    streak, so the trajectory is ratchet-like, not oscillating."""
+    lad = DegradeLadder(hi=0.5, lo=0.2, recover_steps=8)
+    seq = [0.9, 0.1, 0.9, 0.1, 0.9, 0.1] * 4
+    levels = [lad.observe(p) for p in seq]
+    assert levels == sorted(levels), "level stepped down mid-oscillation"
+    assert lad.level == DegradeLadder.SHED
+
+
+def test_ladder_validation():
+    with pytest.raises(ValueError, match="lo < hi"):
+        DegradeLadder(hi=0.2, lo=0.5)
+    with pytest.raises(ValueError, match="recover_steps"):
+        DegradeLadder(recover_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: pressure signal, shedding, goodput accounting
+# ---------------------------------------------------------------------------
+
+def test_slo_pressure_fraction_at_risk():
+    sched, clk = _sched()
+    assert sched.slo_pressure() == 0.0          # no work at all
+    sched.update_cost_model(chunk_s=0.1, step_s=0.1)
+    safe = sched.submit(Request(prompt=[1] * 8, max_new=2, slo_ms=60_000))
+    sched.submit(Request(prompt=[2] * 8, max_new=2, slo_ms=50))
+    sched.submit(Request(prompt=[3] * 8, max_new=2))    # no SLO: excluded
+    # 1 of 2 SLO'd requests has slack below one decode step
+    assert sched.slo_pressure() == pytest.approx(0.5)
+    clk.t += 120.0                              # now both are at risk
+    assert sched.slo_pressure() == pytest.approx(1.0)
+    assert sched.slack_s(safe) < 0
+
+
+def test_shed_hopeless_retires_with_reason_only_doomed_pending():
+    """Only pending requests with NEGATIVE slack are shed; each lands in
+    finished with shed_reason set (never silently dropped), counts as an
+    SLO miss and a shed, and live requests are untouched."""
+    sched, clk = _sched()
+    sched.update_cost_model(chunk_s=0.1, step_s=0.1)
+    live = sched.submit(Request(prompt=[1] * 8, max_new=2, slo_ms=10))
+    sched.admissions()                          # live now; later doomed
+    doomed = sched.submit(Request(prompt=[2] * 8, max_new=2, slo_ms=50))
+    ok = sched.submit(Request(prompt=[3] * 8, max_new=2, slo_ms=60_000))
+    noslo = sched.submit(Request(prompt=[4] * 8, max_new=2))
+    clk.t = 1.0                                 # doomed's 50ms is history
+    shed = sched.shed_hopeless()
+    assert shed == [doomed]
+    assert doomed.shed_reason == "overload: SLO unattainable"
+    assert doomed.slo_met is False and doomed.finish_t == 1.0
+    assert doomed in sched.finished
+    assert sched.shed_count == 1 and sched.slo_missed_count == 1
+    assert list(sched.pending) == [ok, noslo]
+    assert live.slot in sched.active            # live is never shed
+    assert sched.shed_hopeless() == []          # idempotent
+
+
+def test_goodput_counts_met_and_unslod_tokens_only():
+    sched, clk = _sched()
+    met = sched.submit(Request(prompt=[1, 2], max_new=2, slo_ms=1000))
+    noslo = sched.submit(Request(prompt=[3, 4], max_new=2))
+    sched.admissions()
+    miss = sched.submit(Request(prompt=[5, 6], max_new=2, slo_ms=10))
+    sched.on_prefill(met, 7)
+    sched.on_prefill(noslo, 7)
+    sched.on_decode({met.slot: 8, noslo.slot: 8})   # both retire (2 tokens)
+    clk.t = 5.0                                     # miss's deadline gone
+    sched.admissions()
+    sched.on_prefill(miss, 7)
+    sched.on_decode({miss.slot: 8})
+    assert met.slo_met is True and miss.slo_met is False
+    assert sched.goodput_tokens == 4                # met + no-SLO, not miss
+
+
+def test_eviction_tiebreak_prefers_actually_freeing_pages():
+    """Equal slack (both no-SLO): the victim whose release would free
+    pages wins over one whose pages are all shared (~0 reclaim)."""
+    sched, _ = _sched()
+    a = sched.submit(Request(prompt=[1] * 8, max_new=4))
+    b = sched.submit(Request(prompt=[2] * 8, max_new=4))
+    sched.admissions()
+    sched.on_prefill(a, 9)
+    sched.on_prefill(b, 9)
+    sched.freed_probe = lambda s: 3 if s == b.slot else 0
+    assert sched.eviction_candidate() == b.slot
+    sched.freed_probe = lambda s: 3 if s == a.slot else 0
+    assert sched.eviction_candidate() == a.slot
+
+
+# ---------------------------------------------------------------------------
+# trace builders: seeded, bounded, validated
+# ---------------------------------------------------------------------------
+
+def test_bursty_trace_deterministic_and_bounded():
+    kw = dict(rate=2.0, burst_rate=20.0, mean_prompt=16, mean_gen=8,
+              max_prompt=32, max_gen=16, vocab=97, slo_ms=500.0, seed=5)
+    a = bursty_trace(40, **kw)
+    b = bursty_trace(40, **kw)
+    assert [(x.t, x.prompt, x.max_new) for x in a] \
+        == [(x.t, x.prompt, x.max_new) for x in b]
+    assert all(1 <= len(x.prompt) <= 32 and 1 <= x.max_new <= 16
+               for x in a)
+    assert all(a[i].t < a[i + 1].t for i in range(len(a) - 1))
+    assert all(x.slo_ms == 500.0 and x.conv_id is None for x in a)
+    assert bursty_trace(0, rate=1.0) == []
+    with pytest.raises(ValueError, match="rate"):
+        bursty_trace(4, rate=0.0)
+    with pytest.raises(ValueError, match="burst_duty"):
+        bursty_trace(4, rate=1.0, burst_duty=0.0)
+
+
+def test_multi_turn_trace_shape():
+    tr = multi_turn_trace(3, 4, turn_tokens=6, gen=3, think_s=0.25, seed=1)
+    assert len(tr) == 12
+    by_conv = {}
+    for a in tr:
+        by_conv.setdefault(a.conv_id, []).append(a)
+    assert len(by_conv) == 3
+    for turns in by_conv.values():
+        assert turns[0].think_s == 0.0
+        assert all(t.think_s == 0.25 for t in turns[1:])
+        assert all(len(t.prompt) == 6 and t.max_new == 3 for t in turns)
+
+
+def test_virtual_costs_validation():
+    with pytest.raises(ValueError, match="positive"):
+        VirtualCosts(step_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# burst replay: canned burst through a real engine on the virtual clock
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3.2-3b").reduced(dtype=jnp.float32, n_layers=1)
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    return cfg, params
+
+
+def _replay(tiny_model, trace, *, degrade):
+    cfg, params = tiny_model
+    eng = ServeEngine(cfg, params, config=EngineConfig(
+        max_slots=2, max_seq=96, prefill_chunk=16, spec_k=3,
+        degrade=degrade))
+    return replay_open_loop(eng, trace, VirtualCosts())
+
+
+def test_burst_replay_ladder_beats_no_ladder_and_is_deterministic(
+        tiny_model):
+    """Canned overload burst: the degrade ladder's goodput is >= the
+    no-ladder baseline at the same offered load, shed == retired-with-
+    reason, every request the ladder arm served carries bit-identical
+    tokens, and a repeat replay reproduces the trajectory exactly."""
+    cfg, _ = tiny_model
+    trace = bursty_trace(18, rate=2.0, burst_rate=30.0, mean_prompt=16,
+                         mean_gen=8, max_prompt=40, max_gen=16,
+                         vocab=cfg.vocab, slo_ms=800.0, seed=11)
+    off = _replay(tiny_model, trace, degrade=False)
+    on = _replay(tiny_model, trace, degrade=True)
+    again = _replay(tiny_model, trace, degrade=True)
+    assert on["outputs"] == again["outputs"]
+    assert on["elapsed_s"] == again["elapsed_s"]
+    assert on["shed"] == again["shed"]
+    assert on["goodput_tok_s"] >= off["goodput_tok_s"]
+    assert on["shed"] == sum(1 for r in on["finished"]
+                             if r.shed_reason is not None)
+    assert off["shed"] == 0
+    for i, (got, want) in enumerate(zip(on["outputs"], off["outputs"])):
+        assert not got or got == want, f"arrival {i} tokens changed"
+    # the ladder actually engaged on this trace
+    assert on["stats"]["degrade_transitions"] >= 1
+    assert on["stats"]["degrade_steps"] >= 1
+
+
+def test_burst_replay_calm_traffic_never_degrades(tiny_model):
+    """With generous SLOs and no bursts the ladder never leaves normal,
+    sheds nothing, and outputs match the ladder-off engine everywhere —
+    degrade must be free when the system is healthy."""
+    cfg, _ = tiny_model
+    trace = bursty_trace(6, rate=0.5, burst_rate=0.5, mean_prompt=12,
+                         mean_gen=6, max_prompt=24, max_gen=10,
+                         vocab=cfg.vocab, slo_ms=600_000.0, seed=3)
+    off = _replay(tiny_model, trace, degrade=False)
+    on = _replay(tiny_model, trace, degrade=True)
+    assert on["outputs"] == off["outputs"]
+    assert on["shed"] == 0
+    assert on["stats"]["degrade_transitions"] == 0
+    assert on["slo_missed"] == 0
+
+
+def test_replay_multi_turn_causal_gating(tiny_model):
+    """Conversation turns replay causally: turn k+1 is submitted only
+    after turn k finishes (+think), sessions score a hit per returning
+    turn, and every turn gets output."""
+    cfg, _ = tiny_model
+    trace = multi_turn_trace(2, 3, turn_tokens=8, gen=4, think_s=0.2,
+                             vocab=cfg.vocab, seed=2)
+    cfg_, params = tiny_model
+    eng = ServeEngine(cfg_, params, config=EngineConfig(
+        max_slots=2, max_seq=96, prefill_chunk=16, spec_k=0))
+    res = replay_open_loop(eng, trace)
+    assert all(len(o) == 4 for o in res["outputs"])
+    assert res["stats"]["session_turns"] == 6
+    assert res["stats"]["session_hits"] == 4
+
+
+def test_replay_restores_scheduler_clock(tiny_model):
+    cfg, params = tiny_model
+    eng = ServeEngine(cfg, params, config=EngineConfig(
+        max_slots=2, max_seq=64, prefill_chunk=16, spec_k=0))
+    saved = eng.scheduler.clock
+    replay_open_loop(eng, [Arrival(t=0.0, prompt=[1, 2, 3], max_new=2)])
+    assert eng.scheduler.clock is saved

@@ -406,3 +406,182 @@ def test_scheduler_reuse_probe_discounts_resident_prefix():
     sched.on_prefill(shared, 9)
     sched.on_prefill(private, 9)
     assert sched.eviction_candidate() == shared.slot
+
+
+# ---------------------------------------------------------------------------
+# page-content dedup: interior spans the prefix trie cannot see
+# ---------------------------------------------------------------------------
+
+def _dedup_cfg():
+    """1-layer config: layer-0 KV rows are a pure function of
+    (token, position), so equal interior content at equal positions means
+    byte-identical pages — the regime content dedup can actually hit."""
+    return _cfg(n_layers=1)
+
+
+def _dedup_prompts(cfg, rng, n=3, head=16, span=32):
+    """``n`` prompts: one page of unique tokens (distinct first token —
+    the prefix trie matches zero leading tokens across requests), then
+    the SAME ``span``-token run at the same interior positions."""
+    shared = rng.integers(0, cfg.vocab, (span,)).tolist()
+    prompts = []
+    for i in range(n):
+        h = rng.integers(0, cfg.vocab, (head,)).tolist()
+        h[0] = i
+        prompts.append(h + shared)
+    return prompts
+
+
+def _dedup_kw(**over):
+    kw = dict(max_slots=2, max_seq=64, prefill_chunk=16, page_size=16,
+              paged_kv=True, pool_pages=24, min_prefix=8)
+    kw.update(over)
+    return kw
+
+
+def _conserved_with_dedup(eng):
+    """Pool refcounts equal the table ground truth, and the dedup index
+    never points at a freed page."""
+    counts = np.zeros(eng.pool.num_pages, np.int64)
+    for slot in range(eng.max_slots):
+        for lp in range(eng.max_pages):
+            p = int(eng.table[slot, lp])
+            if p:
+                counts[p] += 1
+    for p in range(1, eng.pool.num_pages):
+        assert int(eng.pool.refcount[p]) == counts[p], p
+    assert int(eng.pool.refcount[0]) == 1
+    if eng.dedup is not None:
+        for p in eng.dedup.pages():
+            assert int(eng.pool.refcount[p]) > 0, (
+                f"dedup index points at freed page {p}")
+
+
+def test_dedup_interior_span_shared_and_bitexact():
+    """Tentpole: admissions whose shared content sits at positions >=
+    page_size — invisible to the prefix trie by construction — share
+    whole pages through the content index, bit-exact vs dedup off."""
+    cfg = _dedup_cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(41)
+    prompts = _dedup_prompts(cfg, rng)
+    gens = [4] * len(prompts)
+    off, tok_off = _run_engine(cfg, params, prompts, gens, **_dedup_kw())
+    on, tok_on = _run_engine(cfg, params, prompts, gens,
+                             **_dedup_kw(page_dedup=True))
+    assert tok_on == tok_off, "page dedup changed greedy tokens"
+    st = on.stats_summary()
+    assert st["prefix_hits"] == 0, "trie hit — the workload no longer " \
+        "isolates interior-span dedup"
+    assert st["dedup_hits"] >= len(prompts) - 1
+    assert st["dedup_pages_per_hit"] >= 1.0
+    assert st["dedup_hash_collisions"] == 0
+    _conserved_with_dedup(on)
+    # dedup actually reduced resident pages vs the dedup-off engine
+    assert on.pool.used_count < off.pool.used_count
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "int4"])
+def test_dedup_quantized_pages_hash_codes_and_scales(kv_dtype):
+    """Quantized pools dedup on (codes, scales) page content: identical
+    interior spans still share, and tokens stay bit-exact vs the same
+    dtype with dedup off (dedup never changes content, any dtype)."""
+    cfg = _dedup_cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(42)
+    prompts = _dedup_prompts(cfg, rng)
+    gens = [4] * len(prompts)
+    off, tok_off = _run_engine(cfg, params, prompts, gens,
+                               **_dedup_kw(kv_dtype=kv_dtype))
+    on, tok_on = _run_engine(cfg, params, prompts, gens,
+                             **_dedup_kw(kv_dtype=kv_dtype,
+                                         page_dedup=True))
+    assert tok_on == tok_off
+    st = on.stats_summary()
+    assert st["dedup_hits"] >= len(prompts) - 1
+    assert st["dedup_hash_collisions"] == 0
+    _conserved_with_dedup(on)
+
+
+def test_dedup_hash_collision_falls_back_to_byte_compare():
+    """A colliding digest is only a CANDIDATE: the full byte compare
+    refutes it, the collision is counted, and no page is wrongly shared
+    (tokens bit-exact, refcounts conserved).  Forced by injecting a
+    constant digest function, the worst possible hash."""
+    cfg = _dedup_cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(43)
+    prompts = _dedup_prompts(cfg, rng)
+    gens = [4] * len(prompts)
+    _, tok_off = _run_engine(cfg, params, prompts, gens, **_dedup_kw())
+    eng = ServeEngine(cfg, params, **_dedup_kw(page_dedup=True))
+    eng._digest_fn = lambda b: b"\x00" * 16
+    reqs = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    eng.run()
+    assert [r.generated for r in reqs] == tok_off
+    st = eng.stats_summary()
+    # every unique head page collides with every other indexed page; the
+    # byte compare must have refuted those while still sharing the
+    # genuinely identical interior span
+    assert st["dedup_hash_collisions"] > 0
+    assert st["dedup_hits"] >= len(prompts) - 1
+    _conserved_with_dedup(eng)
+
+
+def test_dedup_detach_on_inplace_readmission_keeps_sharers_intact():
+    """Re-admitting through a retired slot's own row (in_place) must not
+    write through pages other rows share by content: shared pages in the
+    overwrite span are detached (boundary page copy-on-write, fully
+    rewritten pages replaced fresh), tokens stay cold-exact and the index
+    never points at a freed page."""
+    cfg = _dedup_cfg()
+    api, params = _params(cfg)
+    rng = np.random.default_rng(44)
+    prompts = _dedup_prompts(cfg, rng, n=2)
+    eng = ServeEngine(cfg, params, **_dedup_kw(page_dedup=True))
+    r1, r2 = [eng.submit(p, 4) for p in prompts]
+    eng.run()
+    assert eng.stats["dedup_hits"] >= 1, "setup never shared a page"
+    _conserved_with_dedup(eng)
+    # same head as r1 up to a mid-page point, then diverge: the trie
+    # matches r1's retired row (src == slot, in-place), and the overwrite
+    # span crosses the dedup-shared interior pages
+    follow = prompts[0][:24] + rng.integers(0, cfg.vocab, (12,)).tolist()
+    r3 = eng.submit(follow, 4)
+    eng.run()
+    _conserved_with_dedup(eng)
+    cold = ServeEngine(cfg, params, **_dedup_kw(prefix_cache=False))
+    c3 = cold.submit(list(follow), 4)
+    cold.run()
+    assert r3.generated == c3.generated
+
+
+def test_dedup_index_lru_capacity_and_discard():
+    """PageDedupIndex host unit: candidates by digest, LRU capacity
+    eviction, discard on free."""
+    from repro.serve import PageDedupIndex
+    idx = PageDedupIndex(capacity=2)
+    idx.insert(1, b"a")
+    idx.insert(2, b"a")
+    assert idx.candidates(b"a") == [1, 2] and len(idx) == 2
+    idx.insert(3, b"b")                       # capacity 2: evicts LRU
+    assert idx.evictions == 1 and len(idx) == 2
+    assert 3 in idx.pages()
+    assert idx.discard(3) and not idx.discard(3)
+    assert idx.candidates(b"b") == []
+    # re-inserting a page replaces its old digest entry
+    idx.insert(2, b"c")
+    assert idx.digest_of(2) == b"c" and idx.candidates(b"a") != [1, 2]
+
+
+def test_dedup_requires_paged_engine():
+    cfg = _cfg()
+    api, params = _params(cfg)
+    with pytest.raises(ValueError, match="requires the paged engine"):
+        ServeEngine(cfg, params, max_seq=32, paged_kv=False,
+                    page_dedup=True)
+    # auto mode: dedup silently off on an unpageable family
+    ssm = _cfg("falcon-mamba-7b")
+    _, sparams = _params(ssm)
+    eng = ServeEngine(ssm, sparams, max_seq=32, page_dedup=True)
+    assert not eng.paged and eng.dedup is None
