@@ -138,6 +138,23 @@ BURST_RATE = 2.0
 BURST_PEAK_RATE = 30.0
 BURST_SLO_MS = 900.0
 BURST_GOODPUT_FLOOR = 1.15
+# Mesh-sharded workload: one seeded 16-request batch served two ways —
+# by 8 fresh single-device 2-slot engines (engine j takes requests
+# {j, j+8}, matching the sharded scheduler's lane order) and by ONE
+# 8-shard 16-slot engine.  Identical per-shard shapes and fresh page
+# pools in both arms make the greedy tokens bit-exact (see
+# docs/serving.md, "Sharded serving": the split-K combine folds masked
+# pages' CONTENT into fp rounding, so bit-exactness needs identical
+# pool-content trajectories — which the engine's scratch scrubbing
+# plus this weak-scaling pairing guarantee).  The scaling metric is
+# per-device-normalized (shards x sharded-wall tok/s / single tok/s):
+# host-platform virtual devices share ONE core and serialize, so raw
+# wall clock measures dispatch amortization, not parallel FLOPs.
+SHARD_DEVICES = 8
+SHARD_REQUESTS = 16
+SHARD_PROMPT = 12
+SHARD_GEN = 16
+SHARD_SCALING_FLOOR = 3.0
 # The hand-set engine configuration every workload derives from via
 # .replace(...) — also the autotune baseline point (bench_autotune sweeps
 # around it and asserts the best swept point matches or beats it).
@@ -719,6 +736,77 @@ def run() -> dict:
         f"degrade ladder goodput only {goodput_ratio:.2f}x the no-ladder "
         f"baseline (acceptance floor: {BURST_GOODPUT_FLOOR}x)")
 
+    # ---- mesh-sharded serving: weak-scaling pair on 8 virtual devices.
+    section(f"mesh-sharded serving: {SHARD_REQUESTS} requests on "
+            f"{SHARD_DEVICES} fresh single-device 2-slot engines vs ONE "
+            f"{SHARD_DEVICES}-shard {2 * SHARD_DEVICES}-slot engine "
+            f"(1-layer config, tokens asserted bit-exact)")
+    if len(jax.devices()) < SHARD_DEVICES:
+        raise RuntimeError(
+            f"sharded serve bench needs {SHARD_DEVICES} devices but only "
+            f"{len(jax.devices())} are visible; run with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={SHARD_DEVICES} set "
+            f"BEFORE python starts (benchmarks/run.py persists nothing "
+            f"when a bench raises, so the previous BENCH_serve.json "
+            f"stays intact)")
+    sh_rng = np.random.default_rng(7)
+    sh_prompts = [sh_rng.integers(1, 100, (SHARD_PROMPT,)).tolist()
+                  for _ in range(SHARD_REQUESTS)]
+
+    def _shard_engine(shards: int) -> ServeEngine:
+        return ServeEngine(cfg1, params1, config=EngineConfig(
+            max_slots=2 * shards, max_seq=64, prefill_chunk=16,
+            spec_k=0, prefix_cache=False, mesh_shards=shards))
+
+    single_tokens = [None] * SHARD_REQUESTS
+    sg_dec_s = sg_dec_tok = 0.0
+    for j in range(SHARD_DEVICES):
+        e1 = _shard_engine(1)
+        e1.warmup()
+        pair = [j, j + SHARD_DEVICES]
+        rq = [e1.submit(sh_prompts[i], SHARD_GEN) for i in pair]
+        e1.run()
+        for i, r in zip(pair, rq):
+            single_tokens[i] = r.generated
+        st1 = e1.stats_summary()
+        sg_dec_s += st1["decode_s"]
+        sg_dec_tok += st1["decode_tokens"]
+    single_tps = sg_dec_tok / max(sg_dec_s, 1e-9)
+
+    e8 = _shard_engine(SHARD_DEVICES)
+    e8.warmup()
+    rq8 = [e8.submit(p, SHARD_GEN) for p in sh_prompts]
+    e8.run()
+    assert all(len(r.generated) == SHARD_GEN for r in rq8)
+    st8 = e8.stats_summary()
+    shard_tps = st8["decode_tokens"] / max(st8["decode_s"], 1e-9)
+    sh_bitexact = [r.generated for r in rq8] == single_tokens
+    assert sh_bitexact, (
+        "sharded engine tokens diverged from the single-device pair arm")
+    # per-device-normalized scaling: the modeled concurrent-execution
+    # speedup (virtual CPU devices serialize on one core, so wall clock
+    # alone reflects dispatch amortization, not the 8-way parallelism a
+    # real mesh executes)
+    sh_scaling = SHARD_DEVICES * shard_tps / single_tps
+    print_rows([
+        {"path": "single_x8", "decode_tok_s": single_tps,
+         "decode_tokens": sg_dec_tok, "decode_s": sg_dec_s},
+        {"path": f"sharded_{SHARD_DEVICES}", "decode_tok_s": shard_tps,
+         "decode_tokens": st8["decode_tokens"],
+         "decode_s": st8["decode_s"]},
+    ])
+    print(f"\nmesh-sharded decode: {sh_scaling:.1f}x per-device-normalized "
+          f"scaling over {SHARD_DEVICES} shards (wall {shard_tps:.0f} vs "
+          f"{single_tps:.0f} tok/s on ONE core), lane steps "
+          f"{st8['shard_lane_steps']}, occupancy skew "
+          f"{st8['shard_occupancy_skew']:.2f}, tokens bit-exact")
+    assert sh_scaling >= SHARD_SCALING_FLOOR, (
+        f"sharded decode scaling only {sh_scaling:.2f}x normalized over "
+        f"{SHARD_DEVICES} shards (floor: {SHARD_SCALING_FLOOR}x)")
+    assert st8["shard_occupancy_skew"] == 0.0, (
+        f"the balanced workload left shards unevenly loaded: "
+        f"{st8['shard_lane_steps']}")
+
     return {
         "arch": cfg.arch_id,
         "requests": N_REQUESTS,
@@ -833,6 +921,23 @@ def run() -> dict:
             "degrade_steps": b_on["stats"]["degrade_steps"],
             "goodput_ratio": goodput_ratio,
             "served_tokens_bitexact": True,
+        },
+        "sharded": {
+            "shards": SHARD_DEVICES,
+            "requests": SHARD_REQUESTS,
+            "prompt_len": SHARD_PROMPT,
+            "gen": SHARD_GEN,
+            "single": {"decode_tok_s": single_tps,
+                       "decode_tokens": sg_dec_tok,
+                       "decode_s": sg_dec_s},
+            "sharded": {"decode_tok_s": shard_tps,
+                        "decode_tokens": st8["decode_tokens"],
+                        "decode_s": st8["decode_s"],
+                        "shard_lane_steps": st8["shard_lane_steps"]},
+            "scaling": sh_scaling,
+            "scaling_floor": SHARD_SCALING_FLOOR,
+            "occupancy_skew": st8["shard_occupancy_skew"],
+            "tokens_bitexact": sh_bitexact,
         },
         "compile_excluded": True,
     }

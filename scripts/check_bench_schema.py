@@ -73,6 +73,10 @@ REQUIRED = {
         "burst.no_ladder.goodput_tok_s", "burst.ladder.shed",
         "burst.ladder.slo_met", "burst.degrade_transitions",
         "burst.served_tokens_bitexact",
+        "sharded.shards", "sharded.single.decode_tok_s",
+        "sharded.sharded.decode_tok_s", "sharded.scaling",
+        "sharded.scaling_floor", "sharded.occupancy_skew",
+        "sharded.tokens_bitexact",
     ],
     "collectives": [
         "rows", "stage_plan", "kernel_timings", "dryrun_collectives",

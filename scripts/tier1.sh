@@ -30,10 +30,13 @@ python -m pytest -q tests/test_docs.py
 # end and is fast enough for CI; collectives and serve emit the
 # perf-trajectory JSONs (serve also dry-runs the chunked-prefill
 # continuous-batching engine — sampling, prefix cache, SLO admission,
-# paged KV allocation, speculative decode — on a fresh checkout).
+# paged KV allocation, speculative decode — on a fresh checkout).  The
+# serve bench's mesh-sharded section needs 8 virtual devices, so its
+# XLA_FLAGS must be set before python starts (the backend inits once).
 python -m benchmarks.run --only carry_tables
 python -m benchmarks.run --only collectives
-python -m benchmarks.run --only serve
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m benchmarks.run --only serve
 
 # Speculative-decode smoke: drive the engine end to end through the CLI
 # at a reduced config (drafting, K+1-wide verification, rollback), so the
@@ -47,6 +50,15 @@ python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
 # benchmark refreshes.
 python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
     --slots 2 --prompt-len 12 --gen 12 --spec-k 3 --kv-dtype int8
+
+# Mesh-sharded smoke: the same CLI drive across 8 virtual devices — the
+# slot batch, page pool and decode dispatches shard over a ("slots",)
+# mesh (per-shard allocation, shard-local logits/tokens) and every
+# request still retires with its full generation.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.serve --arch llama3.2-3b --reduced \
+    --requests 8 --slots 8 --prompt-len 12 --gen 8 --no-spec \
+    --mesh-shards 8
 
 # Overload smoke: a seeded bursty open-loop trace on the virtual clock —
 # SLO pressure, the degrade ladder (spec off -> small chunks -> shed) and

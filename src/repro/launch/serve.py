@@ -299,6 +299,10 @@ def main(argv=None) -> int:
               f"draft hit rate {stats['spec_draft_hit_rate']:.0%}, "
               f"decode step p50 {stats['decode_step_p50_s'] * 1e3:.2f}ms / "
               f"p99 {stats['decode_step_p99_s'] * 1e3:.2f}ms")
+    if stats["mesh_shards"] > 1:
+        print(f"mesh: {stats['mesh_shards']:.0f} shards, lane steps "
+              f"{stats['shard_lane_steps']}, occupancy skew "
+              f"{stats['shard_occupancy_skew']:.2f}")
     if args.slo_ms is not None:
         print(f"SLO {args.slo_ms:.0f}ms: {stats['slo_met']:.0f} met / "
               f"{stats['slo_missed']:.0f} missed  "

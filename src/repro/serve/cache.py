@@ -41,7 +41,7 @@ model layer reads/writes this layout through
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -280,6 +280,31 @@ def copy_page(state: Any, pspecs: Any, src, dst) -> Any:
         is_leaf=lambda x: _is_spec(x))
 
 
+def _leaf_page_zero(leaf: jnp.ndarray, spec: ParamSpec, page
+                    ) -> jnp.ndarray:
+    ax = spec.axes.index("phys_page")
+    starts = [jnp.asarray(0, jnp.int32)] * leaf.ndim
+    starts[ax] = jnp.asarray(page, jnp.int32)
+    sizes = list(leaf.shape)
+    sizes[ax] = 1
+    zeros = jnp.zeros(sizes, leaf.dtype)
+    return jax.lax.dynamic_update_slice(leaf, zeros, starts)
+
+
+def zero_page(state: Any, pspecs: Any, page) -> Any:
+    """Zero ONE physical page in every leaf of the pooled ``state``
+    (jit-traceable; ``pspecs`` names each leaf's ``phys_page`` axis).
+    The engine scrubs the scratch page with this after
+    prefill dispatches: idle/foreign lanes aim their discarded writes at
+    scratch, and restoring its all-zeros content keeps the bytes masked
+    lanes read through it — which perturb only floating-point rounding,
+    never a masked value — identical across engine layouts (the
+    mesh-sharded bit-exactness contract)."""
+    return jax.tree.map(
+        lambda leaf, s: _leaf_page_zero(leaf, s, page), state, pspecs,
+        is_leaf=lambda x: _is_spec(x))
+
+
 class PagePool:
     """Host-side physical-page allocator with reference counts.
 
@@ -294,65 +319,114 @@ class PagePool:
     A page returns to the free list only when its count reaches zero —
     which is how a shared page outlives the slot it was first written by.
     The count can never go negative: :meth:`deref` raises instead of
-    corrupting the free list."""
+    corrupting the free list.
 
-    def __init__(self, num_pages: int):
-        """Create a pool of ``num_pages`` physical pages (page 0 is the
-        reserved scratch page, so at least 2 are required)."""
-        if num_pages < 2:
-            raise ValueError(f"need >= 2 pages (one is scratch), "
-                             f"got {num_pages}")
+    **Sharded pools** (``shards > 1``, the mesh-serving layout): the pool
+    splits into ``shards`` equal blocks of ``num_pages // shards``
+    contiguous pages — block ``s`` is device ``s``'s local slice of the
+    pooled state, and the *first page of every block* is that shard's
+    scratch (pinned, never allocated; global page 0 stays the unambiguous
+    "unallocated" page-table sentinel).  Each shard keeps its own free
+    list, so allocation is **process-local per shard**: admission on shard
+    ``s`` draws only from block ``s`` and never needs a cross-shard (or
+    cross-host) allocator round-trip.  Page ids stay global everywhere on
+    the host; a dispatch converts them to shard-local offsets with one
+    ``% block`` (see ``repro.serve.mesh.MeshPlan``).  ``shards=1`` is
+    exactly the classic single-device pool."""
+
+    def __init__(self, num_pages: int, shards: int = 1):
+        """Create a pool of ``num_pages`` physical pages split into
+        ``shards`` equal blocks (page 0 of each block is that shard's
+        reserved scratch page, so at least 2 pages per shard are
+        required; ``num_pages`` must divide evenly)."""
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if num_pages % shards:
+            raise ValueError(f"num_pages={num_pages} must split into "
+                             f"{shards} equal per-shard blocks")
+        block = num_pages // shards
+        if block < 2:
+            raise ValueError(f"need >= 2 pages per shard (one is scratch), "
+                             f"got {num_pages} over {shards} shard(s)")
         self.num_pages = num_pages
+        self.shards = shards
+        #: pages per shard block (including the block's scratch page)
+        self.block = block
         self.refcount = np.zeros(num_pages, np.int32)
-        self.refcount[0] = 1                      # scratch: pinned forever
-        self._free = list(range(num_pages - 1, 0, -1))   # pop() -> 1, 2, ...
+        self._free: List[List[int]] = []
+        for s in range(shards):
+            base = s * block
+            self.refcount[base] = 1          # shard scratch: pinned forever
+            # pop() -> base+1, base+2, ...
+            self._free.append(list(range(base + block - 1, base, -1)))
         self.allocs = 0
         self.oom_events = 0
 
+    def shard_of(self, page: int) -> int:
+        """The shard whose block holds physical ``page``."""
+        return int(page) // self.block
+
+    def _is_scratch(self, page) -> Any:
+        """Scratch predicate (scalar or vectorized): the first page of
+        every shard block, including global page 0."""
+        return page % self.block == 0
+
     @property
     def free_count(self) -> int:
-        """Number of allocatable pages currently on the free list."""
-        return len(self._free)
+        """Number of allocatable pages currently free across ALL shards
+        (use :meth:`free_count_in` for one shard's local availability)."""
+        return sum(len(f) for f in self._free)
+
+    def free_count_in(self, shard: int = 0) -> int:
+        """Number of allocatable pages currently free in ``shard``'s
+        block (the number that gates a shard-local admission)."""
+        return len(self._free[shard])
 
     @property
     def used_count(self) -> int:
         """Number of non-scratch pages currently allocated."""
-        return self.num_pages - 1 - len(self._free)
+        return self.num_pages - self.shards - self.free_count
 
-    def alloc(self) -> int:
-        """Take one free page (refcount 1). Returns its index, or ``-1``
-        when the pool is exhausted (the caller defers/reclaims — an OOM is
-        counted, never an exception, because admission handles it)."""
-        if not self._free:
+    def alloc(self, shard: int = 0) -> int:
+        """Take one free page from ``shard``'s block (refcount 1). Returns
+        its global index, or ``-1`` when that shard's block is exhausted
+        (the caller defers/reclaims — an OOM is counted, never an
+        exception, because admission handles it)."""
+        free = self._free[shard]
+        if not free:
             self.oom_events += 1
             return -1
-        p = self._free.pop()
+        p = free.pop()
         self.refcount[p] = 1
         self.allocs += 1
         return p
 
-    def alloc_many(self, n: int) -> Optional[np.ndarray]:
-        """Take ``n`` free pages at once (each refcount 1), all-or-nothing.
+    def alloc_many(self, n: int, shard: int = 0) -> Optional[np.ndarray]:
+        """Take ``n`` free pages from ``shard``'s block at once (each
+        refcount 1), all-or-nothing.
 
-        Returns an ``(n,)`` int32 array of page indices, or ``None`` when
-        fewer than ``n`` pages are free (one OOM event is counted and
-        *nothing* is allocated — the caller defers the admission with no
-        partial state to roll back).  This is the vectorized admission
-        path: one refcount scatter instead of a per-page Python loop."""
-        if n > len(self._free):
+        Returns an ``(n,)`` int32 array of global page indices, or ``None``
+        when fewer than ``n`` pages are free in that block (one OOM event
+        is counted and *nothing* is allocated — the caller defers the
+        admission with no partial state to roll back).  This is the
+        vectorized admission path: one refcount scatter instead of a
+        per-page Python loop."""
+        free = self._free[shard]
+        if n > len(free):
             self.oom_events += 1
             return None
         if n == 0:
             return np.empty(0, np.int32)
-        pages = np.asarray(self._free[len(self._free) - n:][::-1], np.int32)
-        del self._free[len(self._free) - n:]
+        pages = np.asarray(free[len(free) - n:][::-1], np.int32)
+        del free[len(free) - n:]
         self.refcount[pages] = 1
         self.allocs += n
         return pages
 
     def ref(self, page: int) -> None:
         """Add one reference to an allocated ``page`` (prefix sharing)."""
-        if page <= 0 or page >= self.num_pages or self.refcount[page] <= 0:
+        if page <= 0 or page >= self.num_pages or self._is_scratch(page) \
+                or self.refcount[page] <= 0:
             raise ValueError(f"ref of unallocated/scratch page {page}")
         self.refcount[page] += 1
 
@@ -364,39 +438,44 @@ class PagePool:
         if pages.size == 0:
             return
         if (pages <= 0).any() or (pages >= self.num_pages).any() or \
+                self._is_scratch(pages).any() or \
                 (self.refcount[pages] <= 0).any():
             bad = [int(p) for p in pages
-                   if p <= 0 or p >= self.num_pages or self.refcount[p] <= 0]
+                   if p <= 0 or p >= self.num_pages
+                   or self._is_scratch(p) or self.refcount[p] <= 0]
             raise ValueError(f"ref of unallocated/scratch page(s) {bad}")
         np.add.at(self.refcount, pages, 1)
 
     def deref(self, page: int) -> bool:
-        """Drop one reference to ``page``; frees it at zero. Returns True
-        when the page was actually freed. Raises on scratch or on a page
-        whose count is already zero (refcount underflow)."""
-        if page <= 0 or page >= self.num_pages:
+        """Drop one reference to ``page``; frees it at zero (back to its
+        own shard's free list). Returns True when the page was actually
+        freed. Raises on scratch or on a page whose count is already zero
+        (refcount underflow)."""
+        if page <= 0 or page >= self.num_pages or self._is_scratch(page):
             raise ValueError(f"deref of scratch/out-of-range page {page}")
         if self.refcount[page] <= 0:
             raise ValueError(f"refcount underflow on page {page}")
         self.refcount[page] -= 1
         if self.refcount[page] == 0:
-            self._free.append(page)
+            self._free[self.shard_of(page)].append(page)
             return True
         return False
 
     def deref_many(self, pages: np.ndarray) -> int:
         """Drop one reference from each of ``pages`` (vectorized
         :meth:`deref` for releasing a whole page-table row); frees the
-        pages that reach zero and returns how many were freed.  Validates
-        *before* mutating, so an underflow raises with every count
-        untouched (duplicates in ``pages`` count as multiple derefs)."""
+        pages that reach zero — each back to its own shard's free list —
+        and returns how many were freed.  Validates *before* mutating, so
+        an underflow raises with every count untouched (duplicates in
+        ``pages`` count as multiple derefs)."""
         pages = np.asarray(pages, np.int64)
         if pages.size == 0:
             return 0
-        if (pages <= 0).any() or (pages >= self.num_pages).any():
+        if (pages <= 0).any() or (pages >= self.num_pages).any() or \
+                self._is_scratch(pages).any():
             raise ValueError(
                 f"deref of scratch/out-of-range page(s) "
-                f"{[int(p) for p in pages if p <= 0 or p >= self.num_pages]}")
+                f"{[int(p) for p in pages if p <= 0 or p >= self.num_pages or self._is_scratch(p)]}")
         drops = np.bincount(pages, minlength=self.num_pages)
         if (self.refcount < drops).any():
             bad = np.flatnonzero(self.refcount < drops)
@@ -404,7 +483,8 @@ class PagePool:
                              f"{[int(p) for p in bad]}")
         self.refcount -= drops.astype(self.refcount.dtype)
         freed = np.flatnonzero((drops > 0) & (self.refcount == 0))
-        self._free.extend(int(p) for p in freed)
+        for p in freed:
+            self._free[self.shard_of(p)].append(int(p))
         return int(freed.size)
 
 
@@ -536,8 +616,9 @@ class PrefixTrie:
                 del parent.children[t]
         return True
 
-    def longest_match(self, tokens: Sequence[int],
-                      touch: bool = True) -> Tuple[int, int]:
+    def longest_match(self, tokens: Sequence[int], touch: bool = True,
+                      allowed: Optional[Callable[[int], bool]] = None
+                      ) -> Tuple[int, int]:
         """Longest resident prefix of ``tokens``.
 
         Returns ``(length, slot)``: the deepest trie walk along ``tokens``
@@ -545,14 +626,22 @@ class PrefixTrie:
         on ties, for determinism). ``(0, -1)`` when nothing matches.
         A successful match refreshes the matched slot's LRU recency unless
         ``touch`` is False (cost-model *probes* must not promote entries
-        they are only estimating against)."""
+        they are only estimating against).  ``allowed`` restricts the
+        candidate slots (a mesh-sharded engine can only share pages with
+        slots on the *same* shard — one trie serves every shard, filtered
+        per lookup); the walk stops at the deepest node that still has an
+        allowed slot."""
         node, depth, slot = self._root, 0, -1
         for t in tokens:
             nxt = node.children.get(int(t))
-            if nxt is None or not nxt.slots:
+            if nxt is None:
+                break
+            cand = (nxt.slots if allowed is None
+                    else {s for s in nxt.slots if allowed(s)})
+            if not cand:
                 break
             node, depth = nxt, depth + 1
-            slot = min(nxt.slots)
+            slot = min(cand)
         if touch and slot >= 0:
             self._touch(slot)
         return depth, slot

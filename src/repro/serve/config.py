@@ -112,6 +112,11 @@ class EngineConfig:
                "pressure step down spec_k -> smaller prefill chunks -> "
                "shed hopeless pending requests, recovering with "
                "hysteresis")
+    mesh_shards: int = _knob(
+        1, "device-mesh shards along the `slots` axis: slot batch, page "
+           "pool, page tables and sampling lanes split across this many "
+           "devices with shard-local decode (`1` = single-device; must "
+           "divide `max_slots` and `pool_pages`; paged engines only)")
 
     # ------------------------------------------------------------ checks
     def validate(self) -> "EngineConfig":
@@ -120,7 +125,8 @@ class EngineConfig:
         engine constructor historically raised (tests pin them):
         slot/capacity/chunk lower bounds, ``spec_k >= 0``, ``kv_dtype``
         membership in :data:`KV_DTYPES`, quantization's conflict with an
-        explicit ``paged_kv=False``, and explicit-``page_size``
+        explicit ``paged_kv=False``, ``mesh_shards`` divisibility of
+        ``max_slots`` / ``pool_pages``, and explicit-``page_size``
         divisibility of ``max_seq``."""
         if self.max_slots < 1:
             raise ValueError("need at least one slot")
@@ -153,6 +159,22 @@ class EngineConfig:
                 "page_dedup=True shares physical pages by content hash, "
                 "which requires the paged engine — incompatible with "
                 "paged_kv=False")
+        if self.mesh_shards < 1:
+            raise ValueError(
+                f"mesh_shards must be >= 1, got {self.mesh_shards}")
+        if self.max_slots % self.mesh_shards:
+            raise ValueError(
+                f"mesh_shards={self.mesh_shards} must divide "
+                f"max_slots={self.max_slots} (every shard holds the same "
+                f"number of slot lanes; pick a slot count divisible by the "
+                f"shard count)")
+        if self.pool_pages is not None and \
+                self.pool_pages % self.mesh_shards:
+            raise ValueError(
+                f"mesh_shards={self.mesh_shards} must divide "
+                f"pool_pages={self.pool_pages} (the physical page pool "
+                f"splits into equal per-shard blocks with process-local "
+                f"free lists)")
         if self.page_size and self.max_seq % self.page_size:
             raise ValueError(
                 f"page_size={self.page_size} must divide "
@@ -220,6 +242,13 @@ class EngineConfig:
                     f"leaf needs an adjacent (batch, kv_seq) axis pair — "
                     f"SSM/hybrid families are not)")
         paged = bool(paged)
+        if self.mesh_shards > 1 and not paged:
+            raise ValueError(
+                f"mesh_shards={self.mesh_shards} shards the slot batch and "
+                f"the physical page pool across devices, which requires "
+                f"the paged engine — {model_cfg.arch_id}'s decode state "
+                f"resolved to paged_kv=False (contiguous allocation); "
+                f"serve this family single-device (mesh_shards=1)")
         kv_dtype = self.kv_dtype
         if kv_dtype != "fp32" and not paged:
             # same silent auto-gate as paged_kv: SSM/hybrid state (or a
@@ -330,6 +359,13 @@ def add_cli_args(parser, spec_k_default: int = 4) -> None:
                         help="enable the overload degrade ladder (spec off "
                              "-> smaller prefill chunks -> shed hopeless "
                              "pending requests, hysteretic recovery)")
+    parser.add_argument("--mesh-shards", dest="mesh_shards", type=int,
+                        default=1,
+                        help="shard the slot batch + page pool across this "
+                             "many mesh devices with shard-local decode "
+                             "(must divide --slots; needs that many "
+                             "visible devices — on CPU set XLA_FLAGS="
+                             "--xla_force_host_platform_device_count)")
 
 
 def config_from_args(args) -> EngineConfig:

@@ -73,11 +73,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist import compat
 from repro.models.common import ParamSpec, shape_structs
 from repro.models.registry import get_api
 from repro.models import quant_kv
 from repro.serve import cache
 from repro.serve.config import EngineConfig, auto_page_size
+from repro.serve.mesh import MeshPlan
 from repro.serve.sampling import (GREEDY, SamplingParams, sample_tokens,
                                   sampling_lanes)
 from repro.serve.scheduler import DegradeLadder, Request, Scheduler
@@ -154,14 +156,17 @@ class ServeEngine:
         self.drafter = (PromptLookupDrafter(ngram_max=ecfg.spec_ngram)
                         if ecfg.spec_k else None)
         self.paged = bool(ecfg.paged_kv)
+        self.shards = ecfg.mesh_shards
         kv_dtype = ecfg.kv_dtype
         self.kv_dtype = kv_dtype
         if self.paged:
             self.max_pages = max_seq // page_size
             pool_pages = ecfg.pool_pages
-            self.pool = cache.PagePool(pool_pages + 1)   # +1: scratch
+            # one scratch page per shard (mesh_shards=1: the classic +1)
+            self.pool = cache.PagePool(pool_pages + self.shards,
+                                       shards=self.shards)
             self.pspecs = cache.paged_state_specs(
-                self.specs, page_size, pool_pages + 1)
+                self.specs, page_size, pool_pages + self.shards)
             if kv_dtype != "fp32":
                 # build-time audit: page_size int{bits} magnitudes must sum
                 # exactly inside the int32 carrier (paper's carry math)
@@ -172,9 +177,28 @@ class ServeEngine:
             # per-slot page tables; 0 = the scratch page (unallocated)
             self.table = np.zeros((max_slots, self.max_pages), np.int32)
             self.page_bytes = cache.state_bytes(self.pspecs) // (
-                pool_pages + 1)
+                pool_pages + self.shards)
         else:
             self.state = cache.state_zeros(self.specs)
+        # ---- mesh plan: shard slots + the page pool across devices;
+        # weights replicate, the pooled state splits its phys_page axis
+        # into per-device blocks, and all placement happens ONCE here —
+        # every dispatch's out_specs keep state/tokens/logits sharded, so
+        # steady-state decode moves zero cross-device bytes
+        self.mesh_plan = MeshPlan.build(ecfg) if self.shards > 1 else None
+        if self.mesh_plan is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            plan = self.mesh_plan
+            self._spec_lane = plan.lane_spec()
+            self._spec_rep = plan.replicated_spec()
+            self._spec_state = plan.state_specs(self.pspecs)
+            self._ns_lane = NamedSharding(plan.mesh, self._spec_lane)
+            self._ns_rep = NamedSharding(plan.mesh, self._spec_rep)
+            self._ns_state = jax.tree.map(
+                lambda p: NamedSharding(plan.mesh, p), self._spec_state,
+                is_leaf=lambda x: isinstance(x, PartitionSpec))
+            self.params = jax.device_put(self.params, self._ns_rep)
+            self.state = jax.device_put(self.state, self._ns_state)
         #: bytes one contiguous copy_slot moves (the PR 3 hit path cost)
         self.slot_bytes = cache.state_bytes(self.specs) // max_slots
         # resolve() already gated prefix_cache on supports_prefix
@@ -252,6 +276,9 @@ class ServeEngine:
             # degrade-ladder counters (all 0 with degrade off)
             "degrade_steps": 0, "prefill_dispatches": 0,
         }
+        #: decode lane-steps each mesh shard advanced (index = shard);
+        #: a single-device engine accumulates everything in shard 0
+        self._shard_lane_steps = np.zeros(max(1, self.shards), np.int64)
         #: per-event latency samples behind the percentile summaries
         #: (sliding windows — see _LATENCY_WINDOW)
         self._step_times: Deque[float] = deque(maxlen=_LATENCY_WINDOW)
@@ -307,7 +334,8 @@ class ServeEngine:
         s["trie_evictions"] = (self.prefix.evictions
                                if self.prefix is not None else 0)
         s["pages_in_use"] = self.pool.used_count if self.paged else 0
-        s["pool_pages"] = self.pool.num_pages - 1 if self.paged else 0
+        s["pool_pages"] = (self.pool.num_pages - self.pool.shards
+                           if self.paged else 0)
         # capacity accounting for the kv_dtype knob: bytes one resident
         # slot's full KV row occupies, and the whole pool's footprint —
         # quantized pages shrink both at fixed page counts
@@ -339,11 +367,67 @@ class ServeEngine:
         s["dedup_indexed_pages"] = (len(self.dedup)
                                     if self.dedup is not None else 0)
         s["sessions_live"] = len(self.sessions)
+        # mesh-sharded serving: decode lanes each shard advanced, and the
+        # relative spread between the busiest and idlest shard (0.0 =
+        # perfectly balanced admission; trivially 0.0 single-device)
+        s["mesh_shards"] = self.shards
+        lane_steps = self._shard_lane_steps
+        s["shard_lane_steps"] = [int(x) for x in lane_steps]
+        peak = int(lane_steps.max()) if lane_steps.size else 0
+        s["shard_occupancy_skew"] = (
+            float((int(lane_steps.max()) - int(lane_steps.min())) / peak)
+            if peak else 0.0)
         return s
 
+    # ------------------------------------------------- mesh-sharded plumbing
+    def _slot_shard(self, slot: int) -> int:
+        """The mesh shard owning ``slot`` (always 0 single-device)."""
+        if self.mesh_plan is None:
+            return 0
+        return self.mesh_plan.shard_of_slot(slot)
+
+    def _put_lane(self, x):
+        """Commit a per-slot lane array to its ``P("slots")`` placement.
+        AOT-compiled dispatches check input shardings, so per-call inputs
+        must arrive pre-placed; identity on single-device engines."""
+        arr = jnp.asarray(x)
+        if self.mesh_plan is None:
+            return arr
+        return jax.device_put(arr, self._ns_lane)
+
+    def _put_rep(self, x):
+        """Commit a broadcast scalar/array to the replicated placement
+        (identity on single-device engines)."""
+        arr = jnp.asarray(x)
+        if self.mesh_plan is None:
+            return arr
+        return jax.device_put(arr, self._ns_rep)
+
+    def _local_disp(self, disp: np.ndarray) -> np.ndarray:
+        """Localize a dispatch page table: global page ids -> shard-local
+        block offsets (identity single-device, where global IS local)."""
+        if self.mesh_plan is None:
+            return disp
+        return self.mesh_plan.local_pages(disp)
+
     # ----------------------------------------------------- compiled fns
+    def _sds(self, shape, dtype, *, lane: bool = False):
+        """ShapeDtypeStruct for AOT lowering, carrying the mesh sharding
+        on sharded engines (lowering against committed input layouts is
+        what lets the compiled dispatch skip every resharding check)."""
+        if self.mesh_plan is None:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        ns = self._ns_lane if lane else self._ns_rep
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=ns)
+
     def _params_structs(self):
-        return shape_structs(self.params)   # works on array leaves too
+        structs = shape_structs(self.params)   # works on array leaves too
+        if self.mesh_plan is not None:
+            structs = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                               sharding=self._ns_rep),
+                structs)
+        return structs
 
     def _get(self, key, fn, *arg_structs):
         """AOT-compile on first use; compile time never enters the timers."""
@@ -377,19 +461,87 @@ class ServeEngine:
             jax.ShapeDtypeStruct((), i32), jax.ShapeDtypeStruct((), i32))
 
     def _page_copy_exe(self):
-        """Boundary-page copy-on-write: one physical page, every leaf."""
-        def copy(state, src, dst):
-            return cache.copy_page(state, self.pspecs, src, dst)
+        """Boundary-page copy-on-write: one physical page, every leaf.
+        Sharded engines dispatch it under shard_map with per-shard (1,)
+        src/dst lanes of shard-local ids — non-target shards are fed
+        (0, 0), a scratch self-copy no-op."""
         i32 = jnp.int32
-        return self._get(
-            "page_copy", copy, shape_structs(self.pspecs),
-            jax.ShapeDtypeStruct((), i32), jax.ShapeDtypeStruct((), i32))
+        if self.mesh_plan is None:
+            def copy(state, src, dst):
+                return cache.copy_page(state, self.pspecs, src, dst)
+            return self._get(
+                "page_copy", copy, self._state_structs(),
+                jax.ShapeDtypeStruct((), i32), jax.ShapeDtypeStruct((), i32))
+
+        def copy(state, src, dst):
+            return cache.copy_page(state, self.pspecs, src[0], dst[0])
+        copy = compat.shard_map(
+            copy, mesh=self.mesh_plan.mesh,
+            in_specs=(self._spec_state, self._spec_lane, self._spec_lane),
+            out_specs=self._spec_state)
+        lane = self._sds((self.shards,), i32, lane=True)
+        return self._get("page_copy", copy, self._state_structs(),
+                         lane, lane)
+
+    def _scrub_exe(self):
+        """Zero the scratch page(s): page 0 single-device, every shard's
+        local page 0 sharded.  Dispatched after each admission wave so the
+        bytes masked lanes read through scratch — prefill-broadcast and
+        idle-lane garbage that perturbs only split-K rounding, never a
+        masked value — are identical whatever engine layout served the
+        prefills (the sharded-vs-single bit-exactness contract)."""
+        def scrub(state):
+            return cache.zero_page(state, self.pspecs, 0)
+        if self.mesh_plan is not None:
+            scrub = compat.shard_map(
+                scrub, mesh=self.mesh_plan.mesh,
+                in_specs=(self._spec_state,), out_specs=self._spec_state)
+        return self._get("scrub", scrub, self._state_structs())
+
+    def _scrub_scratch(self) -> None:
+        """Dispatch the scratch scrub (untimed — bookkeeping, not serving).
+        Runs after warmup and after every admission's prefill pieces, so
+        each prefill — wherever it broadcasts — reads all-zeros scratch."""
+        exe = self._scrub_exe()
+        self._ensure_warm("scrub", exe, self.state)
+        self.state = exe(self.state)
 
     def _state_structs(self):
-        return shape_structs(self.pspecs if self.paged else self.specs)
+        structs = shape_structs(self.pspecs if self.paged else self.specs)
+        if self.mesh_plan is not None:
+            structs = jax.tree.map(
+                lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=ns),
+                structs, self._ns_state)
+        return structs
 
     def _prefill_exe(self, cb: int):
-        if self.paged:
+        if self.paged and self.mesh_plan is not None:
+            def prefill(params, state, tokens, pages, start, nvalid,
+                        temp, top_k, top_p, seed, sidx):
+                # per-shard body: ``pages`` is this shard's (1, max_pages)
+                # row of shard-local ids — the target shard gets the
+                # slot's real row, every other shard an all-scratch row
+                # (their writes land on scratch, their sampled lane is
+                # discarded by the host)
+                logits, state = self.api.prefill_chunk(
+                    params, state,
+                    {"tokens": tokens, "index": start, "nvalid": nvalid,
+                     "pages": pages},
+                    self.cfg)
+                nxt = sample_tokens(logits, temp[None], top_k[None],
+                                    top_p[None], seed[None], sidx[None])
+                return nxt, logits, state
+            prefill = compat.shard_map(
+                prefill, mesh=self.mesh_plan.mesh,
+                in_specs=(self._spec_rep, self._spec_state,
+                          self._spec_rep, self._spec_lane,
+                          *(self._spec_rep,) * 7),
+                out_specs=(self._spec_lane, self._spec_lane,
+                           self._spec_state))
+            extra = self._sds((self.shards, self.max_pages), jnp.int32,
+                              lane=True)
+        elif self.paged:
             def prefill(params, state, tokens, pages, start, nvalid,
                         temp, top_k, top_p, seed, sidx):
                 logits, state = self.api.prefill_chunk(
@@ -415,12 +567,12 @@ class ServeEngine:
                 return nxt, logits, state
             extra = jax.ShapeDtypeStruct((), jnp.int32)
         i32, f32 = jnp.int32, jnp.float32
-        sc = jax.ShapeDtypeStruct((), i32)
-        sf = jax.ShapeDtypeStruct((), f32)
+        sc = self._sds((), i32)
+        sf = self._sds((), f32)
         return self._get(
             ("prefill", cb), prefill, self._params_structs(),
             self._state_structs(),
-            jax.ShapeDtypeStruct((1, cb), i32),
+            self._sds((1, cb), i32),
             extra, sc, sc, sf, sc, sf, sc, sc)
 
     def _decode_exe(self):
@@ -434,8 +586,8 @@ class ServeEngine:
                 nxt = sample_tokens(logits, temps, top_ks, top_ps, seeds,
                                     idxs)
                 return nxt, logits, state
-            extra = (jax.ShapeDtypeStruct(
-                (self.max_slots, self.max_pages), jnp.int32),)
+            extra = (self._sds((self.max_slots, self.max_pages), jnp.int32,
+                               lane=True),)
         else:
             def decode(params, state, tokens, positions,
                        temps, top_ks, top_ps, seeds, idxs):
@@ -446,14 +598,23 @@ class ServeEngine:
                                     idxs)
                 return nxt, logits, state
             extra = ()
+        if self.mesh_plan is not None:
+            # every per-slot input shards along "slots"; no collective
+            # appears in the body, so a sharded decode step moves zero
+            # cross-device bytes — each device advances only its own lanes
+            lane = self._spec_lane
+            decode = compat.shard_map(
+                decode, mesh=self.mesh_plan.mesh,
+                in_specs=(self._spec_rep, self._spec_state, *(lane,) * 8),
+                out_specs=(lane, lane, self._spec_state))
         i32, f32 = jnp.int32, jnp.float32
         b = self.max_slots
-        lane_i = jax.ShapeDtypeStruct((b,), i32)
-        lane_f = jax.ShapeDtypeStruct((b,), f32)
+        lane_i = self._sds((b,), i32, lane=True)
+        lane_f = self._sds((b,), f32, lane=True)
         return self._get(
             "decode", decode, self._params_structs(),
             self._state_structs(),
-            jax.ShapeDtypeStruct((b, 1), i32), lane_i, *extra,
+            self._sds((b, 1), i32, lane=True), lane_i, *extra,
             lane_f, lane_i, lane_f, lane_i, lane_i)
 
     def _spec_exe(self):
@@ -486,8 +647,8 @@ class ServeEngine:
                      "nspec": nspec}, self.cfg)
                 return (sample_block(logits, temps, top_ks, top_ps, seeds,
                                      idxs), logits, state)
-            extra = (jax.ShapeDtypeStruct(
-                (self.max_slots, self.max_pages), jnp.int32),)
+            extra = (self._sds((self.max_slots, self.max_pages), jnp.int32,
+                               lane=True),)
         else:
             def spec(params, state, tokens, positions, nspec,
                      temps, top_ks, top_ps, seeds, idxs):
@@ -498,13 +659,19 @@ class ServeEngine:
                 return (sample_block(logits, temps, top_ks, top_ps, seeds,
                                      idxs), logits, state)
             extra = ()
+        if self.mesh_plan is not None:
+            lane = self._spec_lane
+            spec = compat.shard_map(
+                spec, mesh=self.mesh_plan.mesh,
+                in_specs=(self._spec_rep, self._spec_state, *(lane,) * 9),
+                out_specs=(lane, lane, self._spec_state))
         i32, f32 = jnp.int32, jnp.float32
         b = self.max_slots
-        lane_i = jax.ShapeDtypeStruct((b,), i32)
-        lane_f = jax.ShapeDtypeStruct((b,), f32)
+        lane_i = self._sds((b,), i32, lane=True)
+        lane_f = self._sds((b,), f32, lane=True)
         return self._get(
             "spec", spec, self._params_structs(), self._state_structs(),
-            jax.ShapeDtypeStruct((b, kp1), i32), lane_i, *extra, lane_i,
+            self._sds((b, kp1), i32, lane=True), lane_i, *extra, lane_i,
             lane_f, lane_i, lane_f, lane_i, lane_i)
 
     def _greedy_lanes(self, b: int):
@@ -516,16 +683,25 @@ class ServeEngine:
         Paged engines warm with all-scratch page tables, so the warmup
         writes land only on the reserved scratch page."""
         i32, f32 = jnp.int32, jnp.float32
-        z = jnp.asarray(0, i32)
-        zf = jnp.asarray(0.0, f32)
-        onef = jnp.asarray(1.0, f32)
+        z = self._put_rep(jnp.asarray(0, i32))
+        zf = self._put_rep(jnp.asarray(0.0, f32))
+        onef = self._put_rep(jnp.asarray(1.0, f32))
         if self.paged:
+            if self.mesh_plan is None:
+                pc_args = (z, z)
+                prefill_extra = jnp.zeros((self.max_pages,), i32)
+            else:
+                # all-zero lanes: every shard self-copies / writes only
+                # its own local scratch page
+                lane0 = self._put_lane(np.zeros(self.shards, np.int32))
+                pc_args = (lane0, lane0)
+                prefill_extra = self._put_lane(
+                    np.zeros((self.shards, self.max_pages), np.int32))
             if self.prefix is not None:
                 self._ensure_warm("page_copy", self._page_copy_exe(),
-                                  self.state, z, z)
-            prefill_extra = jnp.zeros((self.max_pages,), i32)
-            decode_extra = (jnp.zeros((self.max_slots, self.max_pages),
-                                      i32),)
+                                  self.state, *pc_args)
+            decode_extra = (self._put_lane(
+                jnp.zeros((self.max_slots, self.max_pages), i32)),)
         else:
             self._ensure_warm("reset", self._reset_exe(), self.state, z)
             if self.prefix is not None:
@@ -534,22 +710,28 @@ class ServeEngine:
             decode_extra = ()
         self._ensure_warm(
             "decode", self._decode_exe(), self.params, self.state,
-            jnp.zeros((self.max_slots, 1), i32),
-            jnp.zeros((self.max_slots,), i32), *decode_extra,
-            *self._greedy_lanes(self.max_slots))
+            self._put_lane(jnp.zeros((self.max_slots, 1), i32)),
+            self._put_lane(jnp.zeros((self.max_slots,), i32)), *decode_extra,
+            *(self._put_lane(a) for a in self._greedy_lanes(self.max_slots)))
         if self.spec_k:
             # all-idle warmup block: nspec = 0 masks every cache write
             self._ensure_warm(
                 "spec", self._spec_exe(), self.params, self.state,
-                jnp.zeros((self.max_slots, self.spec_k + 1), i32),
-                jnp.zeros((self.max_slots,), i32), *decode_extra,
-                jnp.zeros((self.max_slots,), i32),
-                *self._greedy_lanes(self.max_slots))
+                self._put_lane(jnp.zeros((self.max_slots, self.spec_k + 1),
+                                         i32)),
+                self._put_lane(jnp.zeros((self.max_slots,), i32)),
+                *decode_extra,
+                self._put_lane(jnp.zeros((self.max_slots,), i32)),
+                *(self._put_lane(a)
+                  for a in self._greedy_lanes(self.max_slots)))
         for cb in self.chunk_buckets:
             self._ensure_warm(
                 ("prefill", cb), self._prefill_exe(cb), self.params,
-                self.state, jnp.zeros((1, cb), i32), prefill_extra, z,
-                jnp.asarray(cb, i32), zf, z, onef, z, z)
+                self.state, self._put_rep(jnp.zeros((1, cb), i32)),
+                prefill_extra, z, self._put_rep(jnp.asarray(cb, i32)), zf,
+                z, onef, z, z)
+        if self.paged:
+            self._scrub_scratch()
 
     # ----------------------------------------------------------- submit
     def submit(self, prompt: Sequence[int], max_new: int,
@@ -691,9 +873,10 @@ class ServeEngine:
             if s not in self.scheduler.active:
                 self._release_row(s)
 
-    def _reclaim_pages(self, needed: int) -> None:
+    def _reclaim_pages(self, needed: int, shard: int = 0) -> None:
         """Free pages under pool pressure, cheapest-first, until ``needed``
-        pages are free (or nothing reclaimable remains):
+        pages are free in ``shard``'s block (or nothing reclaimable
+        remains):
 
         1. retired trie entries, least-recently-used first — but entries
            whose release would free *zero* pages (every page still shared
@@ -702,19 +885,25 @@ class ServeEngine:
         2. then session snapshots, least-recently-used first (correctness
            survives — the conversation's next turn just re-prefills).
 
+        Only victims whose pages live in ``shard``'s block are released —
+        freeing another shard's pages cannot satisfy this allocation.
         Live slots are never touched."""
         if self.prefix is not None:
             victims = [s for s in self.prefix.lru_slots()
-                       if s not in self.scheduler.active]
+                       if s not in self.scheduler.active
+                       and self._slot_shard(s) == shard]
             victims.sort(key=lambda s: self._freed_pages(s) == 0)
             for s in victims:
-                if self.pool.free_count >= needed:
+                if self.pool.free_count_in(shard) >= needed:
                     return
                 self._release_row(s)
                 self.prefix.evictions += 1
         for sess in self.sessions.lru_snapshots():
-            if self.pool.free_count >= needed:
+            if self.pool.free_count_in(shard) >= needed:
                 return
+            if self.mesh_plan is not None and \
+                    self.pool.shard_of(int(sess.row[0])) != shard:
+                continue
             row = self.sessions.take_snapshot(sess)
             self._deref_row_pages(row[row != 0])
             self.sessions.drops += 1
@@ -723,16 +912,19 @@ class ServeEngine:
     def _ensure_pages(self, slot: int, start: int, end: int) -> bool:
         """Lazily allocate physical pages covering positions ``[start,
         end)`` of ``slot``'s row (reclaiming LRU retired entries under
-        pressure). One vectorized all-or-nothing allocation — no per-page
-        Python loop, and nothing to roll back on exhaustion. Returns False
-        when the pool is exhausted."""
+        pressure). Allocation is process-local to the slot's own shard
+        block — admission never does a cross-shard allocator round-trip.
+        One vectorized all-or-nothing allocation — no per-page Python
+        loop, and nothing to roll back on exhaustion. Returns False when
+        the shard's block is exhausted."""
         first = start // self.page_size
         last = min(-(-end // self.page_size), self.max_pages)
         need = first + np.flatnonzero(self.table[slot, first:last] == 0)
-        if need.size > self.pool.free_count:
-            self._reclaim_pages(int(need.size))
+        sh = self._slot_shard(slot)
+        if need.size > self.pool.free_count_in(sh):
+            self._reclaim_pages(int(need.size), sh)
         if need.size:
-            pages = self.pool.alloc_many(int(need.size))
+            pages = self.pool.alloc_many(int(need.size), sh)
             if pages is None:
                 return False
             self.table[slot, need] = pages
@@ -780,6 +972,7 @@ class ServeEngine:
         False when the pool is exhausted (the row is rolled back and the
         admission should be deferred)."""
         ps = self.page_size
+        sh = self._slot_shard(slot)
         cow = None
         nfull = 0
         if reuse and not in_place:
@@ -797,9 +990,9 @@ class ServeEngine:
                 # stay intact until the CoW copy (the first device write
                 # of this admission) has read them
                 src_b = int(src_row[nfull])
-                if self.pool.free_count < 1:
-                    self._reclaim_pages(1)
-                p = self.pool.alloc()
+                if self.pool.free_count_in(sh) < 1:
+                    self._reclaim_pages(1, sh)
+                p = self.pool.alloc(sh)
                 if p < 0:
                     self._release_row(slot)
                     return False, None
@@ -817,9 +1010,9 @@ class ServeEngine:
                     continue
                 partial = (j == first and reuse % ps)
                 if self.pool.refcount[p] > 1:
-                    if self.pool.free_count < 1:
-                        self._reclaim_pages(1)
-                    fresh = self.pool.alloc()
+                    if self.pool.free_count_in(sh) < 1:
+                        self._reclaim_pages(1, sh)
+                    fresh = self.pool.alloc(sh)
                     if fresh < 0:
                         self._release_row(slot)
                         return False, None
@@ -881,6 +1074,10 @@ class ServeEngine:
             for c in self.dedup.candidates(digest):
                 if c == p:
                     continue
+                if self.pool.shard_of(c) != self.pool.shard_of(p):
+                    # a cross-shard share would reference another block's
+                    # page from this shard's table — never allowed
+                    continue
                 if self._page_bytes_of(c) == data:
                     match = c
                     break
@@ -939,11 +1136,17 @@ class ServeEngine:
         sp = req.sampling or GREEDY
         ctx = req.context
         slot32 = jnp.asarray(slot, jnp.int32)
+        sh = self._slot_shard(slot)
 
         # ---- prefix-cache lookup: reuse the longest resident prefix
+        # (mesh-sharded: only same-shard matches — page sharing can never
+        # cross a shard boundary, the pages live in different pool blocks)
         reuse, src, removed = 0, -1, False
         if self.prefix is not None:
-            match_len, match_slot = self.prefix.longest_match(ctx)
+            allowed = (None if self.mesh_plan is None
+                       else (lambda s: self._slot_shard(s) == sh))
+            match_len, match_slot = self.prefix.longest_match(
+                ctx, allowed=allowed)
             match_len = min(match_len, len(ctx) - 1)   # keep >= 1 token to
             if match_len >= self.min_prefix:           # prefill for logits
                 reuse, src = match_len, match_slot
@@ -962,6 +1165,11 @@ class ServeEngine:
             sess = self.sessions.get(conv)
             if sess is not None and sess.row is not None:
                 s_reuse = min(sess.covered, len(ctx) - 1)
+                if self.mesh_plan is not None and \
+                        self.pool.shard_of(int(sess.row[0])) != sh:
+                    # the snapshot's pages live in another shard's block;
+                    # this admission must re-prefill (or use the trie)
+                    s_reuse = 0
                 if s_reuse >= self.min_prefix and s_reuse > reuse:
                     reuse, src = s_reuse, -1
                     sess_row = sess.row
@@ -984,7 +1192,7 @@ class ServeEngine:
             cb = min(cb, self.max_seq - pos)
             toks = np.zeros((1, cb), np.int32)
             toks[0, :len(piece)] = piece
-            pieces.append((pos, len(piece), cb, jnp.asarray(toks)))
+            pieces.append((pos, len(piece), cb, self._put_rep(toks)))
             prefill_end = max(prefill_end, pos + cb)
             pos += len(piece)
 
@@ -1003,9 +1211,12 @@ class ServeEngine:
                 self.scheduler.evict(slot)     # head of queue: deferred,
                 if not self.scheduler.active and not self.pool.used_count:
                     raise RuntimeError(        # not dropped
-                        f"page pool ({self.pool.num_pages - 1} pages of "
-                        f"{self.page_size} tokens) cannot hold a single "
-                        f"request of {len(ctx)} context tokens")
+                        f"page pool ({self.pool.num_pages - self.pool.shards}"
+                        f" pages of {self.page_size} tokens"
+                        + (f", {self.pool.shards} shard blocks"
+                           if self.pool.shards > 1 else "")
+                        + f") cannot hold a single request of "
+                        f"{len(ctx)} context tokens")
                 return []
 
         # ---- admission committed: account the lookup + bytes moved
@@ -1023,23 +1234,39 @@ class ServeEngine:
             if removed and src != slot:
                 self.stats["prefix_evictions"] += 1
 
-        row = jnp.asarray(self.table[slot]) if self.paged else None
+        row = None
+        if self.paged:
+            if self.mesh_plan is None:
+                row = jnp.asarray(self.table[slot])
+            else:
+                # (shards, max_pages) lane-sharded dispatch rows: the
+                # target shard gets the slot's localized row, every other
+                # shard an all-scratch row — their prefill runs on garbage
+                # the host discards, the target lane is bit-exact
+                rows = np.zeros((self.shards, self.max_pages), np.int32)
+                rows[sh] = self.mesh_plan.local_pages(self.table[slot])
+                row = self._put_lane(rows)
         for start, nvalid, cb, toks in pieces:
             self._ensure_warm(("prefill", cb), self._prefill_exe(cb),
                               self.params, self.state, toks,
                               row if self.paged else slot32,
-                              jnp.asarray(start, jnp.int32),
-                              jnp.asarray(nvalid, jnp.int32),
-                              jnp.asarray(0.0, jnp.float32),
-                              jnp.asarray(0, jnp.int32),
-                              jnp.asarray(1.0, jnp.float32),
-                              jnp.asarray(0, jnp.int32),
-                              jnp.asarray(0, jnp.int32))
+                              self._put_rep(jnp.asarray(start, jnp.int32)),
+                              self._put_rep(jnp.asarray(nvalid, jnp.int32)),
+                              self._put_rep(jnp.asarray(0.0, jnp.float32)),
+                              self._put_rep(jnp.asarray(0, jnp.int32)),
+                              self._put_rep(jnp.asarray(1.0, jnp.float32)),
+                              self._put_rep(jnp.asarray(0, jnp.int32)),
+                              self._put_rep(jnp.asarray(0, jnp.int32)))
         if self.paged:
             if cow is not None:
                 page_copy = self._page_copy_exe()
-                self._ensure_warm("page_copy", page_copy, self.state,
-                                  slot32, slot32)
+                if self.mesh_plan is None:
+                    self._ensure_warm("page_copy", page_copy, self.state,
+                                      slot32, slot32)
+                else:
+                    lane0 = self._put_lane(np.zeros(self.shards, np.int32))
+                    self._ensure_warm("page_copy", page_copy, self.state,
+                                      lane0, lane0)
         else:
             reset = self._reset_exe()
             self._ensure_warm("reset", reset, self.state, slot32)
@@ -1047,19 +1274,29 @@ class ServeEngine:
                 copy = self._copy_exe()
                 self._ensure_warm("copy", copy, self.state, slot32, slot32)
         # the first prefill token continues the request's sample stream
-        temp = jnp.asarray(sp.temperature, jnp.float32)
-        top_k = jnp.asarray(sp.top_k, jnp.int32)
-        top_p = jnp.asarray(sp.top_p, jnp.float32)
-        seed = jnp.asarray(sp.seed, jnp.int32)
-        sidx = jnp.asarray(len(req.generated), jnp.int32)
+        temp = self._put_rep(jnp.asarray(sp.temperature, jnp.float32))
+        top_k = self._put_rep(jnp.asarray(sp.top_k, jnp.int32))
+        top_p = self._put_rep(jnp.asarray(sp.top_p, jnp.float32))
+        seed = self._put_rep(jnp.asarray(sp.seed, jnp.int32))
+        sidx = self._put_rep(jnp.asarray(len(req.generated), jnp.int32))
 
         t0 = time.perf_counter()
         if self.paged:
             if cow is not None:
                 # copy-on-write: ONE boundary page, not the whole prefix
-                self.state = page_copy(self.state,
-                                       jnp.asarray(cow[0], jnp.int32),
-                                       jnp.asarray(cow[1], jnp.int32))
+                if self.mesh_plan is None:
+                    cow_args = (jnp.asarray(cow[0], jnp.int32),
+                                jnp.asarray(cow[1], jnp.int32))
+                else:
+                    # per-shard src/dst lanes of shard-local ids: only the
+                    # target shard copies, the rest self-copy scratch
+                    blk = self.mesh_plan.block
+                    src_v = np.zeros(self.shards, np.int32)
+                    dst_v = np.zeros(self.shards, np.int32)
+                    src_v[sh] = cow[0] % blk
+                    dst_v[sh] = cow[1] % blk
+                    cow_args = (self._put_lane(src_v), self._put_lane(dst_v))
+                self.state = page_copy(self.state, *cow_args)
                 self.stats["prefix_bytes_copied"] += self.page_bytes
                 self.stats["pages_cow"] += 1
         elif reuse and src != slot:
@@ -1075,7 +1312,8 @@ class ServeEngine:
             nxt, _, self.state = self._prefill_exe(cb)(
                 self.params, self.state, toks,
                 row if self.paged else slot32,
-                jnp.asarray(start, jnp.int32), jnp.asarray(nvalid, jnp.int32),
+                self._put_rep(jnp.asarray(start, jnp.int32)),
+                self._put_rep(jnp.asarray(nvalid, jnp.int32)),
                 temp, top_k, top_p, seed, sidx)
         nxt.block_until_ready()
         dt = time.perf_counter() - t0
@@ -1086,13 +1324,20 @@ class ServeEngine:
         if self.prefix is not None:
             self.stats["hit_admit_s" if reuse else "cold_admit_s"] += dt
             self._admit_times["hit" if reuse else "cold"].append(dt)
+        if self.paged:
+            # restore the all-zeros scratch invariant this admission's
+            # prefill broadcasts dirtied, BEFORE the next admission or
+            # decode reads scratch through masked lanes
+            self._scrub_scratch()
         if not reuse:
             # prefix-hit admissions time a page copy plus (at most) a tiny
             # tail chunk — feeding that into the model would make a "chunk"
             # look far cheaper than a full prefill dispatch; only cold
             # admissions give an unbiased chunk cost
             self._feed_cost_model(chunk_s=dt / max(1, len(pieces)))
-        self.scheduler.on_prefill(req, int(nxt[0]))
+        # sharded prefill returns one sampled lane per shard — only the
+        # target shard's is real (sh == 0 single-device, where nxt is (1,))
+        self.scheduler.on_prefill(req, int(np.asarray(nxt)[sh]))
         if self.prefix is not None:
             # the slot's pages now hold exactly ctx (the sampled first
             # token is not written until the next decode step feeds it)
@@ -1142,7 +1387,7 @@ class ServeEngine:
             disp = np.zeros((self.max_slots, self.max_pages), np.int32)
             for slot in self.scheduler.active:
                 disp[slot] = self.table[slot]
-            pages_extra = (jnp.asarray(disp),)
+            pages_extra = (self._put_lane(self._local_disp(disp)),)
         elif self.prefix is not None:
             # idle lanes run in the shared dispatch too, and their
             # (discarded) token's KV is written unconditionally at
@@ -1160,9 +1405,10 @@ class ServeEngine:
                     self.stats["prefix_evictions"] += 1
                 else:
                     positions[slot] = n
-        temps, top_ks, top_ps, seeds, idxs = sampling_lanes(sps, sidx)
-        toks_d = jnp.asarray(tokens)
-        pos_d = jnp.asarray(positions)
+        temps, top_ks, top_ps, seeds, idxs = (
+            self._put_lane(a) for a in sampling_lanes(sps, sidx))
+        toks_d = self._put_lane(tokens)
+        pos_d = self._put_lane(positions)
         exe = self._decode_exe()
         self._ensure_warm("decode", exe, self.params, self.state,
                           toks_d, pos_d, *pages_extra,
@@ -1183,6 +1429,8 @@ class ServeEngine:
         self.stats["decode_steps"] += 1
         self.stats["decode_lane_steps"] += len(live)
         self.stats["occupancy_sum"] += occ
+        for slot in live:
+            self._shard_lane_steps[self._slot_shard(slot)] += 1
         self._step_times.append(dt)
         self._feed_cost_model(step_s=dt, tokens_per_step=1.0)
         if self.prefix is not None:
@@ -1271,11 +1519,12 @@ class ServeEngine:
             disp = np.zeros((b, self.max_pages), np.int32)
             for slot in self.scheduler.active:
                 disp[slot] = self.table[slot]
-            pages_extra = (jnp.asarray(disp),)
-        temps, top_ks, top_ps, seeds, idxs = sampling_lanes(sps, sidx)
-        toks_d = jnp.asarray(tokens)
-        pos_d = jnp.asarray(positions)
-        nspec_d = jnp.asarray(nspec)
+            pages_extra = (self._put_lane(self._local_disp(disp)),)
+        temps, top_ks, top_ps, seeds, idxs = (
+            self._put_lane(a) for a in sampling_lanes(sps, sidx))
+        toks_d = self._put_lane(tokens)
+        pos_d = self._put_lane(positions)
+        nspec_d = self._put_lane(nspec)
         exe = self._spec_exe()
         self._ensure_warm("spec", exe, self.params, self.state, toks_d,
                           pos_d, *pages_extra, nspec_d, temps, top_ks,
@@ -1313,6 +1562,8 @@ class ServeEngine:
         self.stats["spec_steps"] += 1
         self.stats["decode_lane_steps"] += len(live)
         self.stats["occupancy_sum"] += occ
+        for slot in live:
+            self._shard_lane_steps[self._slot_shard(slot)] += 1
         self._step_times.append(dt)
         self._feed_cost_model(step_s=dt,
                               tokens_per_step=n_emitted / len(live))

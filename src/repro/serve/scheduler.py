@@ -121,7 +121,7 @@ class Scheduler:
     """
 
     def __init__(self, max_slots: int, max_seq: int, *,
-                 prefill_chunk: int = 32,
+                 prefill_chunk: int = 32, mesh_shards: int = 1,
                  clock: Callable[[], float] = time.monotonic,
                  reuse_probe: Optional[Callable[[Sequence[int]], int]] = None):
         # knob validation (e.g. max_slots >= 1) lives in
@@ -130,6 +130,10 @@ class Scheduler:
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.prefill_chunk = max(1, prefill_chunk)
+        #: device shards the slot batch splits into (1 = single-device);
+        #: admission balances live load across shards (see free_slots)
+        self.mesh_shards = max(1, mesh_shards)
+        self.slots_per_shard = max_slots // self.mesh_shards
         self.clock = clock
         self.reuse_probe = reuse_probe
         self.pending: Deque[Request] = deque()
@@ -164,11 +168,13 @@ class Scheduler:
                     = None) -> "Scheduler":
         """Build a scheduler from an (already validated)
         :class:`~repro.serve.config.EngineConfig`: ``max_slots``,
-        ``max_seq`` and ``prefill_chunk`` are read from ``config``;
-        ``clock`` and ``reuse_probe`` pass through to the constructor."""
+        ``max_seq``, ``prefill_chunk`` and ``mesh_shards`` are read from
+        ``config``; ``clock`` and ``reuse_probe`` pass through to the
+        constructor."""
         return cls(config.max_slots, config.max_seq,
-                   prefill_chunk=config.prefill_chunk, clock=clock,
-                   reuse_probe=reuse_probe)
+                   prefill_chunk=config.prefill_chunk,
+                   mesh_shards=getattr(config, "mesh_shards", 1),
+                   clock=clock, reuse_probe=reuse_probe)
 
     # ----------------------------------------------------------- cost model
     def update_cost_model(self, chunk_s: Optional[float] = None,
@@ -245,9 +251,40 @@ class Scheduler:
         return req
 
     # ---------------------------------------------------------- admissions
+    def shard_of_slot(self, slot: int) -> int:
+        """The mesh shard holding ``slot`` (0 on single-device engines)."""
+        return slot // self.slots_per_shard
+
+    def shard_loads(self) -> List[int]:
+        """Live-request count per mesh shard (the per-shard occupancy the
+        cost model and admission balancing consult; ``[len(active)]`` on
+        a single-device engine)."""
+        loads = [0] * self.mesh_shards
+        for s in self.active:
+            loads[self.shard_of_slot(s)] += 1
+        return loads
+
     def free_slots(self) -> List[int]:
-        """Slot indices not currently bound to a live request."""
-        return [s for s in range(self.max_slots) if s not in self.active]
+        """Slot indices not currently bound to a live request, in the
+        order admission should fill them.
+
+        Single-device engines keep the classic ascending order.  Sharded
+        engines interleave shards, least-loaded first — the k-th free
+        slot of every shard before any shard's (k+1)-th — so consecutive
+        admissions land on different devices and per-shard occupancy
+        stays balanced (idle lanes on one device while another queues
+        would waste whole-device throughput)."""
+        free = [s for s in range(self.max_slots) if s not in self.active]
+        if self.mesh_shards > 1:
+            loads = self.shard_loads()
+            rank: Dict[int, int] = {}
+            keys = {}
+            for s in free:
+                sh = self.shard_of_slot(s)
+                keys[s] = (rank.get(sh, 0), loads[sh], sh)
+                rank[sh] = rank.get(sh, 0) + 1
+            free.sort(key=lambda s: keys[s])
+        return free
 
     def admission_order(self) -> List[Request]:
         """Pending requests in admission-policy order: earliest deadline

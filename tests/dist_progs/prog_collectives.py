@@ -10,6 +10,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.dist.collectives import (factor_radix4, make_tree_mesh,
                                     tree_psum, tree_reduce_scatter_gather)
+from repro.dist.plan import make_reduction_plan
 from repro.dist.compat import shard_map
 from repro.optim.compression import compressed_psum_mean
 
@@ -48,6 +49,37 @@ got2 = jax.jit(shard_map(rs_fn, mesh=tmesh, in_specs=P(sub),
                          out_specs=P(sub)))(v)
 np.testing.assert_allclose(np.asarray(got2),
                            np.broadcast_to(v.sum(0), (8, 16)))
+
+# ---- RS+AG rejects unscatterable payloads AT TRACE TIME (13 not divisible
+# by the 8-device tree), pointing the caller at tree_psum instead
+bad = jnp.ones((8, 13), jnp.float32)
+try:
+    jax.jit(shard_map(rs_fn, mesh=tmesh, in_specs=P(sub),
+                      out_specs=P(sub)))(bad)
+except ValueError as e:
+    assert "use tree_psum for unscatterable payloads" in str(e), e
+else:
+    raise AssertionError("unscatterable payload did not raise")
+
+# ---- int32 payloads under the carry-width audit: the staged tree psum is
+# BIT-exact against the flat fused psum (integer adds commute exactly; the
+# audit proves 8 x int8-grid operands cannot overflow the int32 carrier)
+plan8 = make_reduction_plan(8, payload_bits=8, acc_bits=32)
+assert plan8.accum is not None and plan8.accum.spill_bits <= 32
+xi = jnp.asarray(np.random.default_rng(1).integers(-128, 128, (8, 7)),
+                 jnp.int32)
+
+def tree_int_fn(xl):
+    return tree_psum(xl, sub, plan=plan8)
+
+got_i = jax.jit(shard_map(tree_int_fn, mesh=tmesh, in_specs=P(sub),
+                          out_specs=P(sub)))(xi)
+want_i = jax.jit(shard_map(flat_fn, mesh=tmesh, in_specs=P(sub),
+                           out_specs=P(sub)))(xi)
+assert np.array_equal(np.asarray(got_i), np.asarray(want_i))
+assert np.array_equal(np.asarray(got_i),
+                      np.broadcast_to(np.asarray(xi).sum(0), (8, 7)))
+assert np.asarray(got_i).dtype == np.int32
 
 # ---- compressed reduction: exact for int payloads scaled into int8 range
 g_int = jnp.asarray(

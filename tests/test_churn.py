@@ -65,11 +65,14 @@ def _assert_invariants(eng):
     # scratch pinned, never mapped
     assert int(eng.pool.refcount[0]) == 1
     assert counts[0] == 0
-    # free list consistent: size, refcounts, no duplicates
-    free = list(eng.pool._free)
+    # free lists consistent: size, refcounts, no duplicates, and every
+    # shard's free pages stay inside that shard's block
+    free = [p for fl in eng.pool._free for p in fl]
     assert len(free) == eng.pool.free_count
     assert len(set(free)) == len(free)
     assert all(int(eng.pool.refcount[p]) == 0 for p in free)
+    for sh, fl in enumerate(eng.pool._free):
+        assert all(eng.pool.shard_of(p) == sh for p in fl)
     # dedup index: never points at a freed page, digests never stale
     if eng.dedup is not None:
         for p in eng.dedup.pages():

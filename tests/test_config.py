@@ -42,6 +42,7 @@ NON_DEFAULT = {
     "prefix_cache": False, "min_prefix": 4, "paged_kv": False,
     "pool_pages": 7, "trie_capacity": 5, "spec_k": 3, "spec_ngram": 2,
     "kv_dtype": "int8", "page_dedup": True, "degrade": True,
+    "mesh_shards": 2,
 }
 
 
@@ -82,6 +83,9 @@ VALIDATE_ERRORS = [
     (dict(kv_dtype="int8", paged_kv=False), "paged_kv=False"),
     (dict(page_size=24, max_seq=64), "must divide"),
     (dict(page_dedup=True, paged_kv=False), "requires the paged engine"),
+    (dict(mesh_shards=0), "mesh_shards must be >= 1"),
+    (dict(mesh_shards=3), r"must divide max_slots=4"),
+    (dict(mesh_shards=2, pool_pages=7), r"must divide pool_pages=7"),
 ]
 
 
@@ -209,7 +213,7 @@ def test_cli_reaches_every_field():
             "--page", "16", "--no-prefix-cache", "--min-prefix", "4",
             "--no-paged-kv", "--pool-pages", "7", "--trie-capacity", "5",
             "--spec-k", "3", "--spec-ngram", "2", "--kv-dtype", "fp32",
-            "--page-dedup", "--degrade"]
+            "--page-dedup", "--degrade", "--mesh-shards", "2"]
     got = config_from_args(_parse(argv))
     want = dict(NON_DEFAULT, paged_kv=False, kv_dtype="fp32")
     assert got == EngineConfig(**want)

@@ -37,3 +37,11 @@ def test_sharded_train_step_and_decode():
 
 def test_tp_head_padding_exact():
     assert "OK head_pad" in _run("prog_head_pad.py")
+
+
+def test_mesh_sharded_engine_churn_invariants():
+    """2-shard engine churn walk: per-shard refcounts match the
+    table+session ground truth after every op, free lists stay
+    shard-resident, and no page-table row ever references a page outside
+    its slot's shard block."""
+    assert "OK shard churn" in _run("prog_shard_churn.py")

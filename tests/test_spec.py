@@ -227,7 +227,7 @@ def _assert_refcounts_conserved(eng):
         assert int(eng.pool.refcount[p]) == counts[p], p
     assert eng.pool.used_count == int((counts[1:] > 0).sum())
     assert int(eng.pool.refcount[0]) == 1       # scratch stays pinned
-    free = list(eng.pool._free)
+    free = [p for fl in eng.pool._free for p in fl]   # per-shard lists
     assert len(free) == eng.pool.free_count
     assert all(int(eng.pool.refcount[p]) == 0 for p in free)
 
