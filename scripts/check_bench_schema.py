@@ -51,6 +51,20 @@ REQUIRED = {
         "spec.decode_step_p50_s", "spec.decode_step_p99_s",
         "spec.sequential.decode_step_p50_s",
         "spec.sequential.decode_step_p99_s",
+        "spec_tree.nodes", "spec_tree.branch", "spec_tree.chain_k",
+        "spec_tree.auto_k", "spec_tree.n_heads",
+        "spec_tree.tokens_per_step", "spec_tree.accept_p50",
+        "spec_tree.accept_p99",
+        "spec_tree.decode_speedup_vs_chain",
+        "spec_tree.decode_speedup_vs_sequential",
+        "spec_tree.auto_ratio",
+        "spec_tree.auto_shape_chain", "spec_tree.auto_shape_tree",
+        "spec_tree.sequential.decode_tok_s",
+        "spec_tree.chain.decode_tok_s",
+        "spec_tree.tree.decode_tok_s", "spec_tree.tree.tree_steps",
+        "spec_tree.auto.decode_tok_s",
+        "spec_tree.tokens_bitexact_greedy",
+        "spec_tree.tokens_bitexact_stochastic",
         "engine.kv_bytes_per_slot", "engine.pool_bytes",
         "paged.paged.kv_bytes_per_slot", "paged.paged.pool_bytes",
         "quant.page_size",

@@ -51,6 +51,12 @@ python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
 python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
     --slots 2 --prompt-len 12 --gen 12 --spec-k 3 --kv-dtype int8
 
+# Tree-speculation smoke: the same CLI drive with --spec-mode tree (tree
+# drafting, single-dispatch ancestor-masked verification, longest-path
+# acceptance) so the token-tree path cannot rot between bench refreshes.
+python -m repro.launch.serve --arch llama3.2-3b --reduced --requests 4 \
+    --slots 2 --prompt-len 12 --gen 12 --spec-k 3 --spec-mode tree
+
 # Mesh-sharded smoke: the same CLI drive across 8 virtual devices — the
 # slot batch, page pool and decode dispatches shard over a ("slots",)
 # mesh (per-shard allocation, shard-local logits/tokens) and every

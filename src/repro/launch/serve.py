@@ -12,7 +12,11 @@ per-slot positions, finished slots are refilled mid-flight — and tokens are
 sampled in-graph per slot (``--temperature 0`` = greedy).  Decode steps
 are speculative by default (``--spec-k`` prompt-lookup drafts verified in
 one K+1-wide dispatch, bit-exact vs sequential decode; ``--no-spec``
-disables).  ``--kv-dtype int8``/``int4`` stores KV pages as per-row
+disables).  ``--spec-mode tree`` drafts a token *tree* per slot (n-gram
+fan-out or ``--spec-drafter heads`` medusa-style draft heads) verified in
+one ancestor-masked dispatch; ``--spec-mode auto`` lets a per-slot
+accept-rate model pick chain vs tree shape every step.
+``--kv-dtype int8``/``int4`` stores KV pages as per-row
 quantized codes dequantized inside the decode kernel (paged engines only).
 ``--per-token`` instead runs :func:`generate`, the legacy
 one-dispatch-per-token loop kept as the measurement baseline.  See
@@ -299,6 +303,16 @@ def main(argv=None) -> int:
               f"draft hit rate {stats['spec_draft_hit_rate']:.0%}, "
               f"decode step p50 {stats['decode_step_p50_s'] * 1e3:.2f}ms / "
               f"p99 {stats['decode_step_p99_s'] * 1e3:.2f}ms")
+    if stats.get("spec_mode", "chain") != "chain":
+        print(f"tree speculation (mode={stats['spec_mode']}, "
+              f"nodes={stats['spec_tree_nodes']:.0f}, "
+              f"branch={stats['spec_branch']:.0f}, "
+              f"drafter={stats['spec_drafter']}): "
+              f"{stats['spec_tree_steps']:.0f} tree steps, "
+              f"accept p50 {stats['spec_accept_p50']:.2f} / "
+              f"p99 {stats['spec_accept_p99']:.2f}, "
+              f"shape picks chain={stats['spec_shape_chain']:.0f} "
+              f"tree={stats['spec_shape_tree']:.0f}")
     if stats["mesh_shards"] > 1:
         print(f"mesh: {stats['mesh_shards']:.0f} shards, lane steps "
               f"{stats['shard_lane_steps']}, occupancy skew "

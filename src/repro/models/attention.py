@@ -24,7 +24,8 @@ from repro.models.common import scan as mscan
 
 __all__ = ["gqa_param_specs", "gqa_train", "gqa_decode", "gqa_decode_paged",
            "gqa_decode_pages", "decode_positions", "batched_cache_write",
-           "masked_cache_write", "causal_valid"]
+           "masked_cache_write", "causal_valid", "ancestor_matrix",
+           "tree_valid"]
 
 NEG_INF = -1e30
 
@@ -60,6 +61,59 @@ def causal_valid(pos: jnp.ndarray, smax: int) -> jnp.ndarray:
     if pos.ndim == 1:
         return (k_pos[None, :] <= pos[:, None])[None, None]
     return (k_pos[None, None, :] <= pos[:, :, None])[:, None]
+
+
+def ancestor_matrix(parents: jnp.ndarray) -> jnp.ndarray:
+    """Ancestor-or-self reachability of a flattened token tree.
+
+    ``parents`` is (B, C) int32: row ``j``'s parent row within the fed
+    block (``-1`` = no in-block parent — the block root attends only the
+    committed cache; padding rows point at themselves so they are never
+    another row's ancestor).  Returns (B, C, C) bool with
+    ``anc[b, q, r] == True`` iff row ``r`` is on row ``q``'s root path
+    (including ``r == q``), built by walking the parent pointers ``C - 1``
+    hops — ``C`` is the (small, static) verify-block width.
+    """
+    b, c = parents.shape
+    rows = jnp.arange(c, dtype=jnp.int32)
+    anc = jnp.broadcast_to(jnp.eye(c, dtype=bool)[None], (b, c, c))
+    ptr = jnp.broadcast_to(rows[None], (b, c))
+    for _ in range(c - 1):
+        ptr = jnp.where(ptr >= 0,
+                        jnp.take_along_axis(parents,
+                                            jnp.clip(ptr, 0, c - 1), axis=1),
+                        -1)
+        anc = anc | (ptr[:, :, None] == rows[None, None, :])
+    return anc
+
+
+def tree_valid(index: jnp.ndarray, parents: jnp.ndarray,
+               nvalid: jnp.ndarray, smax: int) -> jnp.ndarray:
+    """Attendable-key mask for tree verification (the tree analogue of
+    :func:`causal_valid`): key position ``s`` is visible to block row ``q``
+    of slot ``b`` iff ``s < index[b]`` (committed cache — every committed
+    position precedes the whole block), or ``s`` is the view position of a
+    valid block row (``index[b] <= s < index[b] + nvalid[b]``) that is an
+    ancestor-or-self of ``q`` per :func:`ancestor_matrix`.  Block rows are
+    written at view positions ``index[b] + j`` (unique per row — sibling
+    nodes never collide) while their rope/token positions come from the
+    per-row depth, so the mask — not the write position — is what encodes
+    the topology.  Returns (B, 1, C, smax), broadcastable against
+    (B, H, C, S) scores.
+    """
+    index = jnp.asarray(index, jnp.int32)
+    nvalid = jnp.asarray(nvalid, jnp.int32)
+    b, c = parents.shape
+    s = jnp.arange(smax, dtype=jnp.int32)
+    committed = s[None, :] < index[:, None]                     # (B, S)
+    kr = s[None, :] - index[:, None]                            # (B, S)
+    in_block = (kr >= 0) & (kr < nvalid[:, None])               # (B, S)
+    anc = ancestor_matrix(parents)                              # (B, C, C)
+    krc = jnp.clip(kr, 0, c - 1)
+    anc_qs = jnp.take_along_axis(
+        anc, jnp.broadcast_to(krc[:, None, :], (b, c, smax)), axis=2)
+    valid = committed[:, None, :] | (anc_qs & in_block[:, None, :])
+    return valid[:, None]                                       # (B,1,C,S)
 
 
 def batched_cache_write(cache: jnp.ndarray, new: jnp.ndarray,
@@ -363,30 +417,43 @@ def splitk_ok(cfg: ModelConfig, mesh, batch: int, smax: int) -> bool:
     return smax % mesh.shape["model"] == 0 and batch % dp == 0
 
 
-def _decode_qkv_new(x, p, cfg, cur):
+def _decode_qkv_new(x, p, cfg, cur, rope_pos=None):
     """Project + rope the C new tokens of a decode/prefill call.
 
-    Returns ``(q, k_new, v_new, pos)`` with q/k roped at the per-token
-    positions ``pos`` (``(C,)`` for a scalar ``cur``, ``(B, C)`` for a
-    per-slot vector)."""
+    Returns ``(q, k_new, v_new, pos)`` where ``pos`` is the per-row cache
+    *write* position (``(C,)`` for a scalar ``cur``, ``(B, C)`` for a
+    per-slot vector).  q/k are roped at ``pos`` unless ``rope_pos`` is
+    given (tree verification: sibling rows share a token position but
+    write at distinct view positions — rope follows the token position,
+    the write follows the row)."""
     c = x.shape[1]
     q, k_new, v_new = _project_qkv(x, p, cfg)
     pos = decode_positions(cur, c)                   # (C,) or (B, C)
-    sin, cos = _rope_tables(pos, cfg.hd, cfg.rope_theta)
+    sin, cos = _rope_tables(pos if rope_pos is None else rope_pos,
+                            cfg.hd, cfg.rope_theta)
     return apply_rope(q, sin, cos), apply_rope(k_new, sin, cos), v_new, pos
 
 
-def _decode_qkv_cache(x, p, cfg, cache_k, cache_v, cur_index, nvalid=None):
+def _decode_qkv_cache(x, p, cfg, cache_k, cache_v, cur_index, nvalid=None,
+                      tree=None):
     """Shared decode front-end: project + rope the C new tokens, write them
     into the cache at per-slot offsets, return (q, caches, valid mask).
 
     ``valid`` is (B or 1, 1, C, Smax): key position s is attendable by
     query c of sequence b iff s <= position(b, c).  With ``nvalid`` (a
     per-slot ``(B,)`` valid-row count — speculative verification), the
-    cache writes are row-masked instead (:func:`masked_cache_write`)."""
+    cache writes are row-masked instead (:func:`masked_cache_write`).
+    With ``tree`` (a ``(parents, pos_off, nchain)`` triple — tree
+    verification, see :func:`gqa_decode_pages`), rope positions come from
+    ``cur + pos_off`` and the mask is the ancestor mask
+    (:func:`tree_valid`); the write positions stay row-unique."""
     smax = cache_k.shape[1]
     cur = jnp.asarray(cur_index, jnp.int32)
-    q, k_new, v_new, pos = _decode_qkv_new(x, p, cfg, cur)
+    rope_pos = None
+    if tree is not None:
+        parents, pos_off, _ = tree
+        rope_pos = cur[:, None] + jnp.asarray(pos_off, jnp.int32)
+    q, k_new, v_new, pos = _decode_qkv_new(x, p, cfg, cur, rope_pos)
     if nvalid is None:
         cache_k = batched_cache_write(cache_k, k_new, cur)
         cache_v = batched_cache_write(cache_v, v_new, cur)
@@ -395,12 +462,14 @@ def _decode_qkv_cache(x, p, cfg, cache_k, cache_v, cur_index, nvalid=None):
         cache_v = masked_cache_write(cache_v, v_new, pos, nvalid)
     cache_k = constrain(cache_k, ("batch", "kv_seq", None, None))
     cache_v = constrain(cache_v, ("batch", "kv_seq", None, None))
-    return q, cache_k, cache_v, causal_valid(pos, smax)
+    valid = (causal_valid(pos, smax) if tree is None
+             else tree_valid(cur, tree[0], nvalid, smax))
+    return q, cache_k, cache_v, valid
 
 
 def gqa_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                cache_k: jnp.ndarray, cache_v: jnp.ndarray,
-               cur_index: jnp.ndarray, nvalid=None
+               cur_index: jnp.ndarray, nvalid=None, tree=None
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Cache-attend decode / chunked prefill. x: (B, C, D) — C == 1 is the
     classic one-token step, C > 1 ingests a whole prompt chunk in one call;
@@ -408,7 +477,9 @@ def gqa_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     batching, every slot at its own length). cache_{k,v}: (B, Smax, Hkv, hd)
     sharded (batch, kv_seq). ``nvalid``: optional (B,) per-slot valid-row
     count — rows past it are computed but never written (speculative
-    verification). Returns (out, new_cache_k, new_cache_v).
+    verification). ``tree``: optional ``(parents, pos_off, nchain)``
+    triple — tree verification with the ancestor mask (see
+    :func:`gqa_decode_pages`). Returns (out, new_cache_k, new_cache_v).
 
     The softmax over the kv_seq-sharded axis lowers to partial max/sum
     accumulators all-reduced across the model axis — split-K decode as a
@@ -416,7 +487,7 @@ def gqa_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     """
     b, c, d = x.shape
     q, cache_k, cache_v, valid = _decode_qkv_cache(
-        x, p, cfg, cache_k, cache_v, cur_index, nvalid)
+        x, p, cfg, cache_k, cache_v, cur_index, nvalid, tree)
 
     pad = tp_head_pad(cfg)
     hq = cfg.n_heads + pad
@@ -493,7 +564,8 @@ def _splitk_attend(q: jnp.ndarray, k_view: jnp.ndarray, v_view: jnp.ndarray,
 
 def gqa_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                      cache_k: jnp.ndarray, cache_v: jnp.ndarray,
-                     cur_index: jnp.ndarray, page: int, nvalid=None
+                     cur_index: jnp.ndarray, page: int, nvalid=None,
+                     tree=None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Paged split-K decode over a *dense* per-slot cache: the serve
     engine's hot path as the fourth consumer of the shared reduction
@@ -509,14 +581,15 @@ def gqa_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     if smax % page:
         raise ValueError(f"page={page} must divide max_seq={smax}")
     q, cache_k, cache_v, valid = _decode_qkv_cache(
-        x, p, cfg, cache_k, cache_v, cur_index, nvalid)
+        x, p, cfg, cache_k, cache_v, cur_index, nvalid, tree)
     out = _splitk_attend(q, cache_k, cache_v, valid, cfg, page)
     return out @ p["wo"].astype(x.dtype), cache_k, cache_v
 
 
 def gqa_decode_pages(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                      pool_k: jnp.ndarray, pool_v: jnp.ndarray,
-                     cur_index: jnp.ndarray, pages: jnp.ndarray, nvalid=None
+                     cur_index: jnp.ndarray, pages: jnp.ndarray, nvalid=None,
+                     tree=None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Paged-*allocation* split-K decode: :func:`gqa_decode_paged`
     generalized to take a page-index vector per slot.
@@ -533,6 +606,19 @@ def gqa_decode_pages(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     copy-on-writes the boundary page before any write can land there).
     ``nvalid``: optional (B,) per-slot valid-row count — rows past it are
     redirected to the scratch page (speculative verification's write mask).
+
+    **Tree verification** (``tree = (parents, pos_off, nchain)``): the fed
+    block is a chain part (``nchain[b]`` rows — the previous step's
+    accepted-but-unmaterialized tokens, committed through the page table
+    at positions ``index + j``) followed by drafted tree rows.  Every
+    valid row writes its KV into the gathered *view* at the row-unique
+    position ``index + j`` (so sibling keys never collide and descendants
+    can attend their ancestors), rope/token positions come from
+    ``index + pos_off`` (per-row depth), attention uses the ancestor mask
+    (:func:`tree_valid` over ``parents``), and the pool scatter uses
+    ``nchain`` as its row count — drafted rows land on the scratch page
+    exactly like over-draft rows, so rejected branches never touch
+    refcounted pages and need no pool rollback.
 
     **Quantized pages**: each pool argument may instead be a
     ``(codes, scales)`` pair (int8 / packed-int4 code pool + fp32 per-row
@@ -562,7 +648,13 @@ def gqa_decode_pages(x: jnp.ndarray, p: dict, cfg: ModelConfig,
         v_gath = paging.gather_pages(pool_v, pages)
     smax = pages.shape[1] * page
     cur = jnp.asarray(cur_index, jnp.int32)
-    q, k_new, v_new, pos = _decode_qkv_new(x, p, cfg, cur)
+    rope_pos = None
+    scatter_n = nvalid
+    if tree is not None:
+        parents, pos_off, nchain = tree
+        rope_pos = cur[:, None] + jnp.asarray(pos_off, jnp.int32)
+        scatter_n = nchain
+    q, k_new, v_new, pos = _decode_qkv_new(x, p, cfg, cur, rope_pos)
     if nvalid is None:
         k_view = batched_cache_write(k_gath, k_new, cur)
         v_view = batched_cache_write(v_gath, v_new, cur)
@@ -573,17 +665,22 @@ def gqa_decode_pages(x: jnp.ndarray, p: dict, cfg: ModelConfig,
         # (their queries are draft padding whose outputs are discarded)
         k_view = masked_cache_write(k_gath, k_new, pos, nvalid)
         v_view = masked_cache_write(v_gath, v_new, pos, nvalid)
-    out = _splitk_attend(q, k_view, v_view, causal_valid(pos, smax),
-                         cfg, page)
+    valid = (causal_valid(pos, smax) if tree is None
+             else tree_valid(cur, tree[0], nvalid, smax))
+    out = _splitk_attend(q, k_view, v_view, valid, cfg, page)
     if quant:
         qk, sk = quant_kv.quantize_rows(k_new, bits)
         qv, sv = quant_kv.quantize_rows(v_new, bits)
-        codes_k = paging.scatter_token_rows(codes_k, pages, qk, pos, nvalid)
-        scale_k = paging.scatter_token_rows(scale_k, pages, sk, pos, nvalid)
-        codes_v = paging.scatter_token_rows(codes_v, pages, qv, pos, nvalid)
-        scale_v = paging.scatter_token_rows(scale_v, pages, sv, pos, nvalid)
+        codes_k = paging.scatter_token_rows(codes_k, pages, qk, pos,
+                                            scatter_n)
+        scale_k = paging.scatter_token_rows(scale_k, pages, sk, pos,
+                                            scatter_n)
+        codes_v = paging.scatter_token_rows(codes_v, pages, qv, pos,
+                                            scatter_n)
+        scale_v = paging.scatter_token_rows(scale_v, pages, sv, pos,
+                                            scatter_n)
         return (out @ p["wo"].astype(x.dtype), (codes_k, scale_k),
                 (codes_v, scale_v))
-    pool_k = paging.scatter_token_rows(pool_k, pages, k_new, pos, nvalid)
-    pool_v = paging.scatter_token_rows(pool_v, pages, v_new, pos, nvalid)
+    pool_k = paging.scatter_token_rows(pool_k, pages, k_new, pos, scatter_n)
+    pool_v = paging.scatter_token_rows(pool_v, pages, v_new, pos, scatter_n)
     return out @ p["wo"].astype(x.dtype), pool_k, pool_v

@@ -25,7 +25,8 @@ from repro.models.common import scan as mscan
 __all__ = [
     "param_specs", "block_specs", "stack_specs",
     "forward", "train_loss", "decode_state_specs", "decode_step",
-    "prefill_chunk", "verify_chunk",
+    "prefill_chunk", "verify_chunk", "verify_tree", "draft_head_specs",
+    "hidden_states", "fit_draft_heads",
 ]
 
 
@@ -233,10 +234,20 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
     carries ``*_scale`` leaves (``repro.serve.cache.quant_state_specs``)
     the pools hold int8/packed-int4 codes; each layer receives a
     ``(codes, scales)`` pair and dequantizes in-kernel. Returns the final
-    hidden states (B, C, D) and the updated cache state."""
+    hidden states (B, C, D) and the updated cache state.
+
+    Tree verification (:func:`verify_tree`) additionally passes
+    ``"parents"`` (B, C) per-row parent indices, ``"pos_off"`` (B, C)
+    per-row token-position offsets and ``"nchain"`` (B,) chain-row counts;
+    every attention layer then ropes at ``index + pos_off``, masks with
+    the ancestor mask, and commits only the chain rows through the page
+    table (see :func:`repro.models.attention.gqa_decode_pages`)."""
     cur = batch["index"]
     pages = batch.get("pages")
     nspec = batch.get("nspec")
+    tree = None
+    if "parents" in batch:
+        tree = (batch["parents"], batch["pos_off"], batch["nchain"])
     x = vocab_parallel_embed(batch["tokens"], params["embed"], mesh,
                              cfg.vocab, cfg.use_tp_shardmap).astype(cfg.dtype)
 
@@ -254,10 +265,11 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
             h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
             if pages is not None:
                 h, ckv, kr = mla.mla_decode_paged(h, bp["attn"], cfg, ckv,
-                                                  kr, cur, pages, nspec)
+                                                  kr, cur, pages, nspec,
+                                                  tree)
             else:
                 h, ckv, kr = mla.mla_decode(h, bp["attn"], cfg, ckv, kr,
-                                            cur, nspec)
+                                            cur, nspec, tree)
             x = x + h
             h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
             if cfg.n_experts:
@@ -295,16 +307,16 @@ def _decode_blocks(params: dict, state: Dict[str, jnp.ndarray],
             h = rms_norm(x, bp["attn_norm"], cfg.norm_eps)
             if pages is not None:
                 h, ck, cv = attention.gqa_decode_pages(
-                    h, bp["attn"], cfg, ck, cv, cur, pages, nspec)
+                    h, bp["attn"], cfg, ck, cv, cur, pages, nspec, tree)
             elif use_splitk:
                 h, ck, cv = attention.gqa_decode_splitk(
                     h, bp["attn"], cfg, ck, cv, cur, mesh)
             elif use_paged:
                 h, ck, cv = attention.gqa_decode_paged(
-                    h, bp["attn"], cfg, ck, cv, cur, page, nspec)
+                    h, bp["attn"], cfg, ck, cv, cur, page, nspec, tree)
             else:
                 h, ck, cv = attention.gqa_decode(h, bp["attn"], cfg, ck, cv,
-                                                 cur, nspec)
+                                                 cur, nspec, tree)
             x = x + h
             h = rms_norm(x, bp["ffn_norm"], cfg.norm_eps)
             if cfg.n_experts:
@@ -394,3 +406,174 @@ def verify_chunk(params: dict, state: Dict[str, jnp.ndarray],
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = x @ params["lm_head"].astype(x.dtype)
     return logits.astype(jnp.float32), new_state
+
+
+def draft_head_specs(cfg: ModelConfig, n_heads: int,
+                     head_dim: int = 64) -> Dict[str, ParamSpec]:
+    """Medusa-style draft-head parameters: ``n_heads`` small residual MLPs
+    over the final hidden state, sharing ``lm_head`` for their logits —
+    head ``h`` predicts the token at offset ``h + 2`` from the position it
+    reads (``+1`` is the ordinary next-token sample).  No draft model and
+    no second KV cache: the heads run inside :func:`verify_tree` on hidden
+    states the verify dispatch already computed.  The serve engine
+    initializes these per model config when ``spec_drafter="heads"`` and
+    carries them under ``params["draft_heads"]``."""
+    d = cfg.d_model
+    return {
+        "w1": ParamSpec((n_heads, d, head_dim), (None, "embed", None)),
+        "w2": ParamSpec((n_heads, head_dim, d), (None, None, "embed")),
+    }
+
+
+def _draft_head_top(params: dict, x: jnp.ndarray, head_topk: int
+                    ) -> jnp.ndarray:
+    """Top-``head_topk`` candidate tokens per draft head at every fed row:
+    ``x`` is the final-normed hidden state (B, C, D); head ``h`` scores
+    ``lm_head(x + silu(x @ w1[h]) @ w2[h])``.  Returns (B, C, H, A)
+    int32, ranked by logit."""
+    hp = params["draft_heads"]
+    w1 = hp["w1"].astype(x.dtype)
+    w2 = hp["w2"].astype(x.dtype)
+    t = jax.nn.silu(jnp.einsum("bcd,hde->bhce", x, w1))
+    xh = x[:, None] + jnp.einsum("bhce,hed->bhcd", t, w2)   # (B,H,C,D)
+    head_logits = xh @ params["lm_head"].astype(x.dtype)    # (B,H,C,V)
+    _, top = jax.lax.top_k(head_logits.astype(jnp.float32), head_topk)
+    return jnp.swapaxes(top, 1, 2).astype(jnp.int32)        # (B,C,H,A)
+
+
+def verify_tree(params: dict, state: Dict[str, jnp.ndarray],
+                batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                mesh: Optional[Mesh] = None, *, head_topk: int = 4
+                ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray],
+                           Dict[str, jnp.ndarray]]:
+    """Score a (B, T+1) speculative token *tree* in ONE dispatch.
+
+    The chain verifier (:func:`verify_chunk`) generalized: each slot feeds
+    a block of ``nchain`` chain rows (the previous step's
+    accepted-but-unmaterialized emitted tokens, committed to the cache /
+    page pool at ``index + j``) followed by drafted tree rows whose
+    topology is carried per-row — so a single compiled dispatch verifies a
+    different tree shape per slot per step, the reconfigurable-width
+    multi-operand step of the paper's Lemma 3 applied to generation.
+
+    batch: {"tokens": (B, C) fed tokens, "index": (B,) per-slot committed
+    cache lengths, "parents": (B, C) per-row parent row (``-1`` = attends
+    committed cache only; chain row ``j`` has parent ``j - 1``; padding
+    rows point at themselves), "pos_off": (B, C) per-row token-position
+    offsets (chain row ``j`` is ``j``; a tree node is
+    ``nchain - 1 + depth``), "nchain": (B,) chain rows per slot,
+    "nspec": (B,) total valid rows per slot (0 = idle lane), optional
+    "pages": (B, n_pages) page table}.  Every valid row's KV lands in the
+    attended *view* at the row-unique position ``index + j``; only chain
+    rows commit through the page table — drafted rows are redirected to
+    the scratch page like over-draft rows, so rejected branches conserve
+    page refcounts by construction.
+
+    Returns ``(logits, head_top, new_state)``: logits (B, C, V) float32 at
+    every fed row (same numerics guarantee as :func:`decode_step`);
+    ``head_top`` is (B, C, H, ``head_topk``) int32 draft-head candidates
+    when ``params["draft_heads"]`` is present (see
+    :func:`draft_head_specs`), else ``None``.
+    """
+    x, new_state = _decode_blocks(params, state, batch, cfg, mesh)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    head_top = (_draft_head_top(params, x, head_topk)
+                if "draft_heads" in params else None)
+    return logits.astype(jnp.float32), head_top, new_state
+
+
+def hidden_states(params: dict, cfg: ModelConfig, tokens: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Teacher-forced final-normed hidden states for whole sequences.
+
+    ``tokens`` is (B, L) int32; returns (B, L, D) float32 — exactly the
+    ``x`` that :func:`verify_tree` hands the draft heads at each fed row
+    (full causal attention over a fresh cache).  The training-side
+    counterpart of the decode path: :func:`fit_draft_heads` regresses
+    head targets against these.
+    """
+    b, l = tokens.shape
+    specs = decode_state_specs(cfg, b, l)
+    state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs,
+                         is_leaf=lambda s: isinstance(s, ParamSpec))
+    batch = {"tokens": jnp.asarray(tokens, jnp.int32),
+             "index": jnp.int32(0)}
+    x, _ = _decode_blocks(params, state, batch, cfg, None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x.astype(jnp.float32)
+
+
+def fit_draft_heads(cfg: ModelConfig, params: dict,
+                    streams: Any, *, n_heads: int = 4, head_dim: int = 64,
+                    steps: int = 300, lr: float = 1e-2, seed: int = 0
+                    ) -> Dict[str, jnp.ndarray]:
+    """Train medusa-style draft heads (:func:`draft_head_specs`) by
+    distillation on the model's own trajectories.
+
+    Head ``h`` learns ``token[t + h + 2]`` from the teacher-forced hidden
+    state at position ``t`` (offset ``+1`` is the ordinary ``lm_head``
+    sample), with ``lm_head`` frozen and shared.  ``w2`` starts at zero,
+    so each head begins as the plain next-token head and the residual MLP
+    learns only the *offset* correction — the warm start that makes a few
+    hundred full-batch Adam steps enough at toy scale.
+
+    Args:
+      streams: iterable of token id sequences (each longer than
+        ``n_heads + 2``); e.g. completed request histories.
+    Returns:
+      {"w1", "w2"} float32 arrays to install under
+      ``params["draft_heads"]``.
+    """
+    seqs = [list(s) for s in streams if len(s) > n_heads + 2]
+    if not seqs:
+        raise ValueError("fit_draft_heads needs a non-empty stream set")
+    xs, ys, ms = [], [], []
+    for s in seqs:
+        t = jnp.asarray(s, jnp.int32)[None]
+        x = hidden_states(params, cfg, t)[0]             # (L, D)
+        l = len(s)
+        tgt = jnp.zeros((n_heads, l), jnp.int32)
+        mask = jnp.zeros((n_heads, l), jnp.float32)
+        for h in range(n_heads):
+            n_valid = max(l - h - 2, 0)
+            tgt = tgt.at[h, :n_valid].set(t[0, h + 2:])
+            mask = mask.at[h, :n_valid].set(1.0)
+        xs.append(x); ys.append(tgt); ms.append(mask)
+    x_all = jnp.concatenate(xs, axis=0)                  # (N, D)
+    y_all = jnp.concatenate(ys, axis=1)                  # (H, N)
+    m_all = jnp.concatenate(ms, axis=1)                  # (H, N)
+    lm_head = params["lm_head"].astype(jnp.float32)
+
+    key = jax.random.key(seed)
+    d = cfg.d_model
+    w1 = jax.random.normal(key, (n_heads, d, head_dim), jnp.float32) * 0.02
+    w2 = jnp.zeros((n_heads, head_dim, d), jnp.float32)
+
+    def loss_fn(w):
+        t = jax.nn.silu(jnp.einsum("nd,hde->hne", x_all, w["w1"]))
+        xh = x_all[None] + jnp.einsum("hne,hed->hnd", t, w["w2"])
+        logits = xh @ lm_head                            # (H, N, V)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y_all[..., None], axis=-1)[..., 0]
+        return (nll * m_all).sum() / jnp.maximum(m_all.sum(), 1.0)
+
+    @jax.jit
+    def update(w, opt, i):
+        g = jax.grad(loss_fn)(w)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        mu = jax.tree.map(lambda m, gg: b1 * m + (1 - b1) * gg, opt["mu"], g)
+        nu = jax.tree.map(lambda v, gg: b2 * v + (1 - b2) * gg * gg,
+                          opt["nu"], g)
+        t = i + 1
+        w = jax.tree.map(
+            lambda p, m, v: p - lr * (m / (1 - b1 ** t))
+            / (jnp.sqrt(v / (1 - b2 ** t)) + eps), w, mu, nu)
+        return w, {"mu": mu, "nu": nu}
+
+    w = {"w1": w1, "w2": w2}
+    opt = {"mu": jax.tree.map(jnp.zeros_like, w),
+           "nu": jax.tree.map(jnp.zeros_like, w)}
+    for i in range(steps):
+        w, opt = update(w, opt, jnp.float32(i))
+    return {"w1": w["w1"], "w2": w["w2"]}

@@ -138,24 +138,31 @@ def _absorbed_attend(x_dtype, p, cfg, q_nope, q_rope, ckv_view, kr_view,
 
 def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
-               cur_index: jnp.ndarray, nvalid=None
+               cur_index: jnp.ndarray, nvalid=None, tree=None
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Absorbed decode / chunked prefill. x: (B, C, D) — C new tokens per
     sequence; ``cur_index`` scalar (lockstep) or (B,) (per-slot lengths).
     cache_ckv: (B, Smax, rkv); cache_krope: (B, Smax, dr); both sharded
     (batch, kv_seq). ``nvalid``: optional (B,) per-slot valid-row count —
     rows past it are computed but never written (speculative
-    verification). Score/PV contractions run in latent space.
+    verification). ``tree``: optional ``(parents, pos_off, nchain)``
+    triple — tree verification: rope positions come from ``cur + pos_off``
+    and attention uses the ancestor mask (see
+    :func:`repro.models.attention.gqa_decode_pages`). Score/PV
+    contractions run in latent space.
     """
     from repro.models.attention import (batched_cache_write, causal_valid,
-                                        decode_positions, masked_cache_write)
+                                        decode_positions, masked_cache_write,
+                                        tree_valid)
 
     b, c, _ = x.shape
     smax = cache_ckv.shape[1]
     cur = jnp.asarray(cur_index, jnp.int32)
     pos = decode_positions(cur, c)                   # (C,) or (B, C)
-    q_nope, q_rope = _queries(x, p, cfg, pos)        # (B,C,H,dn),(B,C,H,dr)
-    c_new, kr_new = _latent_kv(x, p, cfg, pos)       # (B,C,rkv),(B,C,dr)
+    rope_pos = pos if tree is None \
+        else cur[:, None] + jnp.asarray(tree[1], jnp.int32)
+    q_nope, q_rope = _queries(x, p, cfg, rope_pos)   # (B,C,H,dn),(B,C,H,dr)
+    c_new, kr_new = _latent_kv(x, p, cfg, rope_pos)  # (B,C,rkv),(B,C,dr)
     if nvalid is None:
         cache_ckv = batched_cache_write(cache_ckv, c_new, cur)
         cache_krope = batched_cache_write(cache_krope, kr_new, cur)
@@ -165,14 +172,17 @@ def mla_decode(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     cache_ckv = constrain(cache_ckv, ("batch", "kv_seq", None))
     cache_krope = constrain(cache_krope, ("batch", "kv_seq", None))
 
+    valid = (causal_valid(pos, smax) if tree is None
+             else tree_valid(cur, tree[0], nvalid, smax))
     out = _absorbed_attend(x.dtype, p, cfg, q_nope, q_rope, cache_ckv,
-                           cache_krope, causal_valid(pos, smax))
+                           cache_krope, valid)
     return out @ p["wo"].astype(x.dtype), cache_ckv, cache_krope
 
 
 def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                      pool_ckv: jnp.ndarray, pool_krope: jnp.ndarray,
-                     cur_index: jnp.ndarray, pages: jnp.ndarray, nvalid=None
+                     cur_index: jnp.ndarray, pages: jnp.ndarray, nvalid=None,
+                     tree=None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Paged-allocation absorbed decode: :func:`mla_decode` generalized to
     take a page-index vector per slot.
@@ -186,7 +196,12 @@ def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     through the table (shared pages are never rewritten; the serve engine
     copy-on-writes the boundary page).  ``nvalid``: optional (B,) per-slot
     valid-row count — rows past it land on the scratch page (speculative
-    verification's write mask).
+    verification's write mask).  ``tree``: optional
+    ``(parents, pos_off, nchain)`` triple — tree verification: rope/token
+    positions from ``cur + pos_off``, ancestor mask over ``parents``, and
+    only the ``nchain`` chain rows scattered through the page table
+    (drafted rows land on the scratch page — see
+    :func:`repro.models.attention.gqa_decode_pages`).
 
     **Quantized pages**: either pool argument may instead be a
     ``(codes, scales)`` pair (int8 / packed-int4 code pool + fp32 per-row
@@ -197,7 +212,8 @@ def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     same structure they came in."""
     from repro.models import paging, quant_kv
     from repro.models.attention import (batched_cache_write, causal_valid,
-                                        decode_positions, masked_cache_write)
+                                        decode_positions, masked_cache_write,
+                                        tree_valid)
 
     b, c, _ = x.shape
     quant = isinstance(pool_ckv, tuple)
@@ -216,8 +232,13 @@ def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
     smax = pages.shape[1] * page
     cur = jnp.asarray(cur_index, jnp.int32)
     pos = decode_positions(cur, c)                   # (C,) or (B, C)
-    q_nope, q_rope = _queries(x, p, cfg, pos)
-    c_new, kr_new = _latent_kv(x, p, cfg, pos)
+    rope_pos = pos
+    scatter_n = nvalid
+    if tree is not None:
+        rope_pos = cur[:, None] + jnp.asarray(tree[1], jnp.int32)
+        scatter_n = tree[2]
+    q_nope, q_rope = _queries(x, p, cfg, rope_pos)
+    c_new, kr_new = _latent_kv(x, p, cfg, rope_pos)
     if nvalid is None:
         ckv_view = batched_cache_write(ckv_gath, c_new, cur)
         kr_view = batched_cache_write(kr_gath, kr_new, cur)
@@ -226,20 +247,25 @@ def mla_decode_paged(x: jnp.ndarray, p: dict, cfg: ModelConfig,
         # clamp-shift the fed rows over valid view positions — mask instead
         ckv_view = masked_cache_write(ckv_gath, c_new, pos, nvalid)
         kr_view = masked_cache_write(kr_gath, kr_new, pos, nvalid)
+    valid = (causal_valid(pos, smax) if tree is None
+             else tree_valid(cur, tree[0], nvalid, smax))
     out = _absorbed_attend(x.dtype, p, cfg, q_nope, q_rope, ckv_view,
-                           kr_view, causal_valid(pos, smax))
+                           kr_view, valid)
     if quant:
         qc, sc = quant_kv.quantize_rows(c_new, bits)
         qr, sr = quant_kv.quantize_rows(kr_new, bits)
         codes_ckv = paging.scatter_token_rows(codes_ckv, pages, qc, pos,
-                                              nvalid)
+                                              scatter_n)
         scale_ckv = paging.scatter_token_rows(scale_ckv, pages, sc, pos,
-                                              nvalid)
-        codes_kr = paging.scatter_token_rows(codes_kr, pages, qr, pos, nvalid)
-        scale_kr = paging.scatter_token_rows(scale_kr, pages, sr, pos, nvalid)
+                                              scatter_n)
+        codes_kr = paging.scatter_token_rows(codes_kr, pages, qr, pos,
+                                             scatter_n)
+        scale_kr = paging.scatter_token_rows(scale_kr, pages, sr, pos,
+                                             scatter_n)
         return (out @ p["wo"].astype(x.dtype), (codes_ckv, scale_ckv),
                 (codes_kr, scale_kr))
-    pool_ckv = paging.scatter_token_rows(pool_ckv, pages, c_new, pos, nvalid)
+    pool_ckv = paging.scatter_token_rows(pool_ckv, pages, c_new, pos,
+                                         scatter_n)
     pool_krope = paging.scatter_token_rows(pool_krope, pages, kr_new, pos,
-                                           nvalid)
+                                           scatter_n)
     return out @ p["wo"].astype(x.dtype), pool_ckv, pool_krope

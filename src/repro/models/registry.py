@@ -27,6 +27,16 @@ class ModelAPI:
     #: state cannot be rewound position-wise (SSM/hybrid), which keeps
     #: speculative decode auto-off for them.
     verify_chunk: Optional[Callable[..., Any]] = None
+    #: tree speculative verification: score a (B, T+1) drafted token *tree*
+    #: in one dispatch with an ancestor attention mask (batch keys
+    #: {tokens, index, parents, pos_off, nchain, nspec, [pages]}); returns
+    #: (logits at EVERY fed row, optional draft-head candidates, state).
+    #: None wherever verify_chunk is None (SSM/hybrid/encoder-only), which
+    #: keeps tree/auto speculative modes auto-off for those families.
+    verify_tree: Optional[Callable[..., Any]] = None
+    #: medusa-style draft-head parameter declaration (cfg, n_heads) ->
+    #: specs; None for families without verify_tree.
+    draft_head_specs: Optional[Callable[..., Any]] = None
 
 
 def get_api(cfg: ModelConfig) -> ModelAPI:
@@ -45,5 +55,8 @@ def get_api(cfg: ModelConfig) -> ModelAPI:
     decode_step = None if cfg.encoder_only else lm.decode_step
     prefill = None if cfg.encoder_only else lm.prefill_chunk
     verify = None if cfg.encoder_only else lm.verify_chunk
+    verify_t = None if cfg.encoder_only else lm.verify_tree
+    heads = None if cfg.encoder_only else lm.draft_head_specs
     return ModelAPI(lm.param_specs, lm.train_loss, lm.forward,
-                    decode_specs, decode_step, prefill, verify)
+                    decode_specs, decode_step, prefill, verify, verify_t,
+                    heads)

@@ -8,25 +8,33 @@ from repro.serve.cache import (PageDedupIndex, PagePool, PrefixTrie,
                                quant_state_specs, reset_slot,
                                slot_slice, slot_update, state_bytes,
                                state_zeros, supports_prefix)
-from repro.serve.config import (EngineConfig, KV_DTYPES, add_cli_args,
+from repro.serve.config import (EngineConfig, KV_DTYPES, SPEC_DRAFTERS,
+                                SPEC_MODES, add_cli_args,
                                 config_from_args, knob_table_md)
 from repro.serve.engine import ServeEngine, auto_page_size
 from repro.serve.sampling import GREEDY, SamplingParams, sample_tokens
 from repro.serve.scheduler import DegradeLadder, Request, Scheduler
 from repro.serve.sessions import Session, SessionStore
-from repro.serve.spec import (PromptLookupDrafter, accept_tokens,
-                              propose_draft)
+from repro.serve.spec import (DraftHeadDrafter, NGramTreeDrafter,
+                              PromptLookupDrafter, SuffixCache, TreeDraft,
+                              accept_path, accept_tokens,
+                              expected_tokens_chain, expected_tokens_tree,
+                              per_candidate_accept, pick_shape,
+                              propose_draft, tree_depth)
 
 __all__ = [
     "ServeEngine", "auto_page_size", "Request", "Scheduler",
     "DegradeLadder",
-    "EngineConfig", "KV_DTYPES", "add_cli_args", "config_from_args",
-    "knob_table_md",
+    "EngineConfig", "KV_DTYPES", "SPEC_MODES", "SPEC_DRAFTERS",
+    "add_cli_args", "config_from_args", "knob_table_md",
     "SamplingParams", "GREEDY", "sample_tokens",
     "PrefixTrie", "supports_prefix", "copy_slot",
     "PagePool", "PageDedupIndex", "pageable", "paged_state_specs",
     "quant_state_specs", "copy_page",
     "Session", "SessionStore",
     "PromptLookupDrafter", "propose_draft", "accept_tokens",
+    "SuffixCache", "TreeDraft", "accept_path", "NGramTreeDrafter",
+    "DraftHeadDrafter", "expected_tokens_chain", "expected_tokens_tree",
+    "pick_shape", "per_candidate_accept", "tree_depth",
     "state_zeros", "slot_slice", "slot_update", "reset_slot", "state_bytes",
 ]

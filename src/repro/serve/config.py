@@ -34,14 +34,26 @@ import dataclasses
 from dataclasses import field
 from typing import Optional, Tuple
 
-__all__ = ["EngineConfig", "KV_DTYPES", "auto_page_size", "knob_table_md",
-           "add_cli_args", "config_from_args"]
+__all__ = ["EngineConfig", "KV_DTYPES", "SPEC_MODES", "SPEC_DRAFTERS",
+           "auto_page_size", "knob_table_md", "add_cli_args",
+           "config_from_args"]
 
 #: KV-page element types the engine accepts.  Kept in lock-step with
 #: ``repro.models.quant_kv.KV_DTYPES`` (that module needs jax at import;
 #: this one must not) — ``tests/test_config.py`` pins the two tuples
 #: equal.
 KV_DTYPES: Tuple[str, ...] = ("fp32", "int8", "int4")
+
+#: Speculative-decode topologies: ``"chain"`` is the linear K-token draft,
+#: ``"tree"`` verifies a branching token tree under an ancestor mask, and
+#: ``"auto"`` lets the engine pick per slot per step from the measured
+#: accept rate (the Lemma-3 reconfigurator).
+SPEC_MODES: Tuple[str, ...] = ("chain", "tree", "auto")
+
+#: Tree drafters: ``"ngram"`` fans out top-`spec_branch` suffix-lookup
+#: continuations per node; ``"heads"`` uses medusa-style trained draft
+#: heads (requires ``draft_heads`` weights in the checkpoint).
+SPEC_DRAFTERS: Tuple[str, ...] = ("ngram", "heads")
 
 
 def auto_page_size(max_seq: int) -> int:
@@ -97,6 +109,23 @@ class EngineConfig:
            "sequential; auto-off for SSM/hybrid)")
     spec_ngram: int = _knob(
         3, "longest history n-gram the prompt-lookup drafter anchors on")
+    spec_mode: str = _knob(
+        "chain", "speculative topology: `\"chain\"` linear K-token draft, "
+                 "`\"tree\"` branching token-tree verify under an ancestor "
+                 "mask, `\"auto\"` per-slot per-step Lemma-3 choice from "
+                 "the measured accept rate (tree/auto need `verify_tree`; "
+                 "auto-off to chain for SSM/hybrid)")
+    spec_tree_nodes: int = _knob(
+        12, "drafted-node budget per slot per tree step (the flattened "
+            "tree's size; chain steps still use `spec_k`)")
+    spec_branch: int = _knob(
+        3, "max children per tree node the drafter fans out (`1` degrades "
+           "the tree to a chain topology)")
+    spec_drafter: str = _knob(
+        "ngram", "tree drafter: `\"ngram\"` suffix-lookup fan-out (no "
+                 "weights) or `\"heads\"` medusa-style trained draft heads "
+                 "(needs `draft_heads` params; falls back to ngram "
+                 "without them)")
     kv_dtype: str = _knob(
         "fp32", "KV page element type: `\"fp32\"` (default), `\"int8\"` "
                 "or `\"int4\"` quantized pages (paged engines only; "
@@ -140,6 +169,18 @@ class EngineConfig:
         if self.spec_ngram < 1:
             raise ValueError(
                 f"spec_ngram must be >= 1, got {self.spec_ngram}")
+        if self.spec_mode not in SPEC_MODES:
+            raise ValueError(f"spec_mode must be one of {SPEC_MODES},"
+                             f" got {self.spec_mode!r}")
+        if self.spec_tree_nodes < 1:
+            raise ValueError(
+                f"spec_tree_nodes must be >= 1, got {self.spec_tree_nodes}")
+        if self.spec_branch < 1:
+            raise ValueError(
+                f"spec_branch must be >= 1, got {self.spec_branch}")
+        if self.spec_drafter not in SPEC_DRAFTERS:
+            raise ValueError(f"spec_drafter must be one of {SPEC_DRAFTERS},"
+                             f" got {self.spec_drafter!r}")
         if self.pool_pages is not None and self.pool_pages < 1:
             raise ValueError(
                 f"pool_pages must be >= 1, got {self.pool_pages}")
@@ -225,6 +266,15 @@ class EngineConfig:
         if spec_k and (api.verify_chunk is None
                        or not cache.supports_prefix(specs)):
             spec_k = 0
+        # tree/auto topologies additionally need the tree-verify entry
+        # point; families without it (and engines with spec off entirely)
+        # fall back to the chain topology the rest of the engine treats as
+        # the degenerate single-path tree.
+        spec_mode = self.spec_mode
+        if spec_mode != "chain" and (
+                spec_k == 0 or api.verify_tree is None
+                or not cache.supports_prefix(specs)):
+            spec_mode = "chain"
         paged = self.paged_kv
         if paged is None:
             paged = cache.pageable(specs, page_size)
@@ -266,7 +316,7 @@ class EngineConfig:
         page_dedup = bool(self.page_dedup and paged)
         return dataclasses.replace(
             self, page_size=page_size, paged_kv=paged, spec_k=spec_k,
-            kv_dtype=kv_dtype, pool_pages=pool_pages,
+            spec_mode=spec_mode, kv_dtype=kv_dtype, pool_pages=pool_pages,
             prefix_cache=prefix_cache, page_dedup=page_dedup)
 
     def replace(self, **overrides) -> "EngineConfig":
@@ -341,6 +391,24 @@ def add_cli_args(parser, spec_k_default: int = 4) -> None:
     parser.add_argument("--spec-ngram", dest="spec_ngram", type=int,
                         default=3,
                         help="longest history n-gram the drafter anchors on")
+    parser.add_argument("--spec-mode", dest="spec_mode", default="chain",
+                        choices=SPEC_MODES,
+                        help="speculative topology: linear chain draft, "
+                             "token-tree verify under an ancestor mask, or "
+                             "auto per-slot Lemma-3 choice from the "
+                             "measured accept rate (tree/auto auto-off to "
+                             "chain for SSM/hybrid)")
+    parser.add_argument("--spec-tree-nodes", dest="spec_tree_nodes",
+                        type=int, default=12,
+                        help="drafted-node budget per slot per tree step")
+    parser.add_argument("--spec-branch", dest="spec_branch", type=int,
+                        default=3,
+                        help="max children per tree node the drafter "
+                             "fans out")
+    parser.add_argument("--spec-drafter", dest="spec_drafter",
+                        default="ngram", choices=SPEC_DRAFTERS,
+                        help="tree drafter: suffix-lookup n-gram fan-out "
+                             "or medusa-style trained draft heads")
     parser.add_argument("--kv-dtype", dest="kv_dtype", default="fp32",
                         choices=KV_DTYPES,
                         help="KV page element type: quantized int8/int4 "

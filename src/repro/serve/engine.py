@@ -51,6 +51,22 @@ The production serve-loop shape the seed repo was missing:
   any page advanced past the accepted point (refcount-conserving).
   Auto-off for families whose state cannot be rewound position-wise
   (SSM/hybrid), like paged allocation.
+* **Tree speculative decode** (``spec_mode="tree"``/``"auto"``) — the chain
+  draft generalized to a branching token *tree*: per slot, a drafter
+  (n-gram fan-out over the incremental per-slot
+  :class:`~repro.serve.spec.SuffixCache`, or medusa-style trained draft
+  heads) proposes a :class:`~repro.serve.spec.TreeDraft` of up to
+  ``spec_tree_nodes`` nodes with ``spec_branch``-way hedges, and ONE
+  ``verify_tree`` dispatch scores the whole flattened tree under an
+  ancestor attention mask.  Acceptance walks the longest sampled-matching
+  root-to-leaf path (:func:`~repro.serve.spec.accept_path`) — bit-exact vs
+  sequential for greedy and stochastic lanes, because each row samples at
+  its own depth's sequential index.  Drafted rows commit only to the
+  scratch page; accepted tokens materialize as the *chain part* of the
+  NEXT step's block, so rejection needs no page rollback at all.  In
+  ``"auto"`` mode a per-slot accept-rate EWMA feeds the paper's Lemma-3
+  closed-form expected-tokens model and the engine picks chain-K or
+  tree-(a, d) per slot per step (decision trace in ``stats_summary``).
 * **Shared reduction engine** — with ``page_size`` set, decode attention
   runs the paged split-K path: per-page partial accumulators combined by
   the same radix-4 :class:`~repro.dist.plan.ReductionPlan` tree that shapes
@@ -84,12 +100,34 @@ from repro.serve.sampling import (GREEDY, SamplingParams, sample_tokens,
                                   sampling_lanes)
 from repro.serve.scheduler import DegradeLadder, Request, Scheduler
 from repro.serve.sessions import SessionStore
-from repro.serve.spec import PromptLookupDrafter, accept_tokens
+from repro.serve.spec import (DraftHeadDrafter, NGramTreeDrafter,
+                              PromptLookupDrafter, TreeDraft, accept_path,
+                              accept_tokens, expected_tokens_chain,
+                              expected_tokens_tree, per_candidate_accept,
+                              pick_shape)
 
 __all__ = ["ServeEngine", "auto_page_size"]
 
 #: EWMA weight for the scheduler cost model's newest timing sample.
 _COST_EWMA = 0.5
+
+#: EWMA weight for the per-slot accept-rate estimate the Lemma-3
+#: reconfigurator consumes (slower than the timing EWMA: a single
+#: rejected tree must not swing the topology decision).
+_ACCEPT_EWMA = 0.3
+
+#: Per-candidate accept rate assumed for a slot with no measurements yet
+#: (fresh admission): optimistic enough that auto mode tries drafting.
+_ACCEPT_PRIOR = 0.5
+
+#: Bound on the reconfigurator decision trace kept for stats_summary.
+_DECISION_TRACE = 64
+
+#: Auto-mode exploration cadence: when a shape has lost this many
+#: consecutive reconfigurator decisions on a slot, run it once anyway to
+#: refresh its accept EWMA — a stale losing estimate can otherwise never
+#: recover (the shape that never runs is never measured).
+_EXPLORE_EVERY = 16
 
 #: Sliding-window length for the per-event latency samples behind the
 #: percentile summaries (a long-lived engine must not grow a float per
@@ -155,6 +193,41 @@ class ServeEngine:
         self.spec_k = ecfg.spec_k
         self.drafter = (PromptLookupDrafter(ngram_max=ecfg.spec_ngram)
                         if ecfg.spec_k else None)
+        # tree speculative decode (resolve() forced spec_mode back to
+        # "chain" when the family has no verify_tree or spec_k is 0)
+        self.spec_mode = ecfg.spec_mode
+        self.spec_tree_nodes = ecfg.spec_tree_nodes
+        self.spec_branch = ecfg.spec_branch
+        self.spec_drafter = ecfg.spec_drafter
+        self.tree_drafter = (NGramTreeDrafter(ngram_max=ecfg.spec_ngram)
+                             if self.spec_mode != "chain" else None)
+        # medusa-style heads need trained weights in the checkpoint; a
+        # params tree without them falls back to the n-gram tree drafter
+        self.head_drafter = None
+        if self.spec_mode != "chain" and ecfg.spec_drafter == "heads" \
+                and "draft_heads" in params:
+            self.head_drafter = DraftHeadDrafter(
+                n_heads=int(params["draft_heads"]["w1"].shape[0]))
+        #: per-slot incremental suffix-lookup caches (chain AND tree
+        #: drafting both consult them; fresh on every admission)
+        self._suffix_caches: Dict[int, Any] = {}
+        #: per-slot count of emitted-but-unmaterialized tokens (the chain
+        #: part the next tree step commits; 1 after admission — chain
+        #: decode's implicit invariant made explicit)
+        self._spec_unwritten: Dict[int, int] = {}
+        #: per-slot (H, A) draft-head candidates at the last accepted row
+        self._head_preds: Dict[int, np.ndarray] = {}
+        #: per-slot, per-shape accept-rate EWMAs (per drafted candidate)
+        #: — the reconfigurator's inputs and the p50/p99 accept stats'
+        #: population.  Keyed ``slot -> {"chain"|"tree": p}``: the two
+        #: shapes may draft through different predictors (n-gram vs
+        #: draft heads), so each is estimated from its own steps
+        self._slot_accept: Dict[int, Dict[str, float]] = {}
+        #: per-slot decisions since each shape last ran (auto-mode
+        #: exploration clock, see ``_EXPLORE_EVERY``)
+        self._shape_age: Dict[int, Dict[str, int]] = {}
+        #: per-slot emitted-tokens-per-step EWMA (scheduler cost feed)
+        self._slot_tps: Dict[int, float] = {}
         self.paged = bool(ecfg.paged_kv)
         self.shards = ecfg.mesh_shards
         kv_dtype = ecfg.kv_dtype
@@ -264,6 +337,11 @@ class ServeEngine:
             "spec_drafted": 0, "spec_accepted": 0,
             "spec_lanes_drafted": 0, "spec_lanes_hit": 0,
             "spec_pages_rolled_back": 0, "spec_steps": 0,
+            # tree-speculative counters (all 0 with spec_mode == "chain"):
+            # tree-verify dispatches, and the reconfigurator's per-slot
+            # per-step shape decisions (chain-shaped vs tree-shaped draft)
+            "spec_tree_steps": 0, "spec_shape_chain": 0,
+            "spec_shape_tree": 0,
             # page-content dedup counters (all 0 with page_dedup off):
             # admissions that shared >= 1 page by content, whole pages
             # shared that way, and digest matches the byte compare refuted
@@ -279,6 +357,10 @@ class ServeEngine:
         #: decode lane-steps each mesh shard advanced (index = shard);
         #: a single-device engine accumulates everything in shard 0
         self._shard_lane_steps = np.zeros(max(1, self.shards), np.int64)
+        #: recent reconfigurator decisions (slot, accept estimate, shape,
+        #: nodes drafted) — stats_summary exposes it as the decision trace
+        self._spec_decisions: Deque[Dict[str, Any]] = deque(
+            maxlen=_DECISION_TRACE)
         #: per-event latency samples behind the percentile summaries
         #: (sliding windows — see _LATENCY_WINDOW)
         self._step_times: Deque[float] = deque(maxlen=_LATENCY_WINDOW)
@@ -331,6 +413,21 @@ class ServeEngine:
             s["spec_lanes_hit"] / s["spec_lanes_drafted"]
             if s["spec_lanes_drafted"] else 0.0)
         s["spec_k"] = self.spec_k
+        # tree speculative decode: the resolved topology knobs, accept-rate
+        # percentiles over the per-slot EWMAs (the reconfigurator's inputs
+        # — a flat global rate hides the spread the auto policy exploits),
+        # and the recent shape-decision trace
+        s["spec_mode"] = self.spec_mode
+        s["spec_tree_nodes"] = self.spec_tree_nodes
+        s["spec_branch"] = self.spec_branch
+        s["spec_drafter"] = self.spec_drafter
+        accepts = sorted(max(d.values()) for d in
+                         self._slot_accept.values() if d)
+        s["spec_accept_p50"] = (float(np.percentile(accepts, 50))
+                                if accepts else 0.0)
+        s["spec_accept_p99"] = (float(np.percentile(accepts, 99))
+                                if accepts else 0.0)
+        s["spec_decision_trace"] = list(self._spec_decisions)
         s["trie_evictions"] = (self.prefix.evictions
                                if self.prefix is not None else 0)
         s["pages_in_use"] = self.pool.used_count if self.paged else 0
@@ -674,6 +771,95 @@ class ServeEngine:
             self._sds((b, kp1), i32, lane=True), lane_i, *extra, lane_i,
             lane_f, lane_i, lane_f, lane_i, lane_i)
 
+    def _tree_width(self) -> int:
+        """Static row width of the tree-verify dispatch: the widest chain
+        part plus the drafted-node budget.  Because drafting depth is
+        capped (``nodes // branch`` for the n-gram tree, ``n_heads`` for
+        draft heads), an accepted root-to-leaf path — the NEXT step's
+        chain part — is at most ``depth + 1`` tokens, so the width is
+        ``(depth_cap + 1) + nodes``, much narrower than the naive
+        ``2 * nodes + 1``.  Auto mode additionally sizes for a chain-
+        ``spec_k`` per-slot shape (drafts ``spec_k`` nodes, accepts up to
+        ``spec_k + 1``), so one compiled executable serves every per-slot
+        shape decision."""
+        n = self.spec_tree_nodes
+        d = max(1, n // max(self.spec_branch, 1))
+        if self.head_drafter is not None:
+            d = max(d, self.head_drafter.n_heads)
+        if self.spec_mode == "auto":
+            return max(d, self.spec_k) + 1 + max(n, self.spec_k)
+        return d + 1 + n
+
+    def _tree_exe(self):
+        """One tree-speculative decode step: verify a (B, C) block — each
+        slot's ``nchain`` unmaterialized chain tokens followed by its
+        drafted tree rows — in a single ``verify_tree`` dispatch and
+        sample a token at EVERY row.  Row ``j`` draws with sample index
+        ``idxs + pos_off[j] - (nchain - 1)``: the anchor (last chain row)
+        draws at the slot's next sequential index and a depth-``d`` node
+        at index ``+ d``, so whichever root-to-leaf path is accepted, its
+        samples are exactly the sequential draws at those indices."""
+        cw = self._tree_width()
+        heads_on = self.head_drafter is not None
+
+        def sample_block(logits, pos_off, nchain, temps, top_ks, top_ps,
+                         seeds, idxs):
+            b, v = logits.shape[0], logits.shape[-1]
+            rep = lambda lane: jnp.repeat(lane, cw)
+            # chain rows before the anchor re-derive already-emitted
+            # indices (clamped >= 0); their samples are discarded
+            col_idx = jnp.maximum(
+                idxs[:, None] + pos_off - (nchain[:, None] - 1),
+                0).astype(jnp.int32).reshape(-1)
+            toks = sample_tokens(logits.reshape(b * cw, v), rep(temps),
+                                 rep(top_ks), rep(top_ps), rep(seeds),
+                                 col_idx)
+            return toks.reshape(b, cw)
+
+        def body(params, state, tokens, positions, pages, parents, pos_off,
+                 nchain, nspec, temps, top_ks, top_ps, seeds, idxs):
+            batch = {"tokens": tokens, "index": positions,
+                     "parents": parents, "pos_off": pos_off,
+                     "nchain": nchain, "nspec": nspec}
+            if pages is not None:
+                batch["pages"] = pages
+            logits, head_top, state = self.api.verify_tree(
+                params, state, batch, self.cfg, head_topk=self.spec_branch)
+            toks = sample_block(logits, pos_off, nchain, temps, top_ks,
+                                top_ps, seeds, idxs)
+            if not heads_on:
+                # stable output structure: a 1-element dummy when the
+                # drafter never reads head candidates
+                head_top = jnp.zeros((tokens.shape[0], 1, 1, 1), jnp.int32)
+            return toks, head_top, logits, state
+
+        if self.paged:
+            def tree(params, state, tokens, positions, pages, *rest):
+                return body(params, state, tokens, positions, pages, *rest)
+            extra = (self._sds((self.max_slots, self.max_pages), jnp.int32,
+                               lane=True),)
+        else:
+            def tree(params, state, tokens, positions, *rest):
+                return body(params, state, tokens, positions, None, *rest)
+            extra = ()
+        if self.mesh_plan is not None:
+            lane = self._spec_lane
+            n_lanes = 12 if self.paged else 11
+            tree = compat.shard_map(
+                tree, mesh=self.mesh_plan.mesh,
+                in_specs=(self._spec_rep, self._spec_state,
+                          *(lane,) * n_lanes),
+                out_specs=(lane, lane, lane, self._spec_state))
+        i32, f32 = jnp.int32, jnp.float32
+        b = self.max_slots
+        lane_i = self._sds((b,), i32, lane=True)
+        lane_f = self._sds((b,), f32, lane=True)
+        mat_i = self._sds((b, cw), i32, lane=True)
+        return self._get(
+            "tree", tree, self._params_structs(), self._state_structs(),
+            mat_i, lane_i, *extra, mat_i, mat_i, lane_i, lane_i,
+            lane_f, lane_i, lane_f, lane_i, lane_i)
+
     def _greedy_lanes(self, b: int):
         return sampling_lanes([GREEDY] * b, [0] * b)
 
@@ -713,7 +899,7 @@ class ServeEngine:
             self._put_lane(jnp.zeros((self.max_slots, 1), i32)),
             self._put_lane(jnp.zeros((self.max_slots,), i32)), *decode_extra,
             *(self._put_lane(a) for a in self._greedy_lanes(self.max_slots)))
-        if self.spec_k:
+        if self.spec_k and self.spec_mode == "chain":
             # all-idle warmup block: nspec = 0 masks every cache write
             self._ensure_warm(
                 "spec", self._spec_exe(), self.params, self.state,
@@ -722,6 +908,21 @@ class ServeEngine:
                 self._put_lane(jnp.zeros((self.max_slots,), i32)),
                 *decode_extra,
                 self._put_lane(jnp.zeros((self.max_slots,), i32)),
+                *(self._put_lane(a)
+                  for a in self._greedy_lanes(self.max_slots)))
+        if self.spec_mode != "chain":
+            cw = self._tree_width()
+            lane0 = self._put_lane(jnp.zeros((self.max_slots,), i32))
+            # padding rows parent themselves: never anyone's ancestor
+            self._ensure_warm(
+                "tree", self._tree_exe(), self.params, self.state,
+                self._put_lane(jnp.zeros((self.max_slots, cw), i32)),
+                lane0, *decode_extra,
+                self._put_lane(np.broadcast_to(
+                    np.arange(cw, dtype=np.int32),
+                    (self.max_slots, cw)).copy()),
+                self._put_lane(jnp.zeros((self.max_slots, cw), i32)),
+                lane0, lane0,
                 *(self._put_lane(a)
                   for a in self._greedy_lanes(self.max_slots)))
         for cb in self.chunk_buckets:
@@ -803,12 +1004,16 @@ class ServeEngine:
         old = self.sessions.take_snapshot(sess)
         if old is not None:
             self._deref_row_pages(old[old != 0])
-        npages = -(-req.pos // self.page_size)
+        # materialized positions in the row: req.pos for chain decode (one
+        # unwritten token), fewer under tree decode where the final step's
+        # whole accepted path retires unmaterialized
+        covered = req.pos + 1 - self._spec_unwritten.get(slot, 1)
+        npages = -(-covered // self.page_size)
         row = self.table[slot, :npages].copy()
-        if req.pos > 0 and int((row != 0).sum()) == npages:
+        if covered > 0 and int((row != 0).sum()) == npages:
             self.pool.ref_many(row)
             sess.row = row
-            sess.covered = req.pos
+            sess.covered = covered
 
     def evict(self, slot: int) -> Request:
         """Preempt the live request in ``slot`` back to the pending queue
@@ -1338,6 +1543,16 @@ class ServeEngine:
         # sharded prefill returns one sampled lane per shard — only the
         # target shard's is real (sh == 0 single-device, where nxt is (1,))
         self.scheduler.on_prefill(req, int(np.asarray(nxt)[sh]))
+        if self.drafter is not None:
+            # fresh speculative bookkeeping for the slot's new occupant:
+            # exactly one unmaterialized token (the first sample above), a
+            # cold suffix cache, and no accept/head history to inherit
+            self._spec_unwritten[slot] = 1
+            self._suffix_caches[slot] = self.drafter.make_cache()
+            self._head_preds.pop(slot, None)
+            self._slot_accept.pop(slot, None)
+            self._shape_age.pop(slot, None)
+            self._slot_tps.pop(slot, None)
         if self.prefix is not None:
             # the slot's pages now hold exactly ctx (the sampled first
             # token is not written until the next decode step feeds it)
@@ -1472,22 +1687,59 @@ class ServeEngine:
                 break
         return out
 
+    def _update_slot_accept(self, slot: int, shape: str, successes: int,
+                            trials: int, mean_branch: float) -> None:
+        """Fold one step's acceptance outcome into ``slot``'s per-candidate
+        accept-rate EWMA for ``shape`` (``mean_branch`` > 1 inverts a tree
+        step's per-level rate back to per-candidate — see
+        :func:`repro.serve.spec.per_candidate_accept`).  Shapes are
+        estimated separately because they may draft through different
+        predictors (n-gram lookup vs trained draft heads); folding both
+        into one rate made the auto reconfigurator oscillate whenever the
+        drafters' hit rates diverged."""
+        if trials <= 0:
+            return
+        p = per_candidate_accept(successes, trials, mean_branch)
+        per = self._slot_accept.setdefault(slot, {})
+        # blend the FIRST observation with the prior too: a single failed
+        # opening step must not write an irrecoverable 0.0 — at rate 0 a
+        # shape is never picked again, so its estimate would never heal
+        prev = per.get(shape, _ACCEPT_PRIOR)
+        per[shape] = (1 - _ACCEPT_EWMA) * prev + _ACCEPT_EWMA * p
+
+    def _feed_slot_rate(self, slot: int, rate: float) -> None:
+        """EWMA ``slot``'s expected emitted-tokens-per-step into the
+        scheduler's per-slot cost model (the Lemma-3 closed form priced
+        from the slot's own accept estimate, not the batch mean)."""
+        prev = self._slot_tps.get(slot)
+        r = (rate if prev is None
+             else (1 - _COST_EWMA) * prev + _COST_EWMA * rate)
+        self._slot_tps[slot] = r
+        self.scheduler.slot_tokens_per_step[slot] = max(1.0, r)
+
     def _spec_decode_once(self) -> List[Request]:
         """One speculative decode step over every live slot: draft up to
         ``spec_k`` tokens per slot on the host (prompt lookup over its own
-        history), verify all K+1 positions in ONE dispatch, emit each
-        slot's longest sampled-matching draft prefix plus one
-        correction/bonus token, then rewind per-slot lengths and release
-        any page advanced past the accepted point.  Idle lanes run with
-        ``nspec == 0`` — every one of their cache writes is masked off."""
+        history, served from the slot's incremental suffix cache), verify
+        all K+1 positions in ONE dispatch, emit each slot's longest
+        sampled-matching draft prefix plus one correction/bonus token,
+        then rewind per-slot lengths and release any page advanced past
+        the accepted point.  Idle lanes run with ``nspec == 0`` — every
+        one of their cache writes is masked off."""
         k = self.spec_k
         drafts: Dict[int, List[int]] = {}
         for slot, req in self.scheduler.active.items():
             # a draft past the cache capacity or the generation budget
             # could never be emitted — don't verify (or page) it
             kd = min(k, self.max_seq - req.pos - 1, req.remaining - 1)
-            drafts[slot] = (self.drafter.propose(req.context, kd)
-                            if kd > 0 else [])
+            sc = self._suffix_caches.get(slot)
+            if kd <= 0:
+                drafts[slot] = []
+            elif sc is not None:
+                drafts[slot] = self.drafter.propose_cached(
+                    sc, req.context, kd)
+            else:
+                drafts[slot] = self.drafter.propose(req.context, kd)
         if self.paged:
             for slot, req in list(self.scheduler.active.items()):
                 end = req.pos + 1 + len(drafts[slot])
@@ -1556,6 +1808,14 @@ class ServeEngine:
                 self.stats["spec_lanes_drafted"] += 1
                 if accepted:
                     self.stats["spec_lanes_hit"] += 1
+                # candidates tested: the accepted prefix plus the first
+                # mismatch (if the walk stopped inside the draft)
+                self._update_slot_accept(
+                    slot, "chain", accepted,
+                    accepted + (1 if accepted < len(d) else 0), 1.0)
+            p = self._slot_accept.get(slot, {}).get("chain")
+            if p is not None:
+                self._feed_slot_rate(slot, expected_tokens_chain(p, k))
         self.stats["decode_s"] += dt
         self.stats["decode_tokens"] += n_emitted
         self.stats["decode_steps"] += 1
@@ -1595,6 +1855,258 @@ class ServeEngine:
                     self._session_retire(reqs[slot], slot)
         return done
 
+    def _tree_decode_once(self, draft: bool = True) -> List[Request]:
+        """One tree-speculative decode step over every live slot.
+
+        Per slot the fed (B, C) block is its **chain part** — the
+        ``_spec_unwritten`` emitted tokens the previous step accepted but
+        did not materialize, committed through the page table at
+        ``[index, index + u)`` — followed by its drafted **tree part**,
+        whose KV lands only in the attended view (pool scatter redirects
+        drafted rows to the scratch page, so a rejected branch conserves
+        refcounts with no rollback at all).  Acceptance walks the longest
+        sampled-matching root-to-leaf path; the accepted tokens become the
+        NEXT step's chain part.  Chain speculative decode is exactly the
+        degenerate case ``u == 1`` with a single-path tree; ``draft=False``
+        (the degrade ladder's SPEC_OFF level) still runs this dispatch with
+        zero drafted nodes, draining the chain part it must commit.
+
+        In ``spec_mode="auto"`` each slot's accept-rate EWMA prices the
+        Lemma-3 closed forms and picks a chain-``spec_k`` or
+        tree-``(spec_branch, d)`` draft shape per step — both run inside
+        the same compiled wide dispatch, so the reconfiguration is free."""
+        branch = self.spec_branch
+        heads = self.head_drafter
+        cw = self._tree_width()
+        trees: Dict[int, Optional[TreeDraft]] = {}
+        shapes: Dict[int, str] = {}
+        u_map: Dict[int, int] = {}
+        if self.paged:
+            # the chain part is already emitted — it cannot shrink, so a
+            # slot that cannot page it is evicted (deferred, not dropped);
+            # drafted rows need no pages (they only ever touch scratch)
+            for slot, req in list(self.scheduler.active.items()):
+                u = self._spec_unwritten.get(slot, 1)
+                index = req.pos + 1 - u
+                if not self._ensure_pages(slot, index, index + u):
+                    self.evict(slot)
+                    self._spec_unwritten.pop(slot, None)
+                    self.stats["oom_deferred"] += 1
+            if not self.scheduler.active:
+                return []
+
+        # ---- drafting + the per-slot reconfigurator decision
+        for slot, req in self.scheduler.active.items():
+            u = self._spec_unwritten.get(slot, 1)
+            u_map[slot] = u
+            index = req.pos + 1 - u
+            room = self.max_seq - index - u   # cache rows left for drafts
+            max_depth = min(req.remaining - 1, room)
+            nodes = min(self.spec_tree_nodes, room, cw - u)
+            tree: Optional[TreeDraft] = None
+            if draft and nodes > 0 and max_depth > 0:
+                acc = self._slot_accept.get(slot, {})
+                p_chain = acc.get("chain", _ACCEPT_PRIOR)
+                p_tree = acc.get("tree", _ACCEPT_PRIOR)
+                shape = "tree"
+                kd = min(self.spec_k, room, max_depth, cw - u)
+                if self.spec_mode == "auto":
+                    # both shapes run in the same wide dispatch: equal
+                    # step cost, so the decision is purely on expected
+                    # emitted tokens (Lemma 3's crossover), each shape
+                    # priced at its own drafter's accept estimate
+                    shape = pick_shape(p_chain, p_tree, kd, nodes, branch)
+                    other = "tree" if shape == "chain" else "chain"
+                    age = self._shape_age.setdefault(
+                        slot, {"chain": 0, "tree": 0})
+                    explore = age[other] >= _EXPLORE_EVERY
+                    if explore:
+                        shape = other
+                    age[shape] = 0
+                    age["tree" if shape == "chain" else "chain"] += 1
+                    self.stats[f"spec_shape_{shape}"] += 1
+                    rec = {"slot": slot, "accept_chain": round(p_chain, 4),
+                           "accept_tree": round(p_tree, 4), "shape": shape}
+                    if explore:
+                        rec["explore"] = True
+                    self._spec_decisions.append(rec)
+                sc = self._suffix_caches.get(slot)
+                if shape == "chain":
+                    d = (self.drafter.propose_cached(sc, req.context, kd)
+                         if sc is not None
+                         else self.drafter.propose(req.context, kd))
+                    tree = TreeDraft.chain(tuple(d)) if d else None
+                elif heads is not None and slot in self._head_preds:
+                    tree = heads.propose_tree(self._head_preds[slot],
+                                              nodes, branch, max_depth)
+                elif sc is not None:
+                    # cap the drafted depth so the budget buys hedges: a
+                    # branch-wide fan per spine level costs `branch`
+                    # nodes/level (uncapped, the rank-0 spine would eat
+                    # the whole budget and the "tree" degenerates to a
+                    # chain) — the same nodes//branch shape the Lemma-3
+                    # expected-tokens model prices
+                    tree = self.tree_drafter.propose_tree(
+                        sc, req.context, nodes, branch,
+                        min(max_depth, max(1, nodes // branch)))
+                if tree is not None and tree.n == 0:
+                    tree = None
+                shapes[slot] = shape
+            trees[slot] = tree
+
+        # ---- assemble the (B, C) block
+        b = self.max_slots
+        tokens = np.zeros((b, cw), np.int32)
+        # padding rows parent themselves: never an ancestor of a valid row
+        parents = np.broadcast_to(np.arange(cw, dtype=np.int32),
+                                  (b, cw)).copy()
+        pos_off = np.zeros((b, cw), np.int32)
+        positions = np.zeros((b,), np.int32)
+        nchain = np.zeros((b,), np.int32)   # idle lanes: 0, writes masked
+        nspec = np.zeros((b,), np.int32)
+        sps = [GREEDY] * b
+        sidx = [0] * b
+        for slot, req in self.scheduler.active.items():
+            u = u_map[slot]
+            ctx = req.context
+            tokens[slot, :u] = ctx[len(ctx) - u:]
+            parents[slot, 0] = -1
+            if u > 1:
+                parents[slot, 1:u] = np.arange(u - 1, dtype=np.int32)
+            pos_off[slot, :u] = np.arange(u, dtype=np.int32)
+            tree = trees[slot]
+            n = tree.n if tree is not None else 0
+            if n:
+                tokens[slot, u:u + n] = tree.tokens
+                parents[slot, u:u + n] = [u - 1 if p < 0 else u + p
+                                          for p in tree.parents]
+                pos_off[slot, u:u + n] = [u - 1 + d for d in tree.depths]
+            positions[slot] = req.pos + 1 - u
+            nchain[slot] = u
+            nspec[slot] = u + n
+            sps[slot] = req.sampling or GREEDY
+            sidx[slot] = len(req.generated)
+        pages_extra = ()
+        if self.paged:
+            disp = np.zeros((b, self.max_pages), np.int32)
+            for slot in self.scheduler.active:
+                disp[slot] = self.table[slot]
+            pages_extra = (self._put_lane(self._local_disp(disp)),)
+        temps, top_ks, top_ps, seeds, idxs = (
+            self._put_lane(a) for a in sampling_lanes(sps, sidx))
+        toks_d = self._put_lane(tokens)
+        pos_d = self._put_lane(positions)
+        par_d = self._put_lane(parents)
+        off_d = self._put_lane(pos_off)
+        nch_d = self._put_lane(nchain)
+        nsp_d = self._put_lane(nspec)
+        exe = self._tree_exe()
+        self._ensure_warm("tree", exe, self.params, self.state, toks_d,
+                          pos_d, *pages_extra, par_d, off_d, nch_d, nsp_d,
+                          temps, top_ks, top_ps, seeds, idxs)
+        occ = self.scheduler.occupancy
+        live = list(self.scheduler.active)
+
+        t0 = time.perf_counter()
+        nxt, head_top, lg, self.state = exe(
+            self.params, self.state, toks_d, pos_d, *pages_extra, par_d,
+            off_d, nch_d, nsp_d, temps, top_ks, top_ps, seeds, idxs)
+        nxt = np.asarray(nxt)
+        dt = time.perf_counter() - t0
+        if self.trace_logits:
+            self.logit_trace.append(np.asarray(lg)[live])
+        head_np = np.asarray(head_top) if heads is not None else None
+
+        # ---- longest accepted root-to-leaf path per slot
+        emitted: Dict[int, List[int]] = {}
+        n_emitted = 0
+        for slot in live:
+            req = self.scheduler.active[slot]
+            u = u_map[slot]
+            tree = trees[slot]
+            if tree is not None:
+                sampled = [int(nxt[slot, u - 1])] + [
+                    int(nxt[slot, u + i]) for i in range(tree.n)]
+                toks, path = accept_path(sampled, tree)
+            else:
+                toks, path = [int(nxt[slot, u - 1])], []
+            toks = self._truncate_emitted(req, toks)
+            emitted[slot] = toks
+            n_emitted += len(toks)
+            n = tree.n if tree is not None else 0
+            self.stats["spec_drafted"] += n
+            self.stats["spec_accepted"] += len(path)
+            if n:
+                self.stats["spec_lanes_drafted"] += 1
+                if path:
+                    self.stats["spec_lanes_hit"] += 1
+                # fold this step's outcome into the slot's accept EWMA:
+                # per accepted level the walk tested |children| candidates
+                # (plus the final failed level, if it had any to test)
+                kids: Dict[int, int] = {}
+                for par in tree.parents:
+                    kids[par] = kids.get(par, 0) + 1
+                levels = []
+                cur = -1
+                for node in path:
+                    levels.append(kids.get(cur, 0))
+                    cur = node
+                fail = 1 if kids.get(cur, 0) else 0
+                if fail:
+                    levels.append(kids[cur])
+                if levels:
+                    self._update_slot_accept(
+                        slot, shapes.get(slot, "tree"), len(path),
+                        len(path) + fail, sum(levels) / len(levels))
+            acc = self._slot_accept.get(slot, {})
+            rates = []
+            if "tree" in acc:
+                rates.append(expected_tokens_tree(
+                    acc["tree"], self.spec_tree_nodes, branch))
+            if "chain" in acc and self.spec_mode == "auto":
+                rates.append(expected_tokens_chain(acc["chain"],
+                                                   self.spec_k))
+            if rates:
+                # auto mode runs whichever shape prices better next step,
+                # so the scheduler sees the better of the two estimates
+                self._feed_slot_rate(slot, max(rates))
+            if head_np is not None:
+                # head candidates at the last ACCEPTED row seed the next
+                # step's tree (they predict the depths after its sample)
+                r_star = (u - 1 if len(toks) <= 1
+                          else u + path[len(toks) - 2])
+                self._head_preds[slot] = head_np[slot, r_star]
+
+        self.stats["decode_s"] += dt
+        self.stats["decode_tokens"] += n_emitted
+        self.stats["decode_steps"] += 1
+        self.stats["spec_steps"] += 1
+        self.stats["spec_tree_steps"] += 1
+        self.stats["decode_lane_steps"] += len(live)
+        self.stats["occupancy_sum"] += occ
+        for slot in live:
+            self._shard_lane_steps[self._slot_shard(slot)] += 1
+        self._step_times.append(dt)
+        self._feed_cost_model(step_s=dt,
+                              tokens_per_step=n_emitted / len(live))
+        if self.prefix is not None:
+            # this step materialized each live slot's chain part
+            for slot in live:
+                for t in tokens[slot, :u_map[slot]]:
+                    self.prefix.extend(slot, int(t))
+        reqs = {s: self.scheduler.active[s] for s in live}
+        done = self.scheduler.on_decode_tokens(emitted)
+        for slot in live:
+            # the accepted path is the next step's chain part; drafted
+            # rows only ever touched scratch, so there is NO page rollback
+            self._spec_unwritten[slot] = max(1, len(emitted[slot]))
+            if slot not in self.scheduler.active:
+                self._session_retire(reqs[slot], slot)
+                self._head_preds.pop(slot, None)
+                if self.paged and not self._row_reusable(slot):
+                    self._release_row(slot)
+        return done
+
     def step(self) -> List[Request]:
         """One engine iteration: degrade-ladder observation (when
         ``degrade`` is on), SLO preemption check, refill free slots
@@ -1620,8 +2132,14 @@ class ServeEngine:
             spec_on = self.spec_k and not (
                 self.ladder is not None
                 and self.ladder.level >= DegradeLadder.SPEC_OFF)
-            finished += (self._spec_decode_once() if spec_on
-                         else self._decode_once())
+            if self.spec_mode != "chain":
+                # tree/auto modes ALWAYS step through the tree dispatch:
+                # under SPEC_OFF it runs with zero drafted nodes, which
+                # still drains each slot's unmaterialized chain part
+                finished += self._tree_decode_once(draft=bool(spec_on))
+            else:
+                finished += (self._spec_decode_once() if spec_on
+                             else self._decode_once())
         return finished
 
     # -------------------------------------------------------------- run

@@ -146,6 +146,15 @@ class Scheduler:
         #: sequential decode; > 1 under speculative multi-token decode,
         #: where accepted drafts make one step worth several tokens)
         self.est_tokens_per_step: float = 1.0
+        #: engine-fed per-slot tokens-per-step rates (speculative decode:
+        #: each slot's own accept-rate EWMA makes its expected rate — a
+        #: repetitive slot drafting well and a cold slot rejecting
+        #: everything can differ severalfold, and pricing both at the
+        #: batch mean misranks eviction/preemption).  Missing slots fall
+        #: back to the batch-mean ``est_tokens_per_step``; a tree decode
+        #: step prices exactly like a chain step here (both are one
+        #: dispatch), only its expected emitted-token count differs.
+        self.slot_tokens_per_step: Dict[int, float] = {}
         self.slo_met_count = 0
         self.slo_missed_count = 0
         #: requests retired unserved by :meth:`shed_hopeless`
@@ -194,14 +203,17 @@ class Scheduler:
         if tokens_per_step is not None:
             self.est_tokens_per_step = max(1.0, float(tokens_per_step))
 
-    def est_decode_s(self, n_tokens: int) -> float:
+    def est_decode_s(self, n_tokens: int,
+                     tokens_per_step: Optional[float] = None) -> float:
         """Estimated wall time to decode ``n_tokens`` for one request under
         the current cost model: steps needed at the measured tokens-per-step
-        rate, each costing one batched-step time."""
+        rate (``tokens_per_step`` overrides the batch mean — callers with a
+        per-slot rate pass it), each costing one batched-step time."""
         if n_tokens <= 0:
             return 0.0
-        return math.ceil(n_tokens / self.est_tokens_per_step) \
-            * self.est_step_s
+        rate = (self.est_tokens_per_step if tokens_per_step is None
+                else max(1.0, float(tokens_per_step)))
+        return math.ceil(n_tokens / rate) * self.est_step_s
 
     def est_service_s(self, req: Request) -> float:
         """Estimated remaining service time of ``req`` if admitted now:
@@ -210,13 +222,18 @@ class Scheduler:
 
         With a ``reuse_probe`` configured, the resident prefix of the
         context is priced at zero — a prefix-cache hit shares those pages
-        by reference instead of prefilling them."""
+        by reference instead of prefilling them.  A live request whose slot
+        has an entry in :attr:`slot_tokens_per_step` prices its decode at
+        its own measured rate instead of the batch mean."""
         ctx_len = max(1, len(req.context))
         to_prefill = ctx_len
         if self.reuse_probe is not None:
             to_prefill = max(1, ctx_len - int(self.reuse_probe(req.context)))
         chunks = math.ceil(to_prefill / self.prefill_chunk)
-        return chunks * self.est_chunk_s + self.est_decode_s(req.remaining)
+        rate = (self.slot_tokens_per_step.get(req.slot)
+                if req.slot is not None else None)
+        return chunks * self.est_chunk_s \
+            + self.est_decode_s(req.remaining, rate)
 
     def deadline(self, req: Request) -> Optional[float]:
         """Absolute completion deadline of ``req`` on the scheduler clock,
@@ -353,6 +370,7 @@ class Scheduler:
         if req.done or hit_cap:
             if req.slot in self.active:
                 del self.active[req.slot]
+                self.slot_tokens_per_step.pop(req.slot, None)
             req.slot = None
             req.finish_t = self.clock()
             if req.slo_ms is not None and req.submit_t is not None:
@@ -424,6 +442,7 @@ class Scheduler:
         req = self.active.pop(slot)
         req.slot = None
         req.pos = 0
+        self.slot_tokens_per_step.pop(slot, None)
         self.pending.appendleft(req)
         return req
 
@@ -470,8 +489,9 @@ class Scheduler:
                      key=lambda r: self.slack_s(r, now), default=None)
         if urgent is None:
             return None
-        est_wait = min((self.est_decode_s(r.remaining)
-                        for r in self.active.values()), default=0.0)
+        est_wait = min((self.est_decode_s(
+                            r.remaining, self.slot_tokens_per_step.get(s))
+                        for s, r in self.active.items()), default=0.0)
         if self.slack_s(urgent, now) >= est_wait:
             return None                       # not at risk: waiting is fine
         victim = self.eviction_candidate(now)

@@ -167,6 +167,85 @@ def test_churn_conserves_every_serve_invariant(churn_engine, data):
         _assert_invariants(eng)
 
 
+@pytest.fixture(scope="module", params=CHURN_ARCHS)
+def tree_churn_engine(request):
+    """The same everything-on engine but speculating through the token-
+    tree path (``spec_mode="auto"`` so the reconfigurator flips between
+    chain- and tree-shaped steps inside the walk)."""
+    cfg = get_config(request.param).reduced(dtype=jnp.float32)
+    api = get_api(cfg)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=32,
+                      prefill_chunk=8, page_size=8, paged_kv=True,
+                      pool_pages=12, spec_k=3, spec_mode="auto",
+                      spec_tree_nodes=6, spec_branch=2, min_prefix=8,
+                      trie_capacity=3, page_dedup=True, degrade=True)
+    eng._churn_clock = [0.0]
+    eng.scheduler.clock = lambda: eng._churn_clock[0]
+    eng._churn_rng = np.random.default_rng(77)
+    eng._churn_shared = [int(t) for t in
+                        eng._churn_rng.integers(0, cfg.vocab, (12,))]
+    eng._churn_convs = ("conv-a", "conv-b")
+    return eng
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_tree_churn_conserves_every_serve_invariant(tree_churn_engine,
+                                                    data):
+    """Satellite: the same randomized walk under tree speculation.  Tree
+    verification writes every drafted-node row to the scratch page, so a
+    rejected branch is refcount-invisible by construction — the ground
+    truth the invariant checks pin after every operation."""
+    eng = tree_churn_engine
+    rng = eng._churn_rng
+    vocab = eng.cfg.vocab
+    for _ in range(data.draw(st.integers(min_value=2, max_value=5))):
+        op = data.draw(st.integers(min_value=0, max_value=4))
+        if op == 0 and len(eng.scheduler.pending) < 4:
+            # repetitive tails accept deep paths, random ones reject at
+            # the root — both tree outcomes churn inside the walk
+            if data.draw(st.integers(min_value=0, max_value=1)):
+                tail = [int(t) for t in rng.integers(0, vocab, (3,))]
+                prompt = eng._churn_shared + tail
+            else:
+                prompt = [int(t) for t in rng.integers(0, vocab, (10,))]
+            eng.submit(prompt, int(data.draw(
+                st.integers(min_value=2, max_value=6))))
+        elif op == 1 and len(eng.scheduler.pending) < 4:
+            conv = eng._churn_convs[data.draw(
+                st.integers(min_value=0, max_value=1))]
+            sess = eng.sessions.get(conv)
+            if sess is not None and len(sess.history) > 20:
+                eng.end_session(conv)
+            eng.submit_turn(conv, [int(t) for t in
+                                   rng.integers(0, vocab, (4,))], 2)
+        elif op == 2:
+            eng._churn_clock[0] += 0.05
+            eng.step()
+        elif op == 3 and eng.scheduler.active:
+            slots = sorted(eng.scheduler.active)
+            eng.evict(slots[data.draw(st.integers(
+                min_value=0, max_value=len(slots) - 1))])
+        else:
+            eng._churn_clock[0] += 0.01
+            eng.run(max_steps=8)
+        _assert_invariants(eng)
+
+
+def test_tree_churn_walk_exercised_the_tree_paths(tree_churn_engine):
+    """Meta-check on the shared tree engine: tree steps actually ran,
+    the reconfigurator actually decided, and NO page was ever rolled
+    back — tree rejection lands on scratch, so the chain path's rollback
+    counter must stay untouched."""
+    eng = tree_churn_engine
+    assert eng.stats["admissions"] > 0
+    assert eng.stats["spec_tree_steps"] > 0
+    assert eng.stats["spec_shape_chain"] + eng.stats["spec_shape_tree"] > 0
+    assert eng.stats["spec_pages_rolled_back"] == 0
+    _assert_invariants(eng)
+
+
 def test_churn_walk_exercised_the_interesting_paths(churn_engine):
     """Meta-check (runs after the walks on the shared engine): the random
     walk actually drove the machinery it claims to test — admissions,

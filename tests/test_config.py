@@ -41,6 +41,8 @@ NON_DEFAULT = {
     "max_slots": 2, "max_seq": 64, "prefill_chunk": 16, "page_size": 16,
     "prefix_cache": False, "min_prefix": 4, "paged_kv": False,
     "pool_pages": 7, "trie_capacity": 5, "spec_k": 3, "spec_ngram": 2,
+    "spec_mode": "tree", "spec_tree_nodes": 6, "spec_branch": 2,
+    "spec_drafter": "heads",
     "kv_dtype": "int8", "page_dedup": True, "degrade": True,
     "mesh_shards": 2,
 }
@@ -53,6 +55,8 @@ def test_defaults_are_engine_defaults():
     assert c.pool_pages is None and c.trie_capacity is None
     assert c.prefix_cache is True and c.min_prefix == 8
     assert (c.spec_k, c.spec_ngram, c.kv_dtype) == (0, 3, "fp32")
+    assert (c.spec_mode, c.spec_tree_nodes) == ("chain", 12)
+    assert (c.spec_branch, c.spec_drafter) == (3, "ngram")
     assert c.validate() is c
 
 
@@ -77,6 +81,10 @@ VALIDATE_ERRORS = [
     (dict(prefill_chunk=0), "prefill_chunk must be >= 1"),
     (dict(spec_k=-1), "spec_k must be >= 0"),
     (dict(spec_ngram=0), "spec_ngram must be >= 1"),
+    (dict(spec_mode="forest"), "spec_mode must be one of"),
+    (dict(spec_tree_nodes=0), "spec_tree_nodes must be >= 1"),
+    (dict(spec_branch=0), "spec_branch must be >= 1"),
+    (dict(spec_drafter="oracle"), "spec_drafter must be one of"),
     (dict(pool_pages=0), "pool_pages must be >= 1"),
     (dict(trie_capacity=0), "trie_capacity must be >= 1"),
     (dict(kv_dtype="int2"), "kv_dtype must be one of"),
@@ -133,9 +141,13 @@ def test_resolve_ssm_auto_fallbacks():
     prefix all silently gate off (same policy the engine always had)."""
     cfg = _cfg("falcon-mamba-7b")
     r = EngineConfig(max_seq=64, spec_k=4, kv_dtype="int8",
-                     prefix_cache=True).resolve(cfg)
+                     prefix_cache=True, spec_mode="auto").resolve(cfg)
     assert r.spec_k == 0 and r.paged_kv is False
     assert r.kv_dtype == "fp32" and r.prefix_cache is False
+    # tree/auto need verify_tree over positional KV: gates back to chain
+    assert r.spec_mode == "chain"
+    r2 = EngineConfig(max_seq=64, spec_k=4, spec_mode="tree").resolve(cfg)
+    assert r2.spec_mode == "chain" and r2.spec_k == 0
 
 
 def test_resolve_paged_true_errors():
@@ -212,7 +224,9 @@ def test_cli_reaches_every_field():
     argv = ["--slots", "2", "--max-seq", "64", "--prefill-chunk", "16",
             "--page", "16", "--no-prefix-cache", "--min-prefix", "4",
             "--no-paged-kv", "--pool-pages", "7", "--trie-capacity", "5",
-            "--spec-k", "3", "--spec-ngram", "2", "--kv-dtype", "fp32",
+            "--spec-k", "3", "--spec-ngram", "2", "--spec-mode", "tree",
+            "--spec-tree-nodes", "6", "--spec-branch", "2",
+            "--spec-drafter", "heads", "--kv-dtype", "fp32",
             "--page-dedup", "--degrade", "--mesh-shards", "2"]
     got = config_from_args(_parse(argv))
     want = dict(NON_DEFAULT, paged_kv=False, kv_dtype="fp32")

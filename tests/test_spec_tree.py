@@ -1,0 +1,412 @@
+"""Tree-structured speculative decode tests: the flattened TreeDraft
+contract, longest-accepted-path acceptance (chain trees reduce to
+accept_tokens exactly), the n-gram fan-out and medusa draft-head tree
+topologies, the incremental per-slot SuffixCache (bit-equal to the
+uncached reference, invalidated on rollback), the Lemma-3 closed forms
+and the chain-vs-tree crossover property, draft-head fitting, and
+engine-level bit-exactness of tree / auto modes vs sequential decode
+for GQA + MLA under greedy AND stochastic sampling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.registry import get_config
+from repro.models import lm
+from repro.models.common import init_params
+from repro.models.registry import get_api
+from repro.serve import (DraftHeadDrafter, NGramTreeDrafter,
+                         SamplingParams, ServeEngine, SuffixCache,
+                         TreeDraft, accept_path, accept_tokens,
+                         expected_tokens_chain, expected_tokens_tree,
+                         per_candidate_accept, pick_shape, propose_draft,
+                         tree_depth)
+
+jax.config.update("jax_enable_x64", False)
+
+SPEC_ARCHS = ["llama3.2-3b", "minicpm3-4b"]     # GQA + MLA families
+
+
+def _cfg(arch_id="llama3.2-3b", **over):
+    return get_config(arch_id).reduced(dtype=jnp.float32, **over)
+
+
+def _params(cfg, seed=0):
+    api = get_api(cfg)
+    return init_params(api.param_specs(cfg), jax.random.key(seed))
+
+
+# ---------------------------------------------------------------------------
+# TreeDraft: the flattened-topology contract
+# ---------------------------------------------------------------------------
+
+def test_tree_draft_validation():
+    with pytest.raises(ValueError, match="equally long"):
+        TreeDraft((1, 2), (-1,), (1,))
+    with pytest.raises(ValueError, match="not topologically earlier"):
+        TreeDraft((1, 2), (-1, 2), (1, 2))      # parent after child
+    with pytest.raises(ValueError, match="depth"):
+        TreeDraft((1, 2), (-1, 0), (1, 3))      # child of depth-1 node
+    with pytest.raises(ValueError, match="depth"):
+        TreeDraft((1,), (-1,), (2,))            # anchor child must be 1
+
+
+def test_tree_draft_chain_and_properties():
+    t = TreeDraft.chain([5, 6, 7])
+    assert t.tokens == (5, 6, 7)
+    assert t.parents == (-1, 0, 1)
+    assert t.depths == (1, 2, 3)
+    assert t.n == 3 and t.depth == 3
+    assert t.path_tokens([0, 2]) == [5, 7]
+    empty = TreeDraft((), (), ())
+    assert empty.n == 0 and empty.depth == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=9), max_size=5),
+       st.lists(st.integers(min_value=0, max_value=9), min_size=1,
+                max_size=6))
+def test_accept_path_reduces_to_accept_tokens_on_chains(draft, sampled_tail):
+    """For a chain-shaped tree, longest-accepted-path acceptance IS the
+    longest-matching-prefix rule — same emitted tokens, same accept
+    count, for every draft/sample combination."""
+    tree = TreeDraft.chain(draft)
+    sampled = (sampled_tail * (len(draft) + 1))[:len(draft) + 1]
+    emitted, path = accept_path(sampled, tree)
+    ref_emitted, ref_a = accept_tokens(sampled, draft)
+    assert emitted == ref_emitted
+    assert len(path) == ref_a
+    assert path == list(range(ref_a))           # chain nodes in order
+    assert len(emitted) == len(path) + 1
+
+
+def test_accept_path_follows_matching_branch():
+    # anchor fans to tokens 3 and 5; the 5-branch carries a child 7
+    tree = TreeDraft((3, 5, 7), (-1, -1, 1), (1, 1, 2))
+    # sampled: anchor row says 5 -> hop to node 1; node 1's row says 7 ->
+    # hop to node 2; node 2's row is the bonus draw
+    emitted, path = accept_path([5, 99, 7, 4], tree)
+    assert emitted == [5, 7, 4] and path == [1, 2]
+    # anchor row says 3 -> node 0 (first matching child), whose row ends it
+    emitted, path = accept_path([3, 8, 7, 4], tree)
+    assert emitted == [3, 8] and path == [0]
+    # no child matches: classic single-token step
+    emitted, path = accept_path([6, 8, 7, 4], tree)
+    assert emitted == [6] and path == []
+
+
+# ---------------------------------------------------------------------------
+# SuffixCache: incremental tables == uncached reference, rollback-safe
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_suffix_cache_matches_propose_draft_under_churn(data):
+    """A randomized extend / rewind / diverge walk: after every sync the
+    cached chain proposal equals the uncached reference on the same
+    history, and rewinds bump ``invalidations`` (the rollback-
+    invalidation contract behind per-slot caches)."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+    cache = SuffixCache()
+    hist = [int(t) for t in rng.integers(0, 6, 12)]
+    cache.sync(hist)
+    for _ in range(data.draw(st.integers(min_value=2, max_value=6))):
+        op = data.draw(st.integers(min_value=0, max_value=2))
+        before = cache.invalidations
+        if op == 0:                             # extend (the common step)
+            hist += [int(t) for t in rng.integers(0, 6, 3)]
+        elif op == 1:                           # rollback rewind
+            hist = hist[:max(len(hist) - 2, 1)]
+        else:                                   # slot reuse: new request
+            hist = [int(t) for t in rng.integers(0, 6, 10)]
+        rewound = len(hist) < len(cache.tokens) \
+            or hist[:len(cache.tokens)] != cache.tokens
+        cache.sync(hist)
+        assert cache.tokens == hist
+        assert cache.invalidations == before + (1 if rewound else 0)
+        for k in (1, 4):
+            assert cache.propose(k) == propose_draft(hist, k)
+
+
+def test_suffix_cache_counts_incremental_work():
+    cache = SuffixCache()
+    cache.sync([1, 2, 3])
+    cache.sync([1, 2, 3, 4, 5])
+    assert cache.indexed_tokens == 5            # 3 + the 2-token tail
+    assert cache.invalidations == 0
+    cache.sync([1, 2, 9])                       # diverged mid-history
+    assert cache.invalidations == 1
+    assert cache.tokens == [1, 2, 9]
+
+
+def test_suffix_cache_topk_rank0_is_lookup():
+    # ... 1 2 (3) ... 1 2 (4) ... 1 2 -> candidates {4 (recent), 3}
+    hist = [1, 2, 3, 0, 1, 2, 4, 0, 1, 2]
+    cache = SuffixCache()
+    cache.sync(hist)
+    top = cache.topk_next([], 2)
+    assert top[0] == cache.lookup([], 1)[0]
+    assert top == [4, 3]
+
+
+# ---------------------------------------------------------------------------
+# drafter topologies
+# ---------------------------------------------------------------------------
+
+def test_ngram_tree_contains_chain_and_hedges():
+    """The drafted tree's rank-0 spine IS the chain draft; hedges are
+    ranked siblings added breadth-first at the spine levels."""
+    d = NGramTreeDrafter()
+    cache = d.make_cache()
+    # ... 1 2 (3 9) ... 1 2 (4 8) ... 1 2 -> chain [4, 8, ...], hedge 3
+    hist = [1, 2, 3, 9, 0, 1, 2, 4, 8, 0, 1, 2]
+    tree = d.propose_tree(cache, hist, nodes=6, branch=2, max_depth=4)
+    chain = propose_draft(hist, 4)
+    spine = []
+    cur = -1
+    for tok in chain:                           # walk rank-0 children
+        nxt = next(i for i in range(tree.n)
+                   if tree.parents[i] == cur and tree.tokens[i] == tok)
+        spine.append(nxt)
+        cur = nxt
+    assert tree.path_tokens(spine) == chain
+    # a ranked sibling hedge exists at the root level
+    roots = [tree.tokens[i] for i in range(tree.n) if tree.parents[i] == -1]
+    assert roots[0] == chain[0] and 3 in roots
+    assert tree.n <= 6 and tree.depth <= 4
+
+
+def test_ngram_tree_respects_budget_and_degenerate_inputs():
+    d = NGramTreeDrafter()
+    assert d.propose_tree(d.make_cache(), [1, 2, 3], 0, 2, 2).n == 0
+    assert d.propose_tree(d.make_cache(), [], 4, 2, 2).n == 0
+    tree = d.propose_tree(d.make_cache(), [7, 7, 7, 7, 7], 3, 2, 8)
+    assert tree.n <= 3 and tree.depth <= 8
+    with pytest.raises(ValueError):
+        NGramTreeDrafter(ngram_max=0)
+
+
+def test_draft_head_tree_is_sparse_medusa():
+    """Level ``d`` holds head ``d``'s top-``branch`` candidates chained
+    under the previous level's rank-0 node; duplicates within a level
+    collapse; no candidates -> empty tree."""
+    d = DraftHeadDrafter(n_heads=3)
+    head_top = [[10, 11, 12], [20, 20, 21], [30, 31, 32]]
+    tree = d.propose_tree(head_top, nodes=8, branch=2, max_depth=3)
+    # level 1: 10 (spine) + 11; level 2 under node(10): head 1's top-2 is
+    # [20, 20] -> the duplicate collapses; level 3 under node(20): 30 + 31
+    assert tree.tokens == (10, 11, 20, 30, 31)
+    assert tree.parents == (-1, -1, 0, 2, 2)
+    assert tree.depths == (1, 1, 2, 3, 3)
+    assert d.propose_tree(None, 8, 2, 3).n == 0
+    assert d.propose_tree([], 8, 2, 3).n == 0
+    assert d.propose_tree(head_top, 8, 2, 0).n == 0
+    with pytest.raises(ValueError):
+        DraftHeadDrafter(n_heads=0)
+
+
+# ---------------------------------------------------------------------------
+# Lemma-3 closed forms + the reconfigurator crossover property
+# ---------------------------------------------------------------------------
+
+def test_expected_tokens_closed_form_limits():
+    assert expected_tokens_chain(1.0, 5) == pytest.approx(6.0)
+    assert expected_tokens_chain(0.0, 5) == pytest.approx(1.0)
+    assert expected_tokens_chain(0.5, 2) == pytest.approx(1 + .5 + .25)
+    # branch=1 degenerates the tree to the chain form exactly
+    for p in (0.0, 0.3, 0.9, 1.0):
+        assert expected_tokens_tree(p, 5, 1) == \
+            pytest.approx(expected_tokens_chain(p, 5))
+    # hedging: q = 1-(1-p)^b over nodes//b levels
+    assert expected_tokens_tree(0.5, 4, 2) == \
+        pytest.approx(1 + 0.75 + 0.75 ** 2)
+    assert tree_depth(0, 2) == 0
+    assert tree_depth(6, 1) == 6
+    assert tree_depth(6, 2) == 2                # 2 + 4 nodes fill depth 2
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(min_value=2, max_value=16),
+       st.integers(min_value=2, max_value=4))
+def test_pick_shape_lemma3_crossover(budget, branch):
+    """Satellite property: at equal node budget (k == nodes) the
+    reconfigurator picks the deep chain as accept -> 1 and the hedged
+    tree at low accept — and the decision is monotone: a single
+    crossover point, never flapping back."""
+    assert pick_shape(0.99, 0.99, budget, budget, branch) == "chain"
+    assert pick_shape(1.0, 1.0, budget, budget, branch) == "chain"
+    assert pick_shape(0.05, 0.05, budget, budget, branch) == "tree"
+    # monotone in p: once the chain wins it keeps winning above
+    shapes = [pick_shape(q, q, budget, budget, branch)
+              for q in np.linspace(0.01, 0.99, 25)]
+    flips = sum(a != b for a, b in zip(shapes, shapes[1:]))
+    assert flips == 1 and shapes[0] == "tree" and shapes[-1] == "chain"
+    # per-shape pricing: a tree-only accept streak must not be masked by
+    # a failing chain drafter (and vice versa)
+    assert pick_shape(0.05, 0.95, budget, budget, branch) == "tree"
+    assert pick_shape(0.95, 0.05, budget, budget, branch) == "chain"
+
+
+def test_pick_shape_prices_dispatch_cost():
+    # equal expected tokens, but the tree dispatch costs 2x: chain wins
+    assert pick_shape(0.5, 0.5, 4, 4, 1, chain_cost_s=1.0,
+                      tree_cost_s=2.0) == "chain"
+    assert pick_shape(0.5, 0.5, 4, 4, 1, chain_cost_s=2.0,
+                      tree_cost_s=1.0) == "tree"
+
+
+def test_per_candidate_accept_inverts_level_rate():
+    for p in (0.1, 0.4, 0.8):
+        for b in (1.0, 2.0, 3.0):
+            q = 1 - (1 - p) ** b
+            got = per_candidate_accept(int(q * 1e6), int(1e6),
+                                       mean_branch=b)
+            assert got == pytest.approx(p, abs=1e-3)
+    assert per_candidate_accept(0, 0) == 0.0
+    assert per_candidate_accept(5, 5, 2.0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# draft-head fitting (distillation on the model's own streams)
+# ---------------------------------------------------------------------------
+
+def test_fit_draft_heads_learns_offsets():
+    """Heads trained on a trajectory beat the zero-init warm start (the
+    plain next-token head) at predicting their own offsets on that
+    trajectory; shapes/dtypes install under params["draft_heads"]."""
+    cfg = _cfg()
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    streams = [rng.integers(0, cfg.vocab, (40,)).tolist()
+               for _ in range(2)]
+    n_heads = 2
+
+    def top1_hits(heads):
+        hits = tot = 0
+        for s in streams:
+            x = lm.hidden_states(params, cfg,
+                                 jnp.asarray(s, jnp.int32)[None])[0]
+            t = jax.nn.silu(jnp.einsum("nd,hde->hne", x, heads["w1"]))
+            xh = x[None] + jnp.einsum("hne,hed->hnd", t, heads["w2"])
+            pred = np.asarray(jnp.argmax(xh @ params["lm_head"], axis=-1))
+            for h in range(n_heads):
+                for i in range(len(s) - h - 2):
+                    hits += int(pred[h, i] == s[i + h + 2])
+                    tot += 1
+        return hits / tot
+
+    fitted = lm.fit_draft_heads(cfg, params, streams, n_heads=n_heads,
+                                head_dim=32, steps=120, seed=3)
+    assert fitted["w1"].shape == (n_heads, cfg.d_model, 32)
+    assert fitted["w2"].shape == (n_heads, 32, cfg.d_model)
+    cold = {"w1": fitted["w1"] * 0, "w2": fitted["w2"] * 0}
+    assert top1_hits(fitted) > top1_hits(cold)
+    with pytest.raises(ValueError, match="non-empty"):
+        lm.fit_draft_heads(cfg, params, [[1, 2]], n_heads=4)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence: tree/auto == sequential, greedy + stochastic
+# ---------------------------------------------------------------------------
+
+def _serve(cfg, params, prompts, gens, sampling=None, **kw):
+    eng = ServeEngine(cfg, params, **kw)
+    reqs = [eng.submit(list(p), g, sampling=sampling)
+            for p, g in zip(prompts, gens)]
+    eng.run()
+    return eng, [r.generated for r in reqs]
+
+
+@pytest.mark.parametrize("arch_id", SPEC_ARCHS)
+def test_tree_tokens_bitexact_vs_sequential(arch_id):
+    """Greedy tokens from tree and auto modes equal the sequential
+    engine's for GQA and MLA, under continuous batching with slot refill
+    (acceptance criterion), with tree steps actually taken and NO pages
+    rolled back (rejected branches live on scratch, not in the table)."""
+    cfg = _cfg(arch_id)
+    params = _params(cfg)
+    rng = np.random.default_rng(41)
+    pat = rng.integers(0, cfg.vocab, (5,)).tolist()
+    prompts = [pat * 4, rng.integers(0, cfg.vocab, (13,)).tolist(),
+               pat * 3 + [1]]
+    gens = [10, 8, 12]
+    kw = dict(max_slots=2, max_seq=48, prefill_chunk=8)
+    _, seq_toks = _serve(cfg, params, prompts, gens, spec_k=0, **kw)
+    for mode in ("tree", "auto"):
+        eng, toks = _serve(cfg, params, prompts, gens, spec_k=3,
+                           spec_mode=mode, spec_tree_nodes=6,
+                           spec_branch=2, **kw)
+        assert toks == seq_toks, mode
+        st = eng.stats_summary()
+        assert st["spec_tree_steps"] > 0
+        assert st["spec_pages_rolled_back"] == 0
+        if mode == "auto":
+            assert st["spec_shape_chain"] + st["spec_shape_tree"] > 0
+            trace = st["spec_decision_trace"]
+            assert trace and all(
+                {"slot", "accept_chain", "accept_tree", "shape"}
+                <= set(rec) for rec in trace)
+
+
+def test_tree_stochastic_streams_bitexact_vs_sequential():
+    """Sampled lanes through tree verification emit exactly the draws
+    sequential decode would make at each sample index (the per-depth
+    fold_in contract)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, cfg.vocab, (n,)).tolist()
+               for n in (14, 9, 11)]
+    sps = [SamplingParams(temperature=0.8, top_k=20, seed=7),
+           SamplingParams(temperature=1.1, top_p=0.9, seed=3),
+           SamplingParams()]
+    outs = {}
+    for mode, sk in (("chain", 0), ("tree", 4), ("auto", 4)):
+        eng = ServeEngine(cfg, params, max_slots=2, max_seq=48,
+                          prefill_chunk=8, spec_k=sk, spec_mode=mode,
+                          spec_tree_nodes=6, spec_branch=2)
+        reqs = [eng.submit(p, 12, sampling=s)
+                for p, s in zip(prompts, sps)]
+        eng.run()
+        outs[mode] = [r.generated for r in reqs]
+    assert outs["tree"] == outs["chain"]
+    assert outs["auto"] == outs["chain"]
+
+
+def test_tree_heads_drafter_bitexact_and_feeds_scheduler():
+    """The heads drafter (fresh random heads — wrong predictions are
+    fine, determinism is the contract) stays bit-exact, and the accept
+    EWMAs feed est_tokens_per_step."""
+    cfg = _cfg()
+    params = _params(cfg)
+    heads = init_params(lm.draft_head_specs(cfg, n_heads=3),
+                        jax.random.key(9))
+    params2 = dict(params)
+    params2["draft_heads"] = heads
+    rng = np.random.default_rng(43)
+    pat = rng.integers(0, cfg.vocab, (4,)).tolist()
+    prompts = [pat * 5, rng.integers(0, cfg.vocab, (10,)).tolist()]
+    _, seq_toks = _serve(cfg, params, prompts, [12, 10], spec_k=0,
+                         max_slots=2, max_seq=48, prefill_chunk=8)
+    eng, toks = _serve(cfg, params2, prompts, [12, 10], spec_k=3,
+                       spec_mode="tree", spec_drafter="heads",
+                       spec_tree_nodes=6, spec_branch=2, max_slots=2,
+                       max_seq=48, prefill_chunk=8)
+    assert toks == seq_toks
+    st = eng.stats_summary()
+    assert st["spec_tree_steps"] > 0
+    assert st["spec_accept_p50"] >= 0.0
+    assert eng.scheduler.est_tokens_per_step >= 1.0
+
+
+def test_tree_mode_gates_off_for_ssm():
+    cfg = _cfg("falcon-mamba-7b")
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=32,
+                      prefill_chunk=8, spec_k=4, spec_mode="tree")
+    assert eng.spec_mode == "chain" and eng.spec_k == 0
+    r = eng.submit(list(range(8)), 4)
+    eng.run()
+    assert len(r.generated) == 4
